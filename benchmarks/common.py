@@ -1,0 +1,72 @@
+"""Shared benchmark substrate.
+
+Paper-claim validation runs at tiny scale (CPU-only box; repro tier 4):
+one FP teacher per model family is trained on the synthetic corpus and
+reused across tables. Full-scale numbers that are *exact* (storage
+formulas, roofline-modeled throughput) are computed at the published
+dims.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+
+from repro.data import SyntheticCorpus, calib_batches, train_iterator
+from repro.data.synthetic import eval_perplexity
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.train import TrainConfig, Trainer
+
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+# d_model 256 so the three BPW targets (1.0 / 0.8 / 0.55) resolve to
+# distinct ranks (96 / 64 / 32) instead of all clamping to r_min.
+TINY = ModelConfig(name="bench-tiny", family="dense", n_layers=2,
+                   d_model=256, n_heads=4, n_kv_heads=2, d_ff=512,
+                   vocab_size=256, loss_chunk=0, remat=False)
+
+CALIB_SEQ = 64
+
+
+@functools.lru_cache(maxsize=4)
+def teacher(steps: int = 300, cfg: ModelConfig = TINY):
+    """Train (once per process) a small FP teacher to sub-uniform PPL."""
+    tcfg = TrainConfig(lr=3e-3, warmup=20, total_steps=steps)
+    tr = Trainer(cfg, tcfg, train_iterator(cfg, batch=16, seq=CALIB_SEQ),
+                 log_every=10**9)
+    tr.restore_or_init()
+    t0 = time.time()
+    tr.run(steps)
+    params = tr.state[0]
+    return cfg, params, time.time() - t0
+
+
+def calib(cfg, n_samples=16, seed=7):
+    return calib_batches(cfg, n_samples, CALIB_SEQ, batch=4, seed=seed,
+                         corpus=SyntheticCorpus(cfg.vocab_size))
+
+
+def eval_ppl(cfg, params, seed=9999):
+    evalb = calib_batches(cfg, 12, CALIB_SEQ, batch=4, seed=seed,
+                          corpus=SyntheticCorpus(cfg.vocab_size))
+    return eval_perplexity(T.loss_fn, params, cfg, evalb)
+
+
+def emit(table: str, rows: List[Dict], keys=None):
+    """Print CSV + persist JSON."""
+    if not rows:
+        return
+    keys = keys or list(rows[0].keys())
+    print(f"\n== {table} ==")
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(f"{r.get(k, '')}" if not isinstance(r.get(k), float)
+                       else f"{r[k]:.4g}" for k in keys))
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{table}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)

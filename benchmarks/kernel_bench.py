@@ -1,0 +1,46 @@
+"""Paper Figs. 4/5/7 + App. E: decode throughput / memory. No TPU on
+this box, so wall-clock MFU is out of reach — we report the
+bandwidth-roofline model the figures measure in practice (batch-1 decode
+is weight-streaming-bound): tokens/s <= HBM_bw / bytes-moved-per-token,
+for BF16 vs NanoQuant-packed weights, per assigned arch. The Pallas
+kernel itself is validated bit-exactly in tests/test_kernels.py."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro import configs
+from repro.configs.shapes import param_specs
+from repro.quant.surgery import packed_model_bytes, quantizable_paths
+from repro.roofline.analysis import V5E
+
+
+def _weight_stream_bytes(cfg, packed: bool):
+    """Bytes of weights touched per decoded token (whole model, batch 1)."""
+    rep = packed_model_bytes(cfg, 1.0)
+    if packed:
+        return rep["quantized_gb"] * 1e9
+    return rep["fp16_total_gb"] * 1e9
+
+
+def run():
+    rows = []
+    for arch in configs.list_archs():
+        cfg = configs.get_config(arch)
+        b_fp = _weight_stream_bytes(cfg, packed=False)
+        b_q = _weight_stream_bytes(cfg, packed=True)
+        tps_fp = V5E.hbm_bw / b_fp
+        tps_q = V5E.hbm_bw / b_q
+        rows.append({
+            "arch": arch,
+            "fp16_gb": b_fp / 1e9,
+            "packed_gb": b_q / 1e9,
+            "decode_tok_s_fp16(1chip)": tps_fp,
+            "decode_tok_s_packed(1chip)": tps_q,
+            "speedup_x": tps_q / tps_fp,
+            "fits_8gb": b_q <= 8e9,
+        })
+    emit("kernel_bench", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

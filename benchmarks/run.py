@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only tableX,...]
+
+Prints CSV per table and writes JSON under experiments/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (fig9_admm, kernel_bench, table2_perplexity,
+                        table4_efficiency, table5_init, table6_components,
+                        table9_databudget, table13_storage)
+
+TABLES = {
+    "table2": table2_perplexity,
+    "table4": table4_efficiency,
+    "table5": table5_init,
+    "table6": table6_components,
+    "table9": table9_databudget,
+    "table13": table13_storage,
+    "fig9": fig9_admm,
+    "kernels": kernel_bench,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of " + ",".join(TABLES))
+    args = ap.parse_args()
+    names = [n for n in args.only.split(",") if n] or list(TABLES)
+    failures = []
+    for name in names:
+        t0 = time.time()
+        try:
+            TABLES[name].run()
+            print(f"[bench] {name} done in {time.time()-t0:.1f}s",
+                  flush=True)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print("FAILED:", failures)
+        return 1
+    print("\nall benchmarks complete")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

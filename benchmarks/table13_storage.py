@@ -1,0 +1,56 @@
+"""Paper Tables 13–14 (App. F): exact storage / BPW bounds — reproduced
+for the paper's Llama-2-7B and extended to all 10 assigned archs."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro import configs
+from repro.core import bpw
+from repro.quant.surgery import packed_model_bytes, quantizable_paths
+from repro.configs.shapes import param_specs
+
+_METHODS = ("nanoquant", "billm", "stbllm_4:8", "stbllm_6:8", "stbllm_8:8",
+            "arbllm_rc", "hbllm_row", "hbllm_col")
+
+
+def _l27_shapes():
+    per = [(4096, 4096)] * 4 + [(11008, 4096)] * 2 + [(4096, 11008)]
+    return per * 32
+
+
+def run():
+    rows = []
+    # --- paper row: Llama-2-7B --------------------------------------------
+    shapes = _l27_shapes()
+    row = {"model": "llama-2-7b (paper)"}
+    for m in _METHODS:
+        kw = {"bpw": 1.0} if m == "nanoquant" else {}
+        row[m] = bpw.model_bpw(shapes, m, **kw)
+    rows.append(row)
+
+    # --- assigned archs ------------------------------------------------------
+    for arch in configs.list_archs():
+        cfg = configs.get_config(arch)
+        qp = quantizable_paths(param_specs(cfg), cfg)
+        shapes = []
+        for _, v in qp:
+            w = v["w"]
+            *lead, d_in, d_out = w.shape
+            n_mat = 1
+            for s in lead:
+                n_mat *= s
+            shapes += [(d_out, d_in)] * n_mat
+        row = {"model": arch}
+        for m in _METHODS:
+            kw = {"bpw": 1.0} if m == "nanoquant" else {}
+            row[m] = bpw.model_bpw(shapes, m, **kw)
+        rep = packed_model_bytes(cfg, 1.0)
+        row["nq_model_gb"] = rep["quantized_gb"]
+        row["fp16_gb"] = rep["fp16_total_gb"]
+        row["compression_x"] = rep["compression_x"]
+        rows.append(row)
+    emit("table13_storage", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Paper Table 2 (+ Fig. 1): WikiText-2 perplexity of 1-bit / sub-1-bit
+PTQ — tiny-scale reproduction on the synthetic corpus.
+
+Expected orderings (validated): FP < NanoQuant@1.0 < @0.8 < @0.55 <<
+XNOR/RTN (catastrophic, the paper's e4–e22 rows)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import calib, emit, eval_ppl, teacher
+from repro.core.baselines import rtn_binarize, xnor_binarize
+from repro.core.pipeline import QuantConfig, nanoquant_quantize
+
+_Q = dict(lr_pre=3e-4, lr_post=1e-4, lr_glob=1e-4, admm_iters=20, t_pre=8, t_post=12, t_glob=8, rank_align=32,
+          min_dim=32)
+
+
+def _binarize_all(params, fn):
+    def walk(d):
+        out = {}
+        for k, v in d.items():
+            if isinstance(v, dict):
+                if "w" in v and not isinstance(v["w"], dict):
+                    out[k] = dict(v, w=fn(v["w"]).astype(v["w"].dtype))
+                else:
+                    out[k] = walk(v)
+            else:
+                out[k] = v
+        return out
+    new = dict(params)
+    new["layers"] = walk(params["layers"])
+    return new
+
+
+def run():
+    cfg, params, _ = teacher()
+    cal = calib(cfg)
+    rows = [{"method": "FP16", "w_bits": 16.0, "ppl": eval_ppl(cfg, params)}]
+    rows.append({"method": "RTN", "w_bits": 1.0,
+                 "ppl": eval_ppl(cfg, _binarize_all(params, rtn_binarize))})
+    rows.append({"method": "XNOR", "w_bits": 1.0,
+                 "ppl": eval_ppl(cfg, _binarize_all(params, xnor_binarize))})
+    for bpw in (1.0, 0.8, 0.55):
+        t0 = time.time()
+        qp, _ = nanoquant_quantize(params, cfg, cal,
+                                   QuantConfig(target_bpw=bpw, **_Q),
+                                   verbose=False)
+        rows.append({"method": f"NanoQuant@{bpw}", "w_bits": bpw,
+                     "ppl": eval_ppl(cfg, qp),
+                     "wall_s": time.time() - t0})
+    emit("table2_perplexity", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

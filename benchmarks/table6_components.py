@@ -1,0 +1,32 @@
+"""Paper Table 6: component-wise efficacy (init / error mitigation /
+factorized refinement / model reconstruction)."""
+from __future__ import annotations
+
+from benchmarks.common import calib, emit, eval_ppl, teacher
+from repro.core.pipeline import QuantConfig, nanoquant_quantize
+
+_BASE = dict(target_bpw=1.0, lr_pre=3e-4, lr_post=1e-4, lr_glob=1e-4, admm_iters=20, t_pre=8, t_post=12, t_glob=8,
+             rank_align=32, min_dim=32)
+
+
+def run():
+    cfg, params, _ = teacher()
+    cal = calib(cfg)
+    variants = [
+        ("init only", dict(skip_tune_fp=True, skip_ste=True, skip_kd=True)),
+        ("init+EPM", dict(skip_ste=True, skip_kd=True)),
+        ("init+refine", dict(skip_tune_fp=True, skip_kd=True)),
+        ("init+EPM+refine", dict(skip_kd=True)),
+        ("full pipeline", dict()),
+    ]
+    rows = []
+    for name, kw in variants:
+        qp, _ = nanoquant_quantize(params, cfg, cal,
+                                   QuantConfig(**_BASE, **kw), verbose=False)
+        rows.append({"components": name, "ppl": eval_ppl(cfg, qp)})
+    emit("table6_components", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Fault-tolerant distributed-style training: checkpoint/restart with a
+simulated crash, deterministic data skip, and binary low-rank gradient
+compression with error feedback (the paper's factorization reused as a
+DP-collective compressor).
+
+    PYTHONPATH=src python examples/fault_tolerant_train.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.data import train_iterator
+from repro.launch.supervisor import run_with_restarts
+from repro.train import TrainConfig, Trainer
+
+
+def main():
+    cfg = configs.get_smoke("mamba2-370m")
+    tcfg = TrainConfig(lr=2e-3, warmup=10, total_steps=120,
+                       compress_grads=True, compress_rank=2)
+    ckpt_dir = tempfile.mkdtemp(prefix="nq_ft_")
+    print(f"checkpoints -> {ckpt_dir}")
+
+    target_steps = 90
+    crash_at = {0: 35, 1: 70}          # attempt -> step to "crash" at
+
+    def attempt(n):
+        mgr = CheckpointManager(ckpt_dir, keep=2)
+        start = mgr.latest_step() or 0
+        it = train_iterator(cfg, batch=8, seq=48, start_step=start)
+        tr = Trainer(cfg, tcfg, it, mgr, ckpt_every=10, log_every=10)
+        tr.restore_or_init()
+        budget = target_steps - tr.step
+        if n in crash_at:
+            budget = min(budget, crash_at[n] - tr.step)
+        tr.run(max(budget, 0))
+        if n in crash_at and tr.step < target_steps:
+            raise RuntimeError(f"simulated node failure at step {tr.step}")
+        print(f"[attempt {n}] reached step {tr.step}")
+
+    restarts = run_with_restarts(attempt, max_restarts=4)
+    print(f"\ntraining survived {restarts} simulated failures; "
+          f"resume was deterministic (same data stream, same schedule).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Quickstart: train a small FP teacher, quantize it with NanoQuant to
+1 bit, and compare perplexities + packed size — the paper's pipeline
+end-to-end in a few minutes on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro import configs
+from repro.core.packing import packed_nbytes
+from repro.core.pipeline import QuantConfig, nanoquant_quantize
+from repro.data import SyntheticCorpus, calib_batches, train_iterator
+from repro.data.synthetic import eval_perplexity
+from repro.models import transformer as T
+from repro.train import TrainConfig, Trainer
+
+
+def main():
+    # 1. a reduced llama3.2-style config (the full config is what the
+    #    dry-run lowers at scale; --arch selects any of the 10)
+    cfg = configs.get_smoke("llama3.2-1b")
+    print(f"model: {cfg.name}  (family={cfg.family}, "
+          f"{cfg.param_count()/1e6:.2f}M params)")
+
+    # 2. train the FP teacher on the synthetic corpus
+    tcfg = TrainConfig(lr=2e-3, warmup=20, total_steps=200)
+    trainer = Trainer(cfg, tcfg, train_iterator(cfg, batch=8, seq=64),
+                      log_every=50)
+    trainer.restore_or_init()
+    trainer.run(200)
+    params = trainer.state[0]
+
+    corpus = SyntheticCorpus(cfg.vocab_size)
+    evalb = calib_batches(cfg, 12, 64, seed=999, corpus=corpus)
+    ppl_fp = eval_perplexity(T.loss_fn, params, cfg, evalb)
+
+    # 3. NanoQuant PTQ (paper Alg. 1): calibrate -> block reconstruction
+    #    (LB-ADMM init + STE refinement) -> scale-only KD
+    calib = calib_batches(cfg, 16, 64, corpus=corpus)
+    qcfg = QuantConfig(target_bpw=1.0, admm_iters=20, t_pre=8, t_post=12,
+                       t_glob=8, min_dim=32)
+    qparams, report = nanoquant_quantize(params, cfg, calib, qcfg)
+    ppl_q = eval_perplexity(T.loss_fn, qparams, cfg, evalb)
+
+    # 4. results
+    packed = sum(packed_nbytes(lin) for lin in _packed_linears(qparams))
+    print("\n=== quickstart results ===")
+    print(f"FP16 teacher ppl : {ppl_fp:.3f}")
+    print(f"NanoQuant ppl    : {ppl_q:.3f}   (target 1.0 bit/weight)")
+    print(f"packed linears   : {packed/1e6:.2f} MB "
+          f"(wall {report['wall_s']:.0f}s, "
+          f"{len(report['ranks'])} layers factorized)")
+
+
+def _packed_linears(tree):
+    if isinstance(tree, dict):
+        if "qu_t" in tree:
+            yield tree
+        else:
+            for v in tree.values():
+                yield from _packed_linears(v)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Assigned-architecture registry (``--arch <id>``).
+
+Each ``<arch>.py`` module defines:
+
+- ``CONFIG``  — the exact published configuration (full scale),
+- ``SMOKE``   — a reduced same-family config for CPU smoke tests,
+- ``SHAPES``  — the input-shape cells this arch runs (subset of
+  ``repro.configs.shapes.SHAPES``; ``long_500k`` only for sub-quadratic
+  families per the assignment note — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+# arch-id (CLI spelling) -> module name
+_REGISTRY: Dict[str, str] = {
+    "musicgen-medium": "musicgen_medium",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "qwen3-4b": "qwen3_4b",
+    "qwen1.5-110b": "qwen1p5_110b",
+    "qwen1.5-0.5b": "qwen1p5_0p5b",
+    "llama3.2-1b": "llama3p2_1b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite",
+    "llama-3.2-vision-90b": "llama3p2_vision_90b",
+    "mamba2-370m": "mamba2_370m",
+}
+
+
+def _module(arch: str):
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; choose from {list(_REGISTRY)}")
+    return importlib.import_module(f"repro.configs.{_REGISTRY[arch]}")
+
+
+def list_archs() -> List[str]:
+    return list(_REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def shapes_for(arch: str) -> List[str]:
+    return list(_module(arch).SHAPES)

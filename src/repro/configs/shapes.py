@@ -1,0 +1,103 @@
+"""Input-shape cells and ShapeDtypeStruct stand-ins for the dry-run.
+
+The assigned shape set (LM family — seq_len x global_batch):
+
+- ``train_4k``     4,096 x 256   -> lowers ``train_step``
+- ``prefill_32k``  32,768 x 32   -> lowers ``prefill_step``
+- ``decode_32k``   32,768 x 128  -> lowers ``serve_step`` (1 new token,
+                                    KV cache of 32k already filled)
+- ``long_500k``    524,288 x 1   -> lowers ``serve_step`` (SSM / hybrid
+                                    only — O(1)-state decode)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs (no device
+allocation), matching what ``train_step`` / ``serve_step`` take.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                      # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _token_shape(cfg: ModelConfig, b: int, s: int):
+    if cfg.family == "audio":
+        return (b, s, cfg.n_codebooks)
+    return (b, s)
+
+
+def batch_specs(cfg: ModelConfig, b: int, s: int,
+                grad_accum: int = 1) -> Dict[str, Any]:
+    """Training / prefill batch: tokens + labels (+ VLM image embeds).
+
+    With grad_accum > 1 the global batch arrives pre-split as
+    (accum, b/accum, ...) — microbatches are a leading scan axis, so the
+    data-parallel sharding of the per-microbatch dim never needs an
+    all-to-all (see train.loop)."""
+    lead = (grad_accum, b // grad_accum) if grad_accum > 1 else (b,)
+    assert b % grad_accum == 0
+    specs = {
+        "tokens": _sds(lead + _token_shape(cfg, 1, s)[1:], jnp.int32),
+        "labels": _sds(lead + _token_shape(cfg, 1, s)[1:], jnp.int32),
+    }
+    if cfg.family == "vlm":
+        specs["image_embeds"] = _sds(
+            lead + (cfg.n_image_tokens, cfg.d_model), cfg.dtype)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, b: int, max_len: int):
+    """Abstract KV / SSM cache structs (what serve_step carries)."""
+    return jax.eval_shape(lambda: T.init_cache(cfg, b, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape: str,
+                grad_accum: int = 1) -> Dict[str, Any]:
+    """All non-param inputs for the step lowered at this shape cell."""
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    if cell.mode == "train":
+        return {"batch": batch_specs(cfg, b, s, grad_accum)}
+    if cell.mode == "prefill":
+        specs = {"tokens": _sds(_token_shape(cfg, b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            specs["image_embeds"] = _sds(
+                (b, cfg.n_image_tokens, cfg.d_model), cfg.dtype)
+        return specs
+    if cell.mode == "decode":
+        return {
+            "token": _sds(_token_shape(cfg, b, 1), jnp.int32),
+            "cache": cache_specs(cfg, b, s),
+            "pos": _sds((), jnp.int32),
+        }
+    raise ValueError(cell.mode)
+
+
+def param_specs(cfg: ModelConfig):
+    """Abstract FP parameter tree (ShapeDtypeStructs, no allocation)."""
+    return jax.eval_shape(
+        lambda k: T.init_params(k, cfg), _sds((2,), jnp.uint32))

@@ -1,0 +1,9 @@
+# The paper's primary contribution: NanoQuant sub-1-bit PTQ.
+from repro.core.admm import ADMMConfig, lb_admm  # noqa: F401
+from repro.core.balance import magnitude_balance, reconstruct  # noqa: F401
+from repro.core.bpw import (  # noqa: F401
+    model_bpw, model_size_gb, nanoquant_bpw, rank_for_bpw)
+from repro.core.packing import pack_quantized, pack_signs, unpack_signs  # noqa: F401
+from repro.core.pipeline import QuantConfig, nanoquant_quantize  # noqa: F401
+from repro.core.quantize import quantize_leaf, quantize_weight  # noqa: F401
+from repro.core.svid import svid, svid_factors  # noqa: F401

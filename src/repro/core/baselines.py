@@ -1,0 +1,82 @@
+"""Baseline binarizers and alternative low-rank-binary initializers.
+
+- RTN / XNOR in-place binarization (paper Table 2 rows 1-2)
+- Dual-SVID init (LittleBit, Lee et al. 2025a) — SVD factors, scales from
+  row-mean magnitudes of each factor (Table 5)
+- DBF-ADMM init (Boža & Macko 2026) — ADMM with a plain sign/global-scale
+  proxy instead of the SVID rank-1 value structure, no Hessian
+  preconditioning (Table 5)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.svid import svid
+
+
+def rtn_binarize(w):
+    """W ≈ α·sign(W), α = per-tensor mean |W| (w in (din,dout) layout)."""
+    alpha = jnp.mean(jnp.abs(w.astype(jnp.float32)))
+    return alpha * jnp.sign(w.astype(jnp.float32))
+
+
+def xnor_binarize(w):
+    """W ≈ diag(α)·sign(W) with per-output-channel α (XNOR-Net style).
+    w: (din, dout) -> α over dout columns."""
+    wf = w.astype(jnp.float32)
+    alpha = jnp.mean(jnp.abs(wf), axis=0, keepdims=True)
+    return alpha * jnp.sign(wf)
+
+
+def dual_svid_init(w, rank: int):
+    """LittleBit-style init: truncated SVD W ≈ A Bᵀ (A=UΣ^½, B=VΣ^½), then
+    read scales/latents directly off the factors. w: (din, dout).
+    Returns latent dict matching quantize_weight's output convention."""
+    W = w.astype(jnp.float32).T                        # (dout, din)
+    u, s, vt = jnp.linalg.svd(W, full_matrices=False)
+    r = min(rank, s.shape[0])
+    a = u[:, :r] * jnp.sqrt(s[:r])[None, :]            # (dout, r)
+    b = vt[:r].T * jnp.sqrt(s[:r])[None, :]            # (din, r)
+    s1 = jnp.mean(jnp.abs(a), axis=1)
+    s2 = jnp.mean(jnp.abs(b), axis=1)
+    return {"lu": a, "lv": b, "s1": s1, "s2": s2}
+
+
+def dbf_admm_init(w, rank: int, iters: int = 40, rho: float = 1.0, key=None):
+    """DBF-flavoured ADMM: same splitting as LB-ADMM but the proxy is a
+    plain global-scale sign projection (Z = mean|P|·sign(P)) and the target
+    is unpreconditioned. w: (din, dout)."""
+    from repro.core.admm import _rand_range_init, _chol_solve_ridge
+
+    W = w.astype(jnp.float32).T
+    key = key if key is not None else jax.random.PRNGKey(0)
+    u, v = _rand_range_init(key, W, rank)
+    zu = jnp.mean(jnp.abs(u)) * jnp.sign(u)
+    zv = jnp.mean(jnp.abs(v)) * jnp.sign(v)
+    lu = jnp.zeros_like(u)
+    lv = jnp.zeros_like(v)
+
+    def step(carry, _):
+        u, v, zu, zv, lu, lv = carry
+        u = _chol_solve_ridge(v.T @ v, v.T @ W.T + rho * (zu - lu).T, rho).T
+        v = _chol_solve_ridge(u.T @ u, u.T @ W + rho * (zv - lv).T, rho).T
+        pu, pv = u + lu, v + lv
+        zu = jnp.mean(jnp.abs(pu)) * jnp.sign(pu)
+        zv = jnp.mean(jnp.abs(pv)) * jnp.sign(pv)
+        lu = pu - zu
+        lv = pv - zv
+        return (u, v, zu, zv, lu, lv), None
+
+    (u, v, zu, zv, lu, lv), _ = jax.lax.scan(
+        step, (u, v, zu, zv, lu, lv), None, length=iters)
+    pu, pv = u + lu, v + lv
+    s1 = jnp.mean(jnp.abs(pu), axis=1)
+    s2 = jnp.mean(jnp.abs(pv), axis=1)
+    return {"lu": pu, "lv": pv, "s1": s1, "s2": s2}
+
+
+def svid_rank1(w):
+    """Rank-1 SVID of a full matrix (building block of BiLLM-family
+    residual binarization; also used in tests as the optimality oracle)."""
+    return svid(w.astype(jnp.float32))

@@ -1,0 +1,27 @@
+"""Bit packing of ±1 factors (paper Fig. 2c): -1 -> 0, +1 -> 1, 32 values
+per uint32 word. Re-exports the kernel-layer implementation so the packing
+convention is defined in exactly one place.
+"""
+from repro.kernels.ref import pack_signs, unpack_signs  # noqa: F401
+
+import jax.numpy as jnp
+
+
+def pack_quantized(lat_u, lat_v, s1, s2, dtype=jnp.float32):
+    """Finalize a quantized linear: latents -> packed param dict consumed by
+    ``repro.models.layers.dense`` (weights layout (d_in, d_out), so
+    U (d_out, r) is stored transposed as packed Uᵀ)."""
+    u = jnp.sign(jnp.where(lat_u == 0, 1.0, lat_u))     # (d_out, r)
+    v = jnp.sign(jnp.where(lat_v == 0, 1.0, lat_v))     # (d_in, r)
+    return {
+        "qu_t": pack_signs(u.T),                        # (r//32, d_out)
+        "qv": pack_signs(v),                            # (d_in//32, r)
+        "s1": s1.astype(dtype),
+        "s2": s2.astype(dtype),
+    }
+
+
+def packed_nbytes(q) -> int:
+    """Actual storage bytes of a packed quantized linear (scales in fp16)."""
+    return int(q["qu_t"].size * 4 + q["qv"].size * 4
+               + (q["s1"].size + q["s2"].size) * 2)

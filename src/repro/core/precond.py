@@ -1,0 +1,124 @@
+"""Robust diagonal K-FAC preconditioners (paper Alg. 1 Phase 1, Eq. 2–3).
+
+``StatCollector`` accumulates, per named linear layer, the diagonal of the
+activation second-moment (A = E[x xᵀ] diag — forward tap) and of the
+output-gradient second-moment (G = E[g gᵀ] diag — backward tap). The
+diagonal preconditioners are D_in = diag(A)^½, D_out = diag(G)^½, so that
+‖D_out (W−Ŵ) D_in‖² is the diagonal K-FAC approximation of the task-loss
+Hessian quadratic form. :func:`robust_diag` applies Ledoit–Wolf-style
+shrinkage toward the mean plus clipping (Eq. 3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+class StatCollector:
+    """Host-side accumulator fed by jax.debug.callback taps.
+
+    Keys: (stack, name, field, layer_idx) -> {'sq': np (d,), 'cnt': float}.
+    Works under jit/scan: the layer index arrives as a runtime value.
+    """
+
+    def __init__(self):
+        self.data: Dict[Tuple, dict] = {}
+        self._cbs = {}
+
+    def make_cb(self, stack: str, name: str, field: str):
+        key = (stack, name, field)
+        if key not in self._cbs:
+            self._cbs[key] = functools.partial(self._accumulate, key)
+        return self._cbs[key]
+
+    def _accumulate(self, key, idx, sq, cnt):
+        idx = int(np.asarray(idx))
+        full = key + (idx,)
+        sq = np.asarray(sq, np.float64)
+        cnt = float(np.asarray(cnt))
+        slot = self.data.setdefault(full, {"sq": np.zeros_like(sq), "cnt": 0.0})
+        slot["sq"] += sq
+        slot["cnt"] += cnt
+
+    # ---- lookups -----------------------------------------------------------
+
+    def mean_sq(self, stack: str, name: str, field: str, idx: int):
+        slot = self.data.get((stack, name, field, idx))
+        if slot is None:
+            return None
+        return slot["sq"] / max(slot["cnt"], 1.0)
+
+    def mean_sq_agg(self, stack: str, name: str, field: str):
+        """Aggregate over all layer indices (e.g. shared attention block
+        applied at several depths)."""
+        tot, cnt = None, 0.0
+        for (s, n, f, i), slot in self.data.items():
+            if (s, n, f) == (stack, name, field):
+                tot = slot["sq"] if tot is None else tot + slot["sq"]
+                cnt += slot["cnt"]
+        if tot is None:
+            return None
+        return tot / max(cnt, 1.0)
+
+
+def robust_diag(mean_sq: np.ndarray, gamma: float, eps: float = 1e-6,
+                tau_max: float = 1e4) -> jnp.ndarray:
+    """mean_sq: per-channel second moment -> shrunk, clipped, normalized
+    diagonal preconditioner (paper Eq. 3 + Lemma 1 clipping)."""
+    d = np.sqrt(np.maximum(mean_sq, 0.0))
+    d = (1.0 - gamma) * d + gamma * d.mean()
+    d = np.clip(d, eps, tau_max)
+    d = d / max(d.mean(), 1e-12)          # scale-free (cancelled by balancing)
+    return jnp.asarray(d, jnp.float32)
+
+
+def collect_stats(loss_fn, params, cfg, batches, jit: bool = True):
+    """Run calibration batches through the FP model with taps installed,
+    doing a full forward+backward per batch (grad wrt params is discarded —
+    we only need the activation/gradient taps)."""
+    from repro.models import layers as L
+
+    collector = StatCollector()
+    L.set_tap(collector)
+    try:
+        def _loss(p, b):
+            return loss_fn(p, cfg, b, training=False)
+        g = jax.grad(_loss)
+        if jit:
+            g = jax.jit(g)
+        for b in batches:
+            g(params, b)
+            # block until callbacks flush
+            jax.effects_barrier()
+    finally:
+        L.set_tap(None)
+    return collector
+
+
+def preconditioners_for(collector: StatCollector, stack: str, name: str,
+                        idx, d_in_dim: int, d_out_dim: int, gamma: float,
+                        expert_shape=None):
+    """Build (D_in, D_out) for one linear, falling back to identity when
+    stats are missing (e.g. a layer the calibration never activated)."""
+    if idx is None:
+        a = collector.mean_sq_agg(stack, name, "in")
+        g = collector.mean_sq_agg(stack, name, "out")
+    else:
+        a = collector.mean_sq(stack, name, "in", idx)
+        g = collector.mean_sq(stack, name, "out", idx)
+    if expert_shape is not None:
+        E = expert_shape
+        d_in = (jnp.ones((E, d_in_dim), jnp.float32) if a is None else
+                jnp.stack([robust_diag(a[e], gamma) for e in range(E)]))
+        d_out = (jnp.ones((E, d_out_dim), jnp.float32) if g is None else
+                 jnp.stack([robust_diag(g[e], gamma) for e in range(E)]))
+        return d_in, d_out
+    d_in = (jnp.ones((d_in_dim,), jnp.float32) if a is None
+            else robust_diag(np.asarray(a), gamma))
+    d_out = (jnp.ones((d_out_dim,), jnp.float32) if g is None
+             else robust_diag(np.asarray(g), gamma))
+    return d_in, d_out

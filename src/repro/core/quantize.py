@@ -1,0 +1,49 @@
+"""Per-layer quantization entry: preconditioning -> LB-ADMM -> balancing.
+
+Operates on weights in the model's (d_in, d_out) layout; internally works
+in the paper's (d_out, d_in) orientation. Returns *latent* param dicts
+({'lu','lv','s1','s2'}) consumed by the STE refinement phase; packing to
+uint32 happens after refinement (core.packing).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.admm import ADMMConfig, lb_admm
+from repro.core.balance import magnitude_balance
+from repro.core.bpw import rank_for_bpw
+
+
+def quantize_weight(w, d_in, d_out, rank: int, admm: ADMMConfig, key):
+    """w: (d_in, d_out); d_in: (d_in,), d_out: (d_out,) preconditioners.
+    Returns latent dict with lu (d_out, r), lv (d_in, r), s1, s2."""
+    W = w.astype(jnp.float32).T                        # paper layout (dout, din)
+    Wt = d_out[:, None] * W * d_in[None, :]            # Alg. 1 line 15
+    res = lb_admm(Wt, admm._replace(rank=rank), key)
+    lat_u, lat_v, s1, s2 = magnitude_balance(res["p_u"], res["p_v"],
+                                             d_out, d_in)
+    return ({"lu": lat_u, "lv": lat_v, "s1": s1, "s2": s2},
+            {"residual_trace": res["residual_trace"]})
+
+
+def quantize_leaf(p: dict, d_in, d_out, target_bpw: float, admm: ADMMConfig,
+                  key, rank_align: int = 32):
+    """Quantize one linear param dict ({'w': (din,dout) or (E,din,dout)}).
+    Bias (if any) is carried over in FP. Returns (latent dict, info)."""
+    w = p["w"]
+    if w.ndim == 3:                                    # stacked experts
+        E, din, dout = w.shape
+        r = rank_for_bpw(dout, din, target_bpw, rank_align)
+        keys = jax.random.split(key, E)
+        lat, info = jax.vmap(
+            lambda we, di, do, k: quantize_weight(we, di, do, r, admm, k)
+        )(w, d_in, d_out, keys)
+    else:
+        din, dout = w.shape
+        r = rank_for_bpw(dout, din, target_bpw, rank_align)
+        lat, info = quantize_weight(w, d_in, d_out, r, admm, key)
+    if "b" in p:
+        lat["b"] = p["b"]
+    info["rank"] = r
+    return lat, info

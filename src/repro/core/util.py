@@ -1,0 +1,51 @@
+"""Pytree utilities: path-predicate partitioning for selective training
+(STE refinement tunes only latents+scales; Phase 3 tunes only scales)."""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def partition(tree, pred: Callable[[str], bool]) -> Tuple[dict, dict]:
+    """Split a pytree into (selected, rest) by leaf-path predicate; both
+    outputs keep the full structure with None placeholders."""
+    sel = jax.tree_util.tree_map_with_path(
+        lambda p, l: l if pred(_path_str(p)) else None, tree)
+    rest = jax.tree_util.tree_map_with_path(
+        lambda p, l: None if pred(_path_str(p)) else l, tree)
+    return sel, rest
+
+
+def combine(sel, rest):
+    """Inverse of partition."""
+    return jax.tree.map(lambda a, b: a if a is not None else b,
+                        sel, rest, is_leaf=lambda x: x is None)
+
+
+def tree_stack(trees):
+    """Stack a list of same-structure pytrees along a new leading axis."""
+    import jax.numpy as jnp
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+
+
+def tree_index(tree, i):
+    """Extract element i along the leading axis of every leaf."""
+    return jax.tree.map(lambda l: l[i], tree)
+
+
+def tree_set(tree, i, sub):
+    """Write sub into index i along the leading axis of every leaf."""
+    return jax.tree.map(lambda l, s: l.at[i].set(s.astype(l.dtype)), tree, sub)

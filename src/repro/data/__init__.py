@@ -1,0 +1,2 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticCorpus, calib_batches, make_batch, train_iterator)

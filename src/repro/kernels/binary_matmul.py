@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: packed-binary matmul with fused channel scales.
+
+TPU-native adaptation of the paper's binary CUDA GEMV/GEMM (App. E): the
+±1 factor matrix stays bit-packed (uint32) in HBM; each grid step streams a
+(bk//32, bn) packed tile into VMEM, expands it to ±1 with a vectorized
+shift/mask (VPU), and feeds the MXU matmul. The f32 accumulator lives in a
+VMEM scratch tile across the K grid dimension; input-side (s_k) and
+output-side (s_n) channel scales are fused so the low-rank chain
+``y = s1 ⊙ ((x ⊙ s2) @ V) @ Uᵀ`` is exactly two pallas_calls with no
+intermediate HBM round-trip of unpacked weights.
+
+GEMV (decode) is the same kernel with a single block-row grid: unlike the
+paper's CUDA GEMV (which deliberately avoids tensor cores), TPU has no
+scalar-core bypass — the MXU is always the right unit, so one kernel serves
+both regimes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, sk_ref, sn_ref, o_ref, acc_ref, *, n_k: int, bk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    packed = w_ref[...]                                  # (bk//32, bn) uint32
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
+    bits = (packed[:, None, :] >> shifts) & jnp.uint32(1)
+    w = (bits.astype(jnp.float32) * 2.0 - 1.0).reshape(bk, -1)
+
+    x = x_ref[...].astype(jnp.float32) * sk_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] * sn_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)
+
+
+def packed_matmul(x, packed_w, s_k=None, s_n=None, *,
+                  bm: int = 128, bn: int = 128, bk: int = 512,
+                  interpret: bool = False):
+    """y = (x ⊙ s_k) @ unpack(packed_w) ⊙ s_n.
+
+    x: (M, K) float; packed_w: (K//32, N) uint32; s_k: (K,); s_n: (N,).
+    M is padded to bm internally; K and N must be multiples of 32 and are
+    padded to bk / bn.
+    """
+    M, K = x.shape
+    N = packed_w.shape[1]
+    assert packed_w.shape[0] * 32 == K
+
+    if s_k is None:
+        s_k = jnp.ones((K,), jnp.float32)
+    if s_n is None:
+        s_n = jnp.ones((N,), jnp.float32)
+
+    bm = min(bm, max(8, M))
+    bk = min(bk, K)
+    bn = min(bn, N)
+    Mp = -(-M // bm) * bm
+    Kp = -(-K // bk) * bk
+    Np = -(-N // bn) * bn
+    if Mp != M:
+        x = jnp.pad(x, ((0, Mp - M), (0, 0)))
+    if Kp != K:
+        x = jnp.pad(x, ((0, 0), (0, Kp - K)))
+        packed_w = jnp.pad(packed_w, ((0, (Kp - K) // 32), (0, 0)))
+        s_k = jnp.pad(s_k, (0, Kp - K))
+    if Np != N:
+        packed_w = jnp.pad(packed_w, ((0, 0), (0, Np - N)))
+        s_n = jnp.pad(s_n, (0, Np - N))
+    # note: padded packed words are 0 => unpack to -1, but padded s_k/x rows
+    # are 0 so they contribute 0 to the accumulator. Padded N columns are
+    # sliced off below.
+
+    n_m, n_n, n_k = Mp // bm, Np // bn, Kp // bk
+    sk2 = s_k.reshape(1, Kp)
+    sn2 = s_n.reshape(1, Np)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, bk=bk),
+        grid=(n_m, n_n, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // 32, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bk), lambda i, j, k: (0, k)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, packed_w, sk2, sn2)
+    return out[:M, :N]
+
+
+def lowrank_binary_matmul_pallas(x, qv, qu_t, s1, s2, *, interpret=False,
+                                 bm=128, bn=128, bk=512):
+    """Two-stage NanoQuant linear, both stages as packed-matmul kernels."""
+    shape = x.shape
+    d_in = shape[-1]
+    x2 = x.reshape(-1, d_in)
+    t = packed_matmul(x2, qv, s_k=s2, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    y = packed_matmul(t, qu_t, s_n=s1, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y.reshape(*shape[:-1], y.shape[-1])

@@ -1,0 +1,58 @@
+"""Jit'd public wrappers for the binary kernels.
+
+The model stack calls :func:`lowrank_binary_matmul`; execution mode is a
+process-global policy:
+
+- ``"ref"``   — pure-jnp oracle. Lowerable on every backend and under any
+  pjit sharding, so it is the default for CPU runs and the multi-pod
+  dry-run (XLA SPMD partitions it like any matmul chain).
+- ``"pallas"`` — the Pallas TPU kernel (interpret=True off-TPU), for real
+  deployments and kernel validation.
+- ``"auto"``  — pallas on TPU backends, ref elsewhere.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+from repro.kernels import binary_matmul, ref
+
+_MODE = ["auto"]
+
+
+def set_kernel_mode(mode: str) -> None:
+    assert mode in ("auto", "ref", "pallas")
+    _MODE[0] = mode
+
+
+@contextlib.contextmanager
+def kernel_mode(mode: str):
+    prev = _MODE[0]
+    set_kernel_mode(mode)
+    try:
+        yield
+    finally:
+        _MODE[0] = prev
+
+
+def _use_pallas() -> bool:
+    mode = _MODE[0]
+    if mode == "pallas":
+        return True
+    if mode == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def lowrank_binary_matmul(x, qv, qu_t, s1, s2):
+    """y = s1 ⊙ ((x ⊙ s2) @ V±1) @ U±1ᵀ  — packed operands (paper Eq. 1)."""
+    if _use_pallas():
+        interp = jax.default_backend() != "tpu"
+        return binary_matmul.lowrank_binary_matmul_pallas(
+            x, qv, qu_t, s1, s2, interpret=interp)
+    return ref.lowrank_binary_matmul_ref(x, qv, qu_t, s1, s2)
+
+
+pack_signs = ref.pack_signs
+unpack_signs = ref.unpack_signs

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the NanoQuant binary kernels.
+
+Packing convention (matches Fig. 2c of the paper): a ±1 matrix ``A`` of
+shape (K, N) is packed along axis 0 in groups of 32 rows into a
+``uint32`` array of shape (K//32, N); bit ``b`` of word ``i`` stores
+``A[i*32+b] > 0`` (so -1 -> 0, +1 -> 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pack_signs(a: jnp.ndarray) -> jnp.ndarray:
+    """(K, N) ±1/float -> (K//32, N) uint32. K must be a multiple of 32."""
+    K, N = a.shape
+    assert K % 32 == 0, f"pack dim {K} not a multiple of 32"
+    bits = (a > 0).astype(jnp.uint32).reshape(K // 32, 32, N)
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
+    return jax.lax.bitwise_or(
+        jnp.zeros((K // 32, N), jnp.uint32), (bits << shifts).sum(axis=1).astype(jnp.uint32)
+    )
+
+
+def unpack_signs(packed: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """(K//32, N) uint32 -> (K, N) in {-1, +1}."""
+    n32, N = packed.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
+    bits = (packed[:, None, :] >> shifts) & jnp.uint32(1)
+    return (bits.astype(dtype) * 2 - 1).reshape(n32 * 32, N)
+
+
+def packed_matmul_ref(x, packed_w, s_k=None, s_n=None):
+    """y = (x ⊙ s_k) @ unpack(packed_w) ⊙ s_n.  x: (..., K).
+
+    The ±1 matrix is unpacked in the *compute* dtype (bf16 for bf16
+    activations — ±1 is exact in any float format) with an f32
+    accumulator, halving the HBM footprint of the unpacked weights on
+    the SPMD dry-run path. (On TPU the Pallas kernel unpacks in VMEM and
+    this matters only for the lowered reference path.)"""
+    wdt = x.dtype if jnp.issubdtype(x.dtype, jnp.floating) \
+        and jnp.dtype(x.dtype).itemsize <= 2 else jnp.float32
+    w = unpack_signs(packed_w, wdt)
+    xf = x
+    if s_k is not None:
+        xf = xf * s_k.astype(x.dtype)
+    y = jax.lax.dot_general(
+        xf, w, (((xf.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if s_n is not None:
+        y = y * s_n.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def lowrank_binary_matmul_ref(x, qv, qu_t, s1, s2):
+    """NanoQuant linear (paper Eq. 1):  y = s1 ⊙ ((x ⊙ s2) @ V±1) @ U±1ᵀ.
+
+    x: (..., d_in); qv: packed V (d_in//32, r); qu_t: packed Uᵀ (r//32, d_out);
+    s1: (d_out,); s2: (d_in,).
+    """
+    t = packed_matmul_ref(x, qv, s_k=s2)          # (..., r)
+    return packed_matmul_ref(t, qu_t, s_n=s1)     # (..., d_out)

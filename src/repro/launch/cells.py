@@ -1,0 +1,149 @@
+"""Cell builders: (arch x shape x mesh) -> AOT-lowerable jit functions.
+
+One "cell" is an assigned architecture at one input-shape point on one
+mesh. ``lower_cell`` produces the jax.stages.Lowered object the dry-run
+compiles and the roofline analysis reads. Serving cells (prefill /
+decode) lower against the *quantized* parameter structs by default — the
+paper's deployment scenario; pass ``quantized=False`` for the FP
+comparison rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs import shapes as SH
+from repro.kernels import ops as kops
+from repro.models import transformer as T
+from repro.quant.surgery import abstract_quantized_params
+from repro.serve.engine import make_prefill_step, make_serve_step
+from repro.sharding import rules
+from repro.train.loop import TrainConfig, make_train_step
+from repro.train.optim import AdamW
+
+
+# memory-policy overrides per arch at train_4k (microbatching keeps the
+# per-device activation footprint inside v5e HBM; see EXPERIMENTS.md §Perf)
+GRAD_ACCUM: Dict[str, int] = {
+    "qwen1.5-110b": 16,
+    "qwen3-moe-235b-a22b": 8,
+    "llama-3.2-vision-90b": 8,
+    "qwen3-4b": 4,
+    "deepseek-v2-lite-16b": 4,
+    "musicgen-medium": 2,
+    "mamba2-370m": 4,
+    "zamba2-1.2b": 4,
+    "llama3.2-1b": 2,
+    "qwen1.5-0.5b": 2,
+}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: Any
+    mode: str                     # train | prefill | decode
+    cfg: Any
+    fn: Any                       # the python step callable
+    args: tuple                   # ShapeDtypeStructs (positional)
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple = ()
+    quantized: bool = False
+    grad_accum: int = 1
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate)
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape: str, mesh,
+               quantized: Optional[bool] = None,
+               policy: rules.ShardingPolicy = rules.DEFAULT,
+               grad_accum: Optional[int] = None,
+               target_bpw: float = 1.0,
+               cfg_overrides: Optional[dict] = None) -> Cell:
+    cfg = configs.get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    cell = SH.SHAPES[shape]
+    mode = cell.mode
+    kops.set_kernel_mode("ref")     # SPMD-partitionable path for AOT
+    # pin activation shardings (GSPMD propagation alone replicates
+    # attention when kv-heads < the model axis — §Perf iteration 1)
+    from repro.models import layers as L
+    L.set_activation_sharding(mesh, rules.data_axes(mesh),
+                              "model" if "model" in mesh.axis_names
+                              else None)
+
+    if mode == "train":
+        accum = grad_accum if grad_accum is not None \
+            else GRAD_ACCUM.get(arch, 1)
+        tcfg = TrainConfig(grad_accum=accum)
+        step = make_train_step(cfg, tcfg)
+        params = SH.param_specs(cfg)
+        pspecs = rules.param_pspecs(cfg, params, mesh, policy)
+        opt = AdamW(lr=1e-4)
+        opt_state = jax.eval_shape(opt.init, params)
+        ospecs = type(opt_state)(step=P(), m=pspecs, v=pspecs)
+        eff = jax.ShapeDtypeStruct((), jax.numpy.float32)
+        batch = SH.input_specs(cfg, shape, accum)["batch"]
+        bspecs = rules.batch_pspecs(cfg, batch, mesh, accum)
+        in_sh = ( _ns(mesh, pspecs), _ns(mesh, ospecs),
+                  NamedSharding(mesh, P()), _ns(mesh, bspecs))
+        out_sh = ( _ns(mesh, pspecs), _ns(mesh, ospecs),
+                   NamedSharding(mesh, P()),
+                   _ns(mesh, {"loss": P(), "grad_norm": P(), "lr": P()}))
+        return Cell(arch, shape, mesh, mode, cfg, step,
+                    (params, opt_state, eff, batch), in_sh, out_sh,
+                    donate=(0, 1), grad_accum=accum)
+
+    # ---- serving cells -----------------------------------------------------
+    q = True if quantized is None else quantized
+    if q:
+        params = abstract_quantized_params(cfg, target_bpw=target_bpw)
+    else:
+        params = SH.param_specs(cfg)
+    pspecs = rules.param_pspecs(cfg, params, mesh, policy)
+
+    if mode == "prefill":
+        step = make_prefill_step(cfg)
+        specs = SH.input_specs(cfg, shape)
+        args = [params, specs["tokens"]]
+        in_sh = [_ns(mesh, pspecs),
+                 _ns(mesh, rules.batch_pspecs(cfg, specs["tokens"], mesh))]
+        if cfg.family == "vlm":
+            args.append(specs["image_embeds"])
+            in_sh.append(_ns(mesh, rules.batch_pspecs(
+                cfg, specs["image_embeds"], mesh)))
+        return Cell(arch, shape, mesh, mode, cfg, step, tuple(args),
+                    tuple(in_sh), None, quantized=q)
+
+    if mode == "decode":
+        step = make_serve_step(cfg)
+        specs = SH.input_specs(cfg, shape)
+        cspecs = rules.cache_pspecs(cfg, specs["cache"], mesh, policy)
+        args = (params, specs["token"], specs["cache"], specs["pos"])
+        in_sh = (_ns(mesh, pspecs),
+                 _ns(mesh, rules.batch_pspecs(cfg, specs["token"], mesh)),
+                 _ns(mesh, cspecs),
+                 NamedSharding(mesh, P()))
+        out_sh = (None, _ns(mesh, cspecs))
+        return Cell(arch, shape, mesh, mode, cfg, step, args, in_sh,
+                    out_sh, donate=(2,), quantized=q)
+
+    raise ValueError(mode)

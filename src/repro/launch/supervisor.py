@@ -1,0 +1,122 @@
+"""Fault-tolerance supervisor: bounded restarts + hang (straggler)
+detection for any launch command.
+
+    PYTHONPATH=src python -m repro.launch.supervisor \
+        --max-restarts 3 --hang-timeout 600 -- \
+        python -m repro.launch.train --arch llama3.2-1b --smoke \
+            --ckpt-dir /tmp/ckpt --steps 500
+
+Policy (the single-controller slice of a 1000+-node control plane —
+on a real cluster one supervisor runs per host, and the checkpoint dir
+lives on shared storage):
+
+- child exits 0              -> done.
+- child exits nonzero        -> restart with exponential backoff, up to
+                                --max-restarts; training resumes from the
+                                latest atomic checkpoint (deterministic
+                                data skip makes the replay exact).
+- no stdout progress within --hang-timeout seconds -> the child is
+  declared a straggler/hang, SIGKILLed, and restarted (same budget).
+
+``run_with_restarts`` is the in-process variant used by tests.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+from typing import Callable, Optional
+
+
+def run_with_restarts(fn: Callable[[int], None], max_restarts: int = 3,
+                      backoff_s: float = 0.0, log=print) -> int:
+    """In-process restart loop: fn(attempt) is retried on exception.
+    Returns the number of restarts used. Raises after budget exhaustion."""
+    attempt = 0
+    while True:
+        try:
+            fn(attempt)
+            return attempt
+        except Exception as e:  # noqa: BLE001
+            attempt += 1
+            if attempt > max_restarts:
+                log(f"[supervisor] giving up after {max_restarts} restarts")
+                raise
+            log(f"[supervisor] attempt {attempt} failed ({e!r}); "
+                f"restarting in {backoff_s * attempt:.1f}s")
+            time.sleep(backoff_s * attempt)
+
+
+class _Pump(threading.Thread):
+    """Forward child output and timestamp progress for hang detection."""
+
+    def __init__(self, pipe, sink):
+        super().__init__(daemon=True)
+        self.pipe, self.sink = pipe, sink
+        self.last_progress = time.time()
+
+    def run(self):
+        for line in iter(self.pipe.readline, b""):
+            self.last_progress = time.time()
+            self.sink.write(line.decode(errors="replace"))
+            self.sink.flush()
+
+
+def supervise(cmd, max_restarts: int = 3, hang_timeout: float = 0.0,
+              backoff_s: float = 2.0, log=print) -> int:
+    restarts = 0
+    while True:
+        log(f"[supervisor] launching (attempt {restarts + 1}): "
+            f"{' '.join(cmd)}")
+        child = subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                                 stderr=subprocess.STDOUT)
+        pump = _Pump(child.stdout, sys.stdout)
+        pump.start()
+        hung = False
+        while True:
+            try:
+                rc = child.wait(timeout=5.0)
+                break
+            except subprocess.TimeoutExpired:
+                if (hang_timeout
+                        and time.time() - pump.last_progress > hang_timeout):
+                    log(f"[supervisor] no progress for {hang_timeout}s — "
+                        f"straggler/hang, killing pid {child.pid}")
+                    child.kill()
+                    child.wait()
+                    rc, hung = -9, True
+                    break
+        if rc == 0:
+            log("[supervisor] child finished cleanly")
+            return 0
+        restarts += 1
+        if restarts > max_restarts:
+            log(f"[supervisor] restart budget ({max_restarts}) exhausted")
+            return rc if rc else 1
+        wait = backoff_s * (2 ** (restarts - 1))
+        log(f"[supervisor] child {'hung' if hung else f'exited rc={rc}'}; "
+            f"restart {restarts}/{max_restarts} in {wait:.0f}s")
+        time.sleep(wait)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument("--hang-timeout", type=float, default=0.0)
+    ap.add_argument("--backoff", type=float, default=2.0)
+    ap.add_argument("cmd", nargs=argparse.REMAINDER,
+                    help="-- <command to supervise>")
+    args = ap.parse_args()
+    cmd = args.cmd[1:] if args.cmd and args.cmd[0] == "--" else args.cmd
+    if not cmd:
+        ap.error("no command given after --")
+    raise SystemExit(supervise(cmd, args.max_restarts, args.hang_timeout,
+                               args.backoff))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig, scaled_down  # noqa: F401
+from repro.models import layers, transformer  # noqa: F401

@@ -1,0 +1,851 @@
+"""Layer zoo (pure JAX, no flax).
+
+Params are plain dicts of jnp arrays; every sublayer is an
+``init_*(key, cfg) -> params`` / ``apply(params, x, ...)`` pair. Linear
+layers route through :func:`dense`, which transparently executes either a
+full-precision matmul or a NanoQuant packed low-rank binary matmul when the
+param dict carries quantized leaves — this is what makes the quantized
+model a drop-in for serving.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+# --------------------------------------------------------------------------
+# calibration taps (paper Alg. 1 Phase 1): when a StatCollector is
+# installed, every named dense() records input second moments on the
+# forward pass and output-gradient second moments on the backward pass —
+# the diagonal K-FAC statistics behind D̃_in / D̃_out. Taps are trace-time:
+# with no collector installed the hooks cost nothing.
+# --------------------------------------------------------------------------
+
+_TAP = [None]
+_SCOPE = [("", None)]  # (stack_name, traced layer index | None)
+
+
+def set_tap(collector) -> None:
+    _TAP[0] = collector
+
+
+def set_scope(stack: str, idx) -> None:
+    _SCOPE[0] = (stack, idx)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 3))
+def _grad_tap(cb, y, idx, expert=False):
+    return y
+
+
+def _grad_tap_fwd(cb, y, idx, expert):
+    # fwd receives args in the primal's order (nondiff args included).
+    return y, idx
+
+
+def _grad_tap_bwd(cb, expert, idx, g):
+    red = (1,) if expert else tuple(range(g.ndim - 1))
+    sq = jnp.sum(jnp.square(g.astype(jnp.float32)), axis=red)
+    cnt = jnp.asarray(g.shape[1] if expert else g.size // g.shape[-1],
+                      jnp.float32)
+    jax.debug.callback(cb, idx, sq, cnt)
+    return g, jnp.zeros_like(idx)
+
+
+_grad_tap.defvjp(_grad_tap_fwd, _grad_tap_bwd)
+
+
+def _tap_pre(name, x, expert=False):
+    tap = _TAP[0]
+    if tap is None or name is None:
+        return
+    stack, idx = _SCOPE[0]
+    red = (1,) if expert else tuple(range(x.ndim - 1))
+    sq = jnp.sum(jnp.square(x.astype(jnp.float32)), axis=red)
+    cnt = jnp.asarray(x.shape[1] if expert else x.size // x.shape[-1],
+                      jnp.float32)
+    jax.debug.callback(tap.make_cb(stack, name, "in"),
+                       _scope_idx(idx), sq, cnt)
+
+
+def _tap_post(name, y, expert=False):
+    tap = _TAP[0]
+    if tap is None or name is None:
+        return y
+    stack, idx = _SCOPE[0]
+    cb = tap.make_cb(stack, name, "out")
+    return _grad_tap(cb, y, _scope_idx(idx), expert)
+
+
+def _scope_idx(idx):
+    return jnp.asarray(-1.0 if idx is None else idx, jnp.float32)
+
+
+def sign_ste(u):
+    """sign with straight-through gradient (paper Eq. 10)."""
+    s = jnp.sign(u)
+    s = jnp.where(s == 0, 1.0, s).astype(u.dtype)
+    return u + jax.lax.stop_gradient(s - u)
+
+
+# --------------------------------------------------------------------------
+# activation-sharding constraints. GSPMD propagation alone loses the
+# head sharding at the GQA grouping reshape (heads < mesh axis) and then
+# replicates whole attention blocks; production frameworks pin activation
+# shardings explicitly, and so do we. A process-global policy (installed
+# by launch/cells.py before lowering; absent in plain CPU tests, where
+# every constraint is a no-op) maps logical roles to mesh axes.
+# --------------------------------------------------------------------------
+
+_ACT_SHARD = [None]
+
+
+def set_activation_sharding(mesh, dp, tp) -> None:
+    """mesh: jax Mesh (or None to clear); dp: tuple of data axes;
+    tp: model axis name."""
+    _ACT_SHARD[0] = None if mesh is None else {
+        "mesh": mesh, "dp": tuple(dp) if dp else None, "tp": tp}
+
+
+def _axis_len(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def constrain(x, *roles):
+    """with_sharding_constraint by per-dim logical role:
+    None (replicated) | 'dp' (batch) | 'tp' (model). Divisibility-checked;
+    non-divisible dims fall back to replicated."""
+    pol = _ACT_SHARD[0]
+    if pol is None:
+        return x
+    mesh = pol["mesh"]
+    spec = []
+    for dim, role in zip(x.shape, roles):
+        axis = pol.get(role) if role else None
+        spec.append(axis if axis is not None
+                    and dim % _axis_len(mesh, axis) == 0 else None)
+    spec += [None] * (x.ndim - len(spec))
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*spec)))
+
+
+# --------------------------------------------------------------------------
+# basics
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dt)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def init_linear(key, d_in, d_out, bias=False, dtype=jnp.bfloat16, std=None):
+    std = std if std is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def _ste_matmul(p, x):
+    """Latent STE linear (block-reconstruction Step 3, paper Eq. 10):
+    W_eff = diag(s1)·sign(𝒰)·sign(𝒱)ᵀ·diag(s2) with straight-through grads
+    to the continuous latents. lv: (d_in, r), lu: (d_out, r)."""
+    xs = x * p["s2"].astype(x.dtype)
+    t = xs @ sign_ste(p["lv"]).astype(x.dtype)
+    y = t @ sign_ste(p["lu"]).astype(x.dtype).T
+    return y * p["s1"].astype(x.dtype)
+
+
+def dense(p: dict, x: jnp.ndarray, name: Optional[str] = None) -> jnp.ndarray:
+    """FP / STE-latent / packed-binary linear. x: (..., d_in) -> (..., d_out)."""
+    _tap_pre(name, x)
+    if "qu_t" in p:      # packed low-rank binary path (paper Eq. 1)
+        y = kops.lowrank_binary_matmul(x, p["qv"], p["qu_t"], p["s1"], p["s2"])
+    elif "lu" in p:      # continuous latents with STE (refinement phase)
+        y = _ste_matmul(p, x)
+    else:
+        y = x @ p["w"].astype(x.dtype)
+    y = _tap_post(name, y)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def dense_expert(p: dict, x: jnp.ndarray, name: Optional[str] = None) -> jnp.ndarray:
+    """Batched-expert linear: x (E, C, d_in) with stacked weights (E, ...)."""
+    _tap_pre(name, x, expert=True)
+    if "qu_t" in p:
+        f = lambda xe, qv, qu, s1, s2: kops.lowrank_binary_matmul(xe, qv, qu, s1, s2)
+        y = jax.vmap(f)(x, p["qv"], p["qu_t"], p["s1"], p["s2"])
+    elif "lu" in p:
+        y = jax.vmap(_ste_matmul)(
+            {"lu": p["lu"], "lv": p["lv"], "s1": p["s1"], "s2": p["s2"]}, x)
+    else:
+        y = jnp.einsum("ecd,edf->ecf", x, p["w"].astype(x.dtype))
+    return _tap_post(name, y, expert=True)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, D/2)
+    if ang.ndim == 2:                                # (S, D/2) -> broadcast B, H
+        ang = ang[None, :, None, :]
+    else:                                            # (B, S, D/2)
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA, optional qk-norm / bias / sliding window), flash-chunked
+# --------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, cfg.qkv_bias, dtype),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, cfg.qkv_bias, dtype),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, cfg.qkv_bias, dtype),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, False, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _mask(q_pos, k_pos, window: int, causal: bool = True):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def sdpa(q, k, v, mask, scale):
+    """q (B,Sq,Hq,D), k/v (B,Sk,Hkv,Dk/Dv), mask (Sq,Sk) -> (B,Sq,Hq,Dv)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return o.reshape(B, Sq, Hq, -1)
+
+
+def sdpa_flash(q, k, v, q_pos, k_pos, scale, window=0,
+               q_chunk=512, kv_chunk=1024):
+    """Memory-bounded attention: outer scan over query chunks, inner scan
+    over key chunks with an online softmax (flash-attention algorithm in
+    pure JAX; XLA pipelines it, and activation footprint is O(chunk^2))."""
+    B, Sq, Hq, D = q.shape
+    Hkv, Dv = k.shape[2], v.shape[-1]
+    G = Hq // Hkv
+    q_chunk = min(q_chunk, Sq)
+    Sk = k.shape[1]
+    kv_chunk = min(kv_chunk, Sk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    assert Sq % q_chunk == 0 and Sk % kv_chunk == 0
+
+    qc = q.reshape(B, nq, q_chunk, Hkv, G, D)
+    qp = q_pos.reshape(nq, q_chunk)
+    kc = k.reshape(B, nk, kv_chunk, Hkv, D)
+    vc = v.reshape(B, nk, kv_chunk, Hkv, Dv)
+    kp = k_pos.reshape(nk, kv_chunk)
+
+    def q_body(_, qi):
+        qblk, qpos = qi                                   # (B,cq,Hkv,G,D), (cq,)
+
+        @jax.checkpoint
+        def kv_body(carry, ki):
+            # rematted: without this the backward pass materializes the
+            # (..., q_chunk, kv_chunk) pexp tensor for EVERY (layer, q, kv)
+            # chunk triple at once — O(S^2) residents (see EXPERIMENTS.md
+            # §Perf iteration 1).
+            m_run, l_run, acc = carry
+            kblk, vblk, kpos = ki
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk).astype(jnp.float32) * scale
+            msk = _mask(qpos, kpos, window)
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            alpha = jnp.exp(m_run - m_new)
+            pexp = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + pexp.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", pexp.astype(vblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full((B, Hkv, G, q_chunk), -jnp.inf, jnp.float32),
+            jnp.zeros((B, Hkv, G, q_chunk), jnp.float32),
+            jnp.zeros((B, Hkv, G, q_chunk, Dv), jnp.float32),
+        )
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_body, init,
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), kp),
+        )
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return None, out.astype(v.dtype)                  # (B,Hkv,G,cq,Dv)
+
+    _, outs = jax.lax.scan(q_body, None, (qc.transpose(1, 0, 2, 3, 4, 5), qp))
+    # outs: (nq, B, Hkv, G, cq, Dv) -> (B, Sq, Hq, Dv)
+    o = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, Hq, Dv)
+    return o
+
+
+def attention(p, cfg, x, positions, cache=None, cache_pos=None):
+    """GQA attention. Returns (out, new_cache).
+
+    cache: None (training) or dict(k=(B,Smax,Hkv,D), v=...) being filled.
+    cache_pos: scalar write offset for decode; positions: (S,) absolute.
+    """
+    flash_threshold = cfg.flash_threshold
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = dense(p["wq"], x, "attn.wq").reshape(B, S, cfg.n_heads, hd)
+    k = dense(p["wk"], x, "attn.wk").reshape(B, S, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x, "attn.wv").reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    scale = 1.0 / math.sqrt(hd)
+    window = cfg.sliding_window
+    G = cfg.n_heads // cfg.n_kv_heads
+
+    if cache is None:
+        # GQA via k/v head-repeat: the grouped (Hkv, G) reshape is not
+        # representable as a tiling of the model axis when Hkv < axis
+        # size, and GSPMD silently replicates the whole attention block
+        # (§Perf iteration 1). Repeating k/v to Hq heads keeps a clean
+        # head axis that shards 16-way; the repeat itself is free on the
+        # TP axis (each shard only materializes its own heads).
+        if G > 1:
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+        q = constrain(q, "dp", None, "tp", None)
+        k = constrain(k, "dp", None, "tp", None)
+        v = constrain(v, "dp", None, "tp", None)
+        if S >= flash_threshold:
+            o = sdpa_flash(q, k, v, positions, positions, scale, window,
+                           cfg.flash_q_chunk, cfg.flash_kv_chunk)
+        else:
+            o = sdpa(q, k, v, _mask(positions, positions, window), scale)
+        o = constrain(o, "dp", None, "tp", None)
+        new_cache = None
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, cache_pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        if S > 1:
+            # prompt prefill (cache was empty at cache_pos=0): attend over
+            # the fresh k/v directly — identical math, and it never runs
+            # flash over the (possibly sequence-sharded) cache buffer.
+            if G > 1:
+                k = jnp.repeat(k, G, axis=2)
+                v = jnp.repeat(v, G, axis=2)
+            q = constrain(q, "dp", None, "tp", None)
+            k = constrain(k, "dp", None, "tp", None)
+            v = constrain(v, "dp", None, "tp", None)
+            if S >= flash_threshold:
+                o = sdpa_flash(q, k, v, positions, positions, scale, window,
+                               cfg.flash_q_chunk, cfg.flash_kv_chunk)
+            else:
+                o = sdpa(q, k, v, _mask(positions, positions, window), scale)
+            o = constrain(o, "dp", None, "tp", None)
+        else:
+            # single-token decode: grouped GQA against the cache (which
+            # stays at Hkv heads — sharded on heads when divisible, else
+            # on sequence; softmax/contraction over a sharded sequence
+            # costs three small all-reduces).
+            Smax = ck.shape[1]
+            k_pos = jnp.arange(Smax)
+            valid = k_pos < cache_pos + S
+            msk = _mask(positions, k_pos, window) & valid[None, :]
+            o = sdpa(q, ck, cv, msk, scale)
+    return dense(p["wo"], o.reshape(B, S, -1), "attn.wo"), new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — compressed KV cache, absorbed decode path
+# --------------------------------------------------------------------------
+
+
+def init_mla(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv, dc = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    return {
+        "wq": init_linear(ks[0], d, H * (dn + dr), False, dtype),
+        "w_dkv": init_linear(ks[1], d, dc, False, dtype),      # KV down-proj
+        "w_kr": init_linear(ks[2], d, dr, False, dtype),       # shared rope key
+        "w_uk": init_linear(ks[3], dc, H * dn, False, dtype),  # K up-proj
+        "w_uv": init_linear(ks[4], dc, H * dv, False, dtype),  # V up-proj
+        "wo": init_linear(ks[5], H * dv, d, False, dtype),
+        "kv_norm": jnp.ones((dc,), dtype),
+    }
+
+
+def mla_attention(p, cfg, x, positions, cache=None, cache_pos=None):
+    """MLA. Cache stores the *compressed* c_kv + shared rope key — the
+    paper-relevant serving trick (cache is kv_lora_rank + rope_dim wide)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv, dc = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    q = dense(p["wq"], x, "attn.wq").reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rms_norm(dense(p["w_dkv"], x, "attn.w_dkv"), p["kv_norm"], cfg.norm_eps)  # (B,S,dc)
+    k_rope = apply_rope(dense(p["w_kr"], x, "attn.w_kr")[:, :, None, :], positions,
+                        cfg.rope_theta)                                 # (B,S,1,dr)
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    if cache is not None:
+        c_kv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_pos, 0))
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            (0, cache_pos, 0, 0))
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        T = c_kv.shape[1]
+        k_pos = jnp.arange(T)
+        msk = _mask(positions, k_pos, 0) & (k_pos < cache_pos + S)[None, :]
+    else:
+        new_cache = None
+        T = S
+        k_pos = positions
+        msk = _mask(positions, k_pos, 0)
+
+    w_uk = p["w_uk"]["w"].astype(x.dtype).reshape(dc, H, dn)
+    w_uv = p["w_uv"]["w"].astype(x.dtype).reshape(dc, H, dv)
+    # absorbed scores: q_nope @ W_uk gives per-head query in latent space,
+    # scored directly against the compressed cache (no K materialization).
+    q_lat = jnp.einsum("bshd,chd->bshc", q_nope, w_uk)           # (B,S,H,dc)
+    s = jnp.einsum("bshc,btc->bhst", q_lat, c_kv).astype(jnp.float32)
+    s += jnp.einsum("bshd,btxd->bhst", q_rope,
+                    k_rope.astype(q_rope.dtype)).astype(jnp.float32)
+    s *= scale
+    s = jnp.where(msk[None, None], s, -1e30)
+    prob = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhst,btc->bshc", prob, c_kv)             # (B,S,H,dc)
+    o = jnp.einsum("bshc,chd->bshd", o_lat, w_uv)                # absorbed V up
+    return dense(p["wo"], o.reshape(B, S, H * dv), "attn.wo"), new_cache
+
+
+# --------------------------------------------------------------------------
+# cross-attention (VLM layers) — gated, non-causal, image K/V cacheable
+# --------------------------------------------------------------------------
+
+
+def init_cross_attention(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 5)
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, False, dtype),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, False, dtype),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, False, dtype),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, False, dtype),
+        "gate": jnp.zeros((), dtype),
+        "q_norm": jnp.ones((hd,), dtype),
+        "k_norm": jnp.ones((hd,), dtype),
+    }
+
+
+def cross_attention(p, cfg, x, image_kv):
+    """image_kv: (k, v) precomputed from image embeddings, each
+    (B, n_img, Hkv, D). Gated output (tanh gate, llama-3.2-vision style)."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = dense(p["wq"], x, "xattn.wq").reshape(B, S, cfg.n_heads, hd)
+    q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    k, v = image_kv
+    n_img = k.shape[1]
+    msk = jnp.ones((S, n_img), bool)
+    o = sdpa(q, k, v, msk, 1.0 / math.sqrt(hd))
+    return jnp.tanh(p["gate"]).astype(x.dtype) * dense(p["wo"], o.reshape(B, S, -1), "xattn.wo")
+
+
+def image_kv(p, cfg, image_embeds):
+    """Project stubbed image patch embeddings once (prefill / per-batch)."""
+    B, n_img, _ = image_embeds.shape
+    hd = cfg.head_dim
+    k = dense(p["wk"], image_embeds, "xattn.wk").reshape(B, n_img, cfg.n_kv_heads, hd)
+    k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    v = dense(p["wv"], image_embeds, "xattn.wv").reshape(B, n_img, cfg.n_kv_heads, hd)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# FFN — SwiGLU
+# --------------------------------------------------------------------------
+
+
+def init_ffn(key, d_model, d_ff, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": init_linear(ks[0], d_model, d_ff, False, dtype),
+        "w_up": init_linear(ks[1], d_model, d_ff, False, dtype),
+        "w_down": init_linear(ks[2], d_ff, d_model, False, dtype),
+    }
+
+
+def ffn(p, x, prefix="ffn"):
+    g = constrain(dense(p["w_gate"], x, prefix + ".w_gate"),
+                  "dp", None, "tp")
+    u = constrain(dense(p["w_up"], x, prefix + ".w_up"), "dp", None, "tp")
+    return dense(p["w_down"], silu(g) * u, prefix + ".w_down")
+
+
+# --------------------------------------------------------------------------
+# MoE — sort-based capacity dispatch (production) + dense oracle (tests)
+# --------------------------------------------------------------------------
+
+
+def init_moe(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 5)
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "router": {"w": (jax.random.normal(ks[0], (d, E), jnp.float32) * std
+                         ).astype(jnp.float32)},   # router stays FP32
+        "w_gate": {"w": (jax.random.normal(ks[1], (E, d, f), jnp.float32) * std).astype(dtype)},
+        "w_up": {"w": (jax.random.normal(ks[2], (E, d, f), jnp.float32) * std).astype(dtype)},
+        "w_down": {"w": (jax.random.normal(ks[3], (E, f, d), jnp.float32)
+                         * (1.0 / math.sqrt(f))).astype(dtype)},
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_ffn(ks[4], d, cfg.n_shared_experts * f, dtype)
+    return p
+
+
+def _route(p, cfg, xf):
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"])        # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, cfg.n_experts_per_tok)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    return topw, topi, probs
+
+
+def _dp_groups(T: int) -> int:
+    """Dispatch group count == data-parallel degree (1 when no policy)."""
+    pol = _ACT_SHARD[0]
+    if pol is None or pol.get("dp") is None:
+        return 1
+    g = _axis_len(pol["mesh"], pol["dp"])
+    return g if T % g == 0 else 1
+
+
+def _dispatch_group(xg, wg, ig, E: int, capacity: int):
+    """Sort-based capacity dispatch for one token group.
+    xg (t, d); wg/ig (t, k). Returns (buf (E, cap, d), dest, st, sw, keep)."""
+    t, d = xg.shape
+    k = ig.shape[-1]
+    flat_e = ig.reshape(-1)                                     # (t*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_w = wg.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    starts = jnp.searchsorted(se, jnp.arange(E))
+    rank = jnp.arange(t * k) - starts[se]
+    keep = rank < capacity
+    dest = jnp.where(keep, se * capacity + rank, E * capacity)  # overflow->trash
+    buf = jnp.zeros((E * capacity + 1, d), xg.dtype).at[dest].set(
+        xg[st] * keep[:, None].astype(xg.dtype))
+    return buf[: E * capacity].reshape(E, capacity, d), dest, st, sw, keep
+
+
+def _combine_group(ob, dest, st, sw, keep, t: int):
+    """(E*cap, d) expert outputs -> (t, d) token outputs for one group."""
+    d = ob.shape[-1]
+    ob = jnp.concatenate([ob, jnp.zeros((1, d), ob.dtype)], axis=0)
+    contrib = ob[dest] * (sw * keep).astype(ob.dtype)[:, None]
+    return jnp.zeros((t, d), ob.dtype).at[st].add(contrib)
+
+
+def moe(p, cfg, x, capacity: Optional[int] = None):
+    """Capacity-bounded sort-based MoE with *grouped* dispatch.
+
+    Tokens are dispatched within data-parallel groups (GShard pattern):
+    each group builds its own (E, cap_local, d) buffer with purely local
+    scatters, and the group->expert transpose of the sharded dim is the
+    all-to-all GSPMD emits. Without grouping, the single global scatter
+    is unpartitionable and the whole (E, cap_global, d) buffer
+    replicates on every device (§Perf iteration: 306 GB -> fits)."""
+    B, S, d = x.shape
+    T = B * S
+    k = cfg.n_experts_per_tok
+    E = cfg.n_experts
+    G = _dp_groups(T)
+    t = T // G
+    xf = x.reshape(T, d)
+    topw, topi, _ = _route(p, cfg, xf)
+
+    if capacity is None:
+        capacity = int(math.ceil(t * k / E * cfg.capacity_factor))
+        capacity = max(8, -(-capacity // 8) * 8)
+
+    xg = constrain(xf.reshape(G, t, d), "dp", None, None)
+    wg = topw.reshape(G, t, k)
+    ig = topi.reshape(G, t, k)
+    buf, dest, st, sw, keep = jax.vmap(
+        lambda a, b, c: _dispatch_group(a, b, c, E, capacity))(xg, wg, ig)
+
+    # (G, E, cap, d) -> (E, G*cap, d): dp-shard -> expert-shard transpose
+    # (the all-to-all); the token dim stays dp-sharded so the expert
+    # buffer is 2-axis sharded — E on model, tokens on data.
+    eb = constrain(buf.transpose(1, 0, 2, 3).reshape(E, G * capacity, d),
+                   "tp", "dp", None)
+    h = silu(dense_expert(p["w_gate"], eb, "moe.w_gate")) \
+        * dense_expert(p["w_up"], eb, "moe.w_up")
+    h = constrain(h, "tp", "dp", None)
+    ob = dense_expert(p["w_down"], h, "moe.w_down")     # (E, G*cap, d)
+    ob_g = constrain(
+        ob.reshape(E, G, capacity, d).transpose(1, 0, 2, 3),
+        "dp", None, None, None).reshape(G, E * capacity, d)
+    yf = jax.vmap(lambda o, de, s, w_, kp: _combine_group(o, de, s, w_,
+                                                          kp, t))(
+        ob_g, dest, st, sw, keep)
+    y = yf.reshape(B, S, d).astype(x.dtype)
+    if cfg.n_shared_experts:
+        y = y + ffn(p["shared"], x, prefix="moe.shared")
+    return y
+
+
+def moe_dense_oracle(p, cfg, x):
+    """Reference: run every expert on every token (tests only)."""
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    topw, topi, _ = _route(p, cfg, xf)
+    w_full = jnp.zeros((xf.shape[0], cfg.n_experts), jnp.float32)
+    w_full = w_full.at[jnp.arange(xf.shape[0])[:, None], topi].set(topw)
+    h = jnp.einsum("td,edf->tef", xf, p["w_gate"]["w"].astype(xf.dtype))
+    u = jnp.einsum("td,edf->tef", xf, p["w_up"]["w"].astype(xf.dtype))
+    o = jnp.einsum("tef,efd->ted", silu(h) * u, p["w_down"]["w"].astype(xf.dtype))
+    y = jnp.einsum("ted,te->td", o, w_full.astype(o.dtype)).reshape(B, S, d)
+    if cfg.n_shared_experts:
+        y = y + ffn(p["shared"], x)
+    return y
+
+
+# --------------------------------------------------------------------------
+# Mamba2 (SSD) — chunked parallel form + O(1) recurrent decode step
+# --------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg, dtype=jnp.bfloat16):
+    """Mamba2 mixer with *split* input projections (z / x / B / C / dt
+    instead of the reference fused in_proj). Depthwise conv is per-channel
+    so splitting is exact; the split is what makes model-axis tensor
+    parallelism possible on TPU — x/z (and thus the SSD head dim) shard on
+    ``model`` while the small B/C/dt streams stay replicated (DESIGN.md
+    §3/§4)."""
+    ks = jax.random.split(key, 7)
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    gn = g * n
+    p = {
+        "wz": init_linear(ks[0], d, di, False, dtype),
+        "wx": init_linear(ks[1], d, di, False, dtype),
+        "wB": init_linear(ks[2], d, gn, False, dtype),
+        "wC": init_linear(ks[3], d, gn, False, dtype),
+        "wdt": init_linear(ks[4], d, H, False, dtype),
+        "out_proj": init_linear(ks[5], di, d, False, dtype),
+        "conv_x": (jax.random.normal(ks[6], (cfg.ssm_conv, di),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_bx": jnp.zeros((di,), dtype),
+        "conv_B": (jax.random.normal(ks[6], (cfg.ssm_conv, gn),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_bB": jnp.zeros((gn,), dtype),
+        "conv_C": (jax.random.normal(ks[6], (cfg.ssm_conv, gn),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_bC": jnp.zeros((gn,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": (jax.random.uniform(ks[6], (H,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))),
+        "norm_w": jnp.ones((di,), dtype),
+    }
+    return p
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via K shifted adds. x (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        y = y + pad[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (y + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk):
+    """Chunked state-space-dual scan (Mamba2 Alg. from arXiv:2405.21060).
+
+    xh: (B,S,H,P), dt: (B,S,H) (post-softplus), A: (H,) negative,
+    Bm/Cm: (B,S,G,N). Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    L = min(chunk, S)
+    S0 = S
+    if S % L:
+        # zero-pad to a chunk multiple: padded steps have dt=0, so they
+        # neither decay the state (exp(0)=1) nor inject input — exact.
+        pad = L - S % L
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // L
+
+    xc = xh.reshape(Bsz, nc, L, H, P)
+    dtc = dt.reshape(Bsz, nc, L, H)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, L, G, N), rep, axis=3)   # (B,nc,L,H,N)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, L, G, N), rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                            # (B,nc,L,H) <=0
+    dA_cs = jnp.cumsum(dA, axis=2)                               # inclusive
+
+    # --- intra-chunk (block-diagonal "attention") -------------------------
+    # decay L[i,j] = exp(dA_cs[i] - dA_cs[j]) for j<=i
+    diff = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]     # (B,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bclhn,bcmhn->bclmh", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+    w_ij = scores * decay * dtc[:, :, None, :, :]                # dt_j factor
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", w_ij, xc.astype(jnp.float32))
+
+    # --- chunk summary states --------------------------------------------
+    seg = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)                   # decay to end
+    states = jnp.einsum("bclh,bclhn,bclhp->bchpn",
+                        (seg * dtc).astype(jnp.float32),
+                        Bc.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # --- inter-chunk recurrence -------------------------------------------
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                    # (B,nc,H)
+
+    def body(carry, inp):
+        st_prev = carry                                          # (B,H,P,N)
+        st_c, dec = inp                                          # (B,H,P,N),(B,H)
+        new = st_prev * dec[:, :, None, None] + st_c
+        return new, st_prev
+
+    st0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    final, prevs = jax.lax.scan(
+        body, st0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prevs = prevs.transpose(1, 0, 2, 3, 4)                       # (B,nc,H,P,N)
+
+    inter_decay = jnp.exp(dA_cs)                                 # (B,nc,L,H)
+    y_inter = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                         Cc.astype(jnp.float32), prevs, inter_decay)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y[:, :S0], final
+
+
+def _mamba_streams(p, x):
+    """Project the five input streams (taps named per linear)."""
+    z = dense(p["wz"], x, "mixer.wz")
+    xs = dense(p["wx"], x, "mixer.wx")
+    Bm = dense(p["wB"], x, "mixer.wB")
+    Cm = dense(p["wC"], x, "mixer.wC")
+    dt = dense(p["wdt"], x, "mixer.wdt")
+    return z, xs, Bm, Cm, dt
+
+
+def _conv_step(buf, new, w, b):
+    """One-token depthwise causal conv from a (B, K-1, C) ring buffer.
+    new: (B, 1, C). Returns (y (B, C) f32 pre-activation, new buffer)."""
+    cat = jnp.concatenate([buf, new.astype(buf.dtype)], axis=1)   # (B,K,C)
+    y = (cat.astype(jnp.float32) * w.astype(jnp.float32)[None]).sum(1) \
+        + b.astype(jnp.float32)
+    return y, cat[:, 1:]
+
+
+def mamba2(p, cfg, x, state=None):
+    """Mamba2 mixer. state: None (training / full-seq) or dict with
+    'ssm' (B,H,P,N) f32 and conv ring buffers for decode."""
+    B, S, d = x.shape
+    di, H, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    z, xs, Bm, Cm, dt = _mamba_streams(p, x)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                     # (H,) < 0
+
+    if state is None:
+        xs = silu(_causal_conv(xs, p["conv_x"], p["conv_bx"]))
+        Bm = silu(_causal_conv(Bm, p["conv_B"], p["conv_bB"]))
+        Cm = silu(_causal_conv(Cm, p["conv_C"], p["conv_bC"]))
+        xs = constrain(xs.reshape(B, S, H, P), "dp", None, "tp", None)
+        Bm = Bm.reshape(B, S, g, n)
+        Cm = Cm.reshape(B, S, g, n)
+        y, _ = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+        y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+        new_state = None
+    else:
+        # single-token recurrent step (S == 1)
+        xs1, cx = _conv_step(state["conv_x"], xs, p["conv_x"], p["conv_bx"])
+        Bm1, cB = _conv_step(state["conv_B"], Bm, p["conv_B"], p["conv_bB"])
+        Cm1, cC = _conv_step(state["conv_C"], Cm, p["conv_C"], p["conv_bC"])
+        xs = silu(xs1).reshape(B, H, P)
+        Bm = jnp.repeat(silu(Bm1).reshape(B, g, n), H // g, axis=1)
+        Cm = jnp.repeat(silu(Cm1).reshape(B, g, n), H // g, axis=1)
+        dt1 = dt[:, 0]                                           # (B,H)
+        dA = jnp.exp(dt1 * A[None, :])                           # (B,H)
+        ssm = state["ssm"] * dA[:, :, None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt1, Bm, xs)
+        y = jnp.einsum("bhn,bhpn->bhp", Cm, ssm)
+        y = y + p["D"][None, :, None] * xs
+        y = y[:, None]                                           # (B,1,H,P)
+        new_state = {"ssm": ssm, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * silu(z), p["norm_w"], cfg.norm_eps)
+    return dense(p["out_proj"], y, "mixer.out_proj"), new_state

@@ -1,0 +1,549 @@
+"""Model assembly: init / forward / loss / prefill / decode for every
+assigned family (dense, moe, mla, ssm, hybrid, vlm, audio).
+
+Layer stacks are *stacked pytrees* (leading axis = layer) consumed by
+``jax.lax.scan`` so HLO size — and therefore AOT compile time for the
+512-device dry-run — is O(1) in depth. Heterogeneous stacks are expressed
+as structured scans:
+
+- deepseek  : ``first_k_dense`` unscanned dense layers + scanned MoE layers
+- vlm       : scan over groups of (k-1 self layers -> 1 cross-attn layer)
+- hybrid    : scan over SSM layers with a *shared* attention block applied
+              every ``attn_every`` layers via lax.cond (params closed over,
+              per-application KV caches carried)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+
+def _init_block(key, cfg: ModelConfig, kind: str, d_ff: Optional[int] = None):
+    """One residual block. kind: attn_ffn | attn_moe | mamba | cross."""
+    dt = _dt(cfg)
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    if kind == "mamba":
+        return {"ln": jnp.ones((d,), dt), "mixer": L.init_mamba2(k1, cfg, dt)}
+    if kind == "cross":
+        return {
+            "ln1": jnp.ones((d,), dt),
+            "xattn": L.init_cross_attention(k1, cfg, dt),
+            "ln2": jnp.ones((d,), dt),
+            "ffn": L.init_ffn(k2, d, cfg.d_ff, dt),
+            "ffn_gate": jnp.zeros((), dt),
+        }
+    attn = (L.init_mla(k1, cfg, dt) if cfg.is_mla
+            else L.init_attention(k1, cfg, dt))
+    p = {"ln1": jnp.ones((d,), dt), "attn": attn, "ln2": jnp.ones((d,), dt)}
+    if kind == "attn_moe":
+        p["moe"] = L.init_moe(k2, cfg, dt)
+    else:
+        p["ffn"] = L.init_ffn(k2, d, d_ff or cfg.d_ff, dt)
+    return p
+
+
+def _stack_init(key, cfg, n, kind, d_ff=None):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_block(k, cfg, kind, d_ff))(keys)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dt = _dt(cfg)
+    ke, kl, kh, ks = jax.random.split(key, 4)
+    p: Params = {"ln_f": jnp.ones((cfg.d_model,), dt)}
+
+    # embeddings / head
+    if cfg.family == "audio":
+        p["embed"] = (jax.random.normal(
+            ke, (cfg.n_codebooks, cfg.vocab_size, cfg.d_model), jnp.float32)
+            * 0.02).astype(dt)
+        p["lm_head"] = {"w": (jax.random.normal(
+            kh, (cfg.d_model, cfg.n_codebooks * cfg.vocab_size), jnp.float32)
+            / math.sqrt(cfg.d_model)).astype(dt)}
+    else:
+        p["embed"] = (jax.random.normal(
+            ke, (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02).astype(dt)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = {"w": (jax.random.normal(
+                kh, (cfg.d_model, cfg.vocab_size), jnp.float32)
+                / math.sqrt(cfg.d_model)).astype(dt)}
+
+    fam = cfg.family
+    if fam in ("dense", "audio"):
+        p["layers"] = _stack_init(kl, cfg, cfg.n_layers, "attn_ffn")
+    elif fam == "moe":
+        n_moe = cfg.n_layers - cfg.first_k_dense
+        if cfg.first_k_dense:
+            p["dense_layers"] = _stack_init(
+                ks, cfg, cfg.first_k_dense, "attn_ffn", cfg.dense_d_ff or cfg.d_ff)
+        p["layers"] = _stack_init(kl, cfg, n_moe, "attn_moe")
+    elif fam == "ssm":
+        p["layers"] = _stack_init(kl, cfg, cfg.n_layers, "mamba")
+    elif fam == "hybrid":
+        p["layers"] = _stack_init(kl, cfg, cfg.n_layers, "mamba")
+        p["shared_attn"] = _init_block(ks, cfg, "attn_ffn")
+    elif fam == "vlm":
+        per = cfg.cross_attn_every
+        assert cfg.n_layers % per == 0
+        groups = cfg.n_layers // per
+        kg, kc = jax.random.split(kl)
+        gkeys = jax.random.split(kg, groups)
+        p["self_layers"] = jax.vmap(
+            lambda k: _stack_init(k, cfg, per - 1, "attn_ffn"))(gkeys)
+        p["cross_layers"] = _stack_init(kc, cfg, groups, "cross")
+    return p
+
+
+# ===========================================================================
+# block application
+# ===========================================================================
+
+
+def _apply_attn_block(p, cfg, x, positions, cache=None, cache_pos=None):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.is_mla:
+        a, new_cache = L.mla_attention(p["attn"], cfg, h, positions, cache, cache_pos)
+    else:
+        a, new_cache = L.attention(p["attn"], cfg, h, positions, cache, cache_pos)
+    x = x + a
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        x = x + L.moe(p["moe"], cfg, h)
+    else:
+        x = x + L.ffn(p["ffn"], h)
+    return x, new_cache
+
+
+def _apply_mamba_block(p, cfg, x, state=None):
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    y, new_state = L.mamba2(p["mixer"], cfg, h, state)
+    return x + y, new_state
+
+
+def _apply_cross_block(p, cfg, x, img_kv):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + L.cross_attention(p["xattn"], cfg, h, img_kv)
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + jnp.tanh(p["ffn_gate"]).astype(x.dtype) * L.ffn(p["ffn"], h)
+    return x
+
+
+def _maybe_remat(f, cfg, training):
+    if cfg.remat and training:
+        return jax.checkpoint(f)
+    return f
+
+
+# ===========================================================================
+# backbone forward (training / teacher-forcing; no cache)
+# ===========================================================================
+
+
+def embed_tokens(params, cfg, tokens):
+    if cfg.family == "audio":
+        # tokens: (B, S, K) -> sum of per-codebook embeddings
+        emb = params["embed"]                            # (K, V, d)
+        x = jnp.zeros(tokens.shape[:2] + (cfg.d_model,), emb.dtype)
+        for k in range(cfg.n_codebooks):
+            x = x + jnp.take(emb[k], tokens[..., k], axis=0)
+        return x
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def backbone(params, cfg: ModelConfig, tokens, image_embeds=None,
+             training=False):
+    """Full-sequence forward to final hidden states (B, S, d)."""
+    x = embed_tokens(params, cfg, tokens)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    fam = cfg.family
+
+    if fam in ("dense", "audio", "moe"):
+        if fam == "moe" and cfg.first_k_dense:
+            def dbody(h, inp):
+                lp, idx = inp
+                L.set_scope("dense_layers", idx)
+                h, _ = _apply_attn_block(lp, cfg, h, positions)
+                return h, None
+            x, _ = jax.lax.scan(_maybe_remat(dbody, cfg, training), x,
+                                (params["dense_layers"],
+                                 jnp.arange(cfg.first_k_dense)))
+
+        def body(h, inp):
+            lp, idx = inp
+            L.set_scope("layers", idx)
+            h, _ = _apply_attn_block(lp, cfg, h, positions)
+            return h, None
+        n_scan = cfg.n_layers - cfg.first_k_dense
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg, training), x,
+                            (params["layers"], jnp.arange(n_scan)))
+
+    elif fam == "ssm":
+        def body(h, inp):
+            lp, idx = inp
+            L.set_scope("layers", idx)
+            h, _ = _apply_mamba_block(lp, cfg, h)
+            return h, None
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg, training), x,
+                            (params["layers"], jnp.arange(cfg.n_layers)))
+
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def body(h, inp):
+            lp, idx = inp
+            L.set_scope("layers", idx)
+            h, _ = _apply_mamba_block(lp, cfg, h)
+
+            def do_attn(hh):
+                L.set_scope("shared_attn", (idx + 1) // cfg.attn_every - 1)
+                out = _apply_attn_block(shared, cfg, hh, positions)[0]
+                L.set_scope("", None)
+                return out
+            h = jax.lax.cond(
+                (idx + 1) % cfg.attn_every == 0, do_attn,
+                lambda hh: hh, h)
+            return h, None
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg, training), x,
+                            (params["layers"], jnp.arange(cfg.n_layers)))
+
+    elif fam == "vlm":
+        assert image_embeds is not None
+        per = cfg.cross_attn_every
+
+        def group(h, gp):
+            selfs, crossp, gidx = gp
+
+            def sbody(hh, sinp):
+                lp, sidx = sinp
+                L.set_scope("self_layers", gidx * (per - 1) + sidx)
+                hh, _ = _apply_attn_block(lp, cfg, hh, positions)
+                return hh, None
+            h, _ = jax.lax.scan(_maybe_remat(sbody, cfg, training), h,
+                                (selfs, jnp.arange(per - 1)))
+            L.set_scope("cross_layers", gidx)
+            kv = L.image_kv(crossp["xattn"], cfg, image_embeds)
+            h = _apply_cross_block(crossp, cfg, h, kv)
+            return h, None
+        x, _ = jax.lax.scan(_maybe_remat(group, cfg, training), x,
+                            (params["self_layers"], params["cross_layers"],
+                             jnp.arange(cfg.n_layers // per)))
+
+    L.set_scope("", None)
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def _head_w(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]["w"]
+
+
+def logits_fn(params, cfg, hidden):
+    w = _head_w(params, cfg)
+    out = hidden @ w.astype(hidden.dtype)
+    if cfg.family == "audio":
+        out = out.reshape(*hidden.shape[:-1], cfg.n_codebooks, cfg.vocab_size)
+    return out
+
+
+def forward(params, cfg, tokens, image_embeds=None):
+    h = backbone(params, cfg, tokens, image_embeds)
+    return logits_fn(params, cfg, h)
+
+
+# ===========================================================================
+# loss — sequence-chunked cross-entropy (Cut-Your-Losses-style; the full
+# (B,S,V) logits tensor is never materialized)
+# ===========================================================================
+
+
+def _xent(logits, labels):
+    """logits (..., V) f32; labels (...) int32 with -1 = masked."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return ((lse - ll) * mask).sum(), mask.sum()
+
+
+def loss_fn(params, cfg: ModelConfig, batch, training=True):
+    """batch: tokens (B,S[,K]), labels (B,S[,K]), optional image_embeds."""
+    h = backbone(params, cfg, batch["tokens"], batch.get("image_embeds"),
+                 training=training)
+    labels = batch["labels"]
+    w = _head_w(params, cfg)
+    S = h.shape[1]
+    chunk = cfg.loss_chunk or S
+    chunk = min(chunk, S)
+    if S % chunk != 0:
+        chunk = S
+
+    def chunk_loss(h_c, y_c):
+        logits = L.constrain(h_c @ w.astype(h_c.dtype), "dp", None, "tp")
+        if cfg.family == "audio":
+            logits = logits.reshape(*h_c.shape[:-1], cfg.n_codebooks,
+                                    cfg.vocab_size)
+        return _xent(logits, y_c)
+
+    if chunk == S:
+        tot, cnt = chunk_loss(h, labels)
+    else:
+        nc = S // chunk
+        hc = h.reshape(h.shape[0], nc, chunk, h.shape[-1]).transpose(1, 0, 2, 3)
+        yc = labels.reshape(labels.shape[0], nc, chunk, *labels.shape[2:]
+                            ).swapaxes(0, 1)
+
+        def body(carry, inp):
+            t, c = carry
+            dl, dc = jax.checkpoint(chunk_loss)(*inp)
+            return (t + dl, c + dc), None
+        (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                     (hc, yc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ===========================================================================
+# KV / state caches + prefill / decode
+# ===========================================================================
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    dt = _dt(cfg)
+    fam = cfg.family
+    hd = cfg.head_dim
+
+    def attn_cache(n):
+        if cfg.is_mla:
+            return {
+                "c_kv": jnp.zeros((n, batch, max_len, cfg.kv_lora_rank), dt),
+                "k_rope": jnp.zeros((n, batch, max_len, 1, cfg.qk_rope_dim), dt),
+            }
+        return {
+            "k": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), dt),
+        }
+
+    def ssm_state(n):
+        gn = cfg.ssm_groups * cfg.ssm_state
+        return {
+            "ssm": jnp.zeros((n, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32),
+            "conv_x": jnp.zeros((n, batch, cfg.ssm_conv - 1, cfg.d_inner), dt),
+            "conv_B": jnp.zeros((n, batch, cfg.ssm_conv - 1, gn), dt),
+            "conv_C": jnp.zeros((n, batch, cfg.ssm_conv - 1, gn), dt),
+        }
+
+    if fam in ("dense", "audio"):
+        return {"layers": attn_cache(cfg.n_layers)}
+    if fam == "moe":
+        c = {"layers": attn_cache(cfg.n_layers - cfg.first_k_dense)}
+        if cfg.first_k_dense:
+            c["dense_layers"] = attn_cache(cfg.first_k_dense)
+        return c
+    if fam == "ssm":
+        return {"layers": ssm_state(cfg.n_layers)}
+    if fam == "hybrid":
+        n_apps = cfg.n_layers // cfg.attn_every
+        win = min(max_len, cfg.sliding_window or max_len)
+        return {"layers": ssm_state(cfg.n_layers),
+                "shared_attn": attn_cache(n_apps),
+                "window": win}
+    if fam == "vlm":
+        per = cfg.cross_attn_every
+        groups = cfg.n_layers // per
+        sc = attn_cache(groups * (per - 1))
+        sc = jax.tree.map(lambda a: a.reshape(groups, per - 1, *a.shape[1:]), sc)
+        return {
+            "self_layers": sc,
+            "cross_kv": {
+                "k": jnp.zeros((groups, batch, cfg.n_image_tokens,
+                                cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((groups, batch, cfg.n_image_tokens,
+                                cfg.n_kv_heads, hd), dt),
+            },
+        }
+    raise ValueError(fam)
+
+
+def _cached_forward(params, cfg, tokens, cache, pos, image_embeds=None):
+    """Shared implementation for prefill (S>=1) and decode (S==1).
+
+    pos: scalar int — absolute position of tokens[:, 0].
+    Returns (hidden, new_cache)."""
+    x = embed_tokens(params, cfg, tokens)
+    S = x.shape[1]
+    positions = pos + jnp.arange(S)
+    fam = cfg.family
+
+    if fam in ("dense", "audio", "moe"):
+        new_cache = dict(cache)
+        if fam == "moe" and cfg.first_k_dense:
+            def dbody(h, inp):
+                lp, lc = inp
+                h, nc = _apply_attn_block(lp, cfg, h, positions, lc, pos)
+                return h, nc
+            x, ncache = jax.lax.scan(dbody, x, (params["dense_layers"],
+                                                cache["dense_layers"]))
+            new_cache["dense_layers"] = ncache
+
+        def body(h, inp):
+            lp, lc = inp
+            h, nc = _apply_attn_block(lp, cfg, h, positions, lc, pos)
+            return h, nc
+        x, ncache = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        new_cache["layers"] = ncache
+
+    elif fam == "ssm":
+        if S == 1:
+            def body(h, inp):
+                lp, lc = inp
+                h, ns = _apply_mamba_block(lp, cfg, h, lc)
+                return h, ns
+            x, nstate = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+            new_cache = {"layers": nstate}
+        else:  # prefill: run full-seq SSD, rebuild terminal states
+            def body(h, inp):
+                lp, lc = inp
+                h2 = L.rms_norm(h, lp["ln"], cfg.norm_eps)
+                y, ns = _mamba_prefill(lp["mixer"], cfg, h2, lc)
+                return h + y, ns
+            x, nstate = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+            new_cache = {"layers": nstate}
+
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+        win = cache["window"]
+        n_apps = cfg.n_layers // cfg.attn_every
+
+        def body(carry, inp):
+            h, attn_caches = carry
+            lp, lc, idx = inp
+            if S == 1:
+                h, ns = _apply_mamba_block(lp, cfg, h, lc)
+            else:
+                h2 = L.rms_norm(h, lp["ln"], cfg.norm_eps)
+                y, ns = _mamba_prefill(lp["mixer"], cfg, h2, lc)
+                h = h + y
+            app = (idx + 1) // cfg.attn_every - 1
+
+            def do_attn(op):
+                hh, caches = op
+                lc_a = jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(
+                    a, app, 0, keepdims=False), caches)
+                # window the cache write position
+                wpos = jnp.minimum(pos, win - S) if S > 1 else pos % jnp.maximum(win, 1)
+                hh2, nc = _apply_attn_block(shared, cfg, hh, positions, lc_a, wpos)
+                caches = jax.tree.map(
+                    lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                        a, n.astype(a.dtype), app, 0), caches, nc)
+                return hh2, caches
+
+            h, attn_caches = jax.lax.cond(
+                (idx + 1) % cfg.attn_every == 0, do_attn,
+                lambda op: op, (h, attn_caches))
+            return (h, attn_caches), ns
+
+        (x, nattn), nstate = jax.lax.scan(
+            body, (x, cache["shared_attn"]),
+            (params["layers"], cache["layers"], jnp.arange(cfg.n_layers)))
+        new_cache = {"layers": nstate, "shared_attn": nattn, "window": win}
+
+    elif fam == "vlm":
+        if image_embeds is not None:  # prefill: project image K/V once
+            def proj(crossp):
+                k, v = L.image_kv(crossp["xattn"], cfg, image_embeds)
+                return {"k": k, "v": v}
+            cross_kv = jax.vmap(proj)(params["cross_layers"])
+        else:
+            cross_kv = cache["cross_kv"]
+
+        def group(h, inp):
+            selfs, crossp, scache, ckv = inp
+
+            def sbody(hh, sinp):
+                lp, lc = sinp
+                hh, nc = _apply_attn_block(lp, cfg, hh, positions, lc, pos)
+                return hh, nc
+            h, nsc = jax.lax.scan(sbody, h, (selfs, scache))
+            h = _apply_cross_block(crossp, cfg, h, (ckv["k"], ckv["v"]))
+            return h, nsc
+        x, nsc = jax.lax.scan(group, x, (params["self_layers"],
+                                         params["cross_layers"],
+                                         cache["self_layers"], cross_kv))
+        new_cache = {"self_layers": nsc, "cross_kv": cross_kv}
+
+    else:
+        raise ValueError(fam)
+
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps), new_cache
+
+
+def _mamba_prefill(p, cfg, x, state):
+    """Full-seq mamba forward that also returns the terminal SSM/conv state."""
+    B, S, _ = x.shape
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    K1 = cfg.ssm_conv - 1
+    z, xs, Bm, Cm, dt = L._mamba_streams(p, x)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    tails = {"conv_x": xs[:, -K1:, :], "conv_B": Bm[:, -K1:, :],
+             "conv_C": Cm[:, -K1:, :]}
+    xs = L.silu(L._causal_conv(xs, p["conv_x"], p["conv_bx"]))
+    Bm = L.silu(L._causal_conv(Bm, p["conv_B"], p["conv_bB"]))
+    Cm = L.silu(L._causal_conv(Cm, p["conv_C"], p["conv_bC"]))
+    xs = L.constrain(xs.reshape(B, S, H, P), "dp", None, "tp", None)
+    Bm = Bm.reshape(B, S, g, n)
+    Cm = Cm.reshape(B, S, g, n)
+    y, final = L.ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = L.rms_norm(y * L.silu(z), p["norm_w"], cfg.norm_eps)
+    new_state = {"ssm": final}
+    for k, tail in tails.items():
+        new_state[k] = tail.astype(state[k].dtype)
+    return L.dense(p["out_proj"], y), new_state
+
+
+def prefill(params, cfg, tokens, cache, image_embeds=None):
+    """Process the prompt; returns (last-token logits, filled cache)."""
+    h, cache = _cached_forward(params, cfg, tokens, cache, 0, image_embeds)
+    return logits_fn(params, cfg, h[:, -1:]), cache
+
+
+def decode_step(params, cfg, token, cache, pos):
+    """One decode step. token: (B, 1[, K]); pos: scalar absolute position."""
+    h, cache = _cached_forward(params, cfg, token, cache, pos)
+    return logits_fn(params, cfg, h), cache
+
+
+# ===========================================================================
+# parameter accounting
+# ===========================================================================
+
+
+def count_params(cfg: ModelConfig) -> int:
+    import numpy as np
+    p = jax.eval_shape(lambda k: init_params(k, cfg),
+                       jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(p)))

@@ -1,0 +1,2 @@
+from repro.quant.surgery import (  # noqa: F401
+    abstract_quantized_params, packed_model_bytes, quantizable_paths)

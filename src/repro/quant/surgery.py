@@ -1,0 +1,144 @@
+"""Quantized-model surgery: map an FP parameter tree to its NanoQuant
+packed form — abstractly (ShapeDtypeStructs, for the serving dry-run and
+storage accounting) or concretely (delegated to core.pipeline).
+
+The selection rule mirrors ``core.pipeline.linear_paths``: every linear
+param dict ``{"w": (d_in, d_out)}`` (or stacked experts
+``(E, d_in, d_out)``) inside a transformer block whose min dim is >=
+``min_dim``, excluding routers. Embeddings / lm_head / norms stay FP —
+the paper quantizes transformer linears only.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bpw import nanoquant_bits, rank_for_bpw
+from repro.models.config import ModelConfig
+
+# param-tree keys holding transformer blocks (per family)
+_BLOCK_STACKS = ("layers", "dense_layers", "self_layers", "cross_layers",
+                 "shared_attn")
+# keep in sync with core.pipeline._EXCLUDE (router FP by design; MLA
+# w_uk/w_uv stay FP for the absorbed decode path)
+_EXCLUDE = {"router", "w_uk", "w_uv"}
+
+
+def quantizable_paths(params, cfg: ModelConfig, min_dim: int = 48
+                      ) -> List[Tuple[Tuple[str, ...], Any]]:
+    """[(path, linear-dict)] for every quantizable linear in the model."""
+    out = []
+
+    def walk(d, path):
+        for k in sorted(d.keys()):
+            v = d[k]
+            if not isinstance(v, dict):
+                continue
+            if "w" in v and not isinstance(v["w"], dict):
+                w = v["w"]
+                if (k not in _EXCLUDE and len(w.shape) >= 2
+                        and min(w.shape[-2:]) >= min_dim
+                        and w.shape[-2] % 32 == 0):
+                    out.append((path + (k,), v))
+            else:
+                walk(v, path + (k,))
+
+    for stack in _BLOCK_STACKS:
+        if stack in params and isinstance(params[stack], dict):
+            walk(params[stack], (stack,))
+    return out
+
+
+def _packed_struct(w_shape, target_bpw: float, rank_align: int):
+    """SDS dict for one packed linear; returns (struct, rank)."""
+    *lead, d_in, d_out = w_shape
+    r = rank_for_bpw(d_out, d_in, target_bpw, rank_align)
+    lead = tuple(lead)
+    f32 = jnp.dtype(jnp.float32)
+    u32 = jnp.dtype(jnp.uint32)
+    return {
+        "qu_t": jax.ShapeDtypeStruct(lead + (r // 32, d_out), u32),
+        "qv": jax.ShapeDtypeStruct(lead + (d_in // 32, r), u32),
+        "s1": jax.ShapeDtypeStruct(lead + (d_out,), f32),
+        "s2": jax.ShapeDtypeStruct(lead + (d_in,), f32),
+    }, r
+
+
+def abstract_quantized_params(cfg: ModelConfig, target_bpw: float = 1.0,
+                              min_dim: int = 48, rank_align: int = 32):
+    """ShapeDtypeStruct tree of the NanoQuant-quantized model — the exact
+    structure ``core.pipeline.nanoquant_quantize`` emits, built without
+    touching a single weight (for AOT serving dry-runs)."""
+    from repro.configs.shapes import param_specs
+    params = param_specs(cfg)
+
+    def q(tree, path):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict) and "w" in v and not isinstance(v["w"], dict):
+                w = v["w"]
+                if (k not in _EXCLUDE and len(w.shape) >= 2
+                        and min(w.shape[-2:]) >= min_dim
+                        and w.shape[-2] % 32 == 0):
+                    struct, _ = _packed_struct(w.shape, target_bpw,
+                                               rank_align)
+                    if "b" in v:
+                        struct["b"] = v["b"]
+                    out[k] = struct
+                    continue
+            out[k] = q(v, path + (k,)) if isinstance(v, dict) else v
+        return out
+
+    new = dict(params)
+    for stack in _BLOCK_STACKS:
+        if stack in new and isinstance(new[stack], dict):
+            new[stack] = q(new[stack], (stack,))
+    return new
+
+
+def packed_model_bytes(cfg: ModelConfig, target_bpw: float = 1.0,
+                       min_dim: int = 48, rank_align: int = 32
+                       ) -> Dict[str, float]:
+    """Storage accounting for the quantized checkpoint (App. F style):
+    packed linears (scales counted fp16 as the paper stores them) + FP16
+    residue (embeddings, norms, head, sub-min_dim linears)."""
+    from repro.configs.shapes import param_specs
+    params = param_specs(cfg)
+    qpaths = quantizable_paths(params, cfg, min_dim)
+    qset = set()
+    q_bits = 0
+    for path, v in qpaths:
+        w = v["w"]
+        *lead, d_in, d_out = w.shape
+        n_mat = 1
+        for s in lead:
+            n_mat *= s
+        r = rank_for_bpw(d_out, d_in, target_bpw, rank_align)
+        q_bits += n_mat * nanoquant_bits(d_out, d_in, r)
+        qset.add(path)
+
+    def in_qset(kp):
+        parts = []
+        for p in kp:
+            parts.append(getattr(p, "key", getattr(p, "idx", p)))
+        # drop trailing leaf name ('w' / 'b')
+        return tuple(parts[:-1]) in qset and parts[-1] == "w"
+
+    fp_bits = 0
+    qw_bits = 0
+    for kp, leaf in jax.tree_util.tree_leaves_with_path(params):
+        size = 1
+        for s in leaf.shape:
+            size *= s
+        if in_qset(kp):
+            qw_bits += size * 16
+        else:
+            fp_bits += size * 16
+    return {
+        "fp16_total_gb": (fp_bits + qw_bits) / 8 / 1e9,
+        "quantized_gb": (q_bits + fp_bits) / 8 / 1e9,
+        "linears_bpw": q_bits / max(qw_bits / 16, 1),
+        "compression_x": (fp_bits + qw_bits) / max(q_bits + fp_bits, 1),
+    }

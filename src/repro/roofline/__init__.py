@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HW, analyse_compiled, collective_bytes, model_flops, roofline_terms)

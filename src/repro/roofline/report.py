@@ -1,0 +1,59 @@
+"""Render the §Roofline table from the dry-run JSON records.
+
+    PYTHONPATH=src python -m repro.roofline.report experiments/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirname: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:7.2f}s "
+    return f"{s*1e3:7.2f}ms"
+
+
+def render(recs, mesh_filter="pod_16x16") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh_filter]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = []
+    hdr = (f"{'arch':24s} {'shape':12s} {'mode':7s} "
+           f"{'compute':9s} {'memory':9s} {'collective':10s} "
+           f"{'dominant':10s} {'MFU-frac':8s} {'useful':6s} {'HBM':7s}")
+    out.append(hdr)
+    out.append("-" * len(hdr))
+    for r in rows:
+        mem = r.get("memory_s_kernel_true", r["memory_s"])
+        out.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mode']:7s} "
+            f"{fmt_seconds(r['compute_s'])} {fmt_seconds(mem)} "
+            f"{fmt_seconds(r['collective_s'])}  "
+            f"{r['dominant']:10s} {r['roofline_fraction']:8.3f} "
+            f"{r.get('useful_flops_ratio', 0):6.2f} "
+            f"{r.get('hbm_used_bytes', 0)/1e9:5.1f}GB"
+            f"{'' if r.get('fits_hbm', True) else ' *OVER*'}")
+    return "\n".join(out)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(d)
+    for mesh in ("pod_16x16", "multipod_2x16x16"):
+        print(f"\n### mesh {mesh} ({sum(r['mesh']==mesh for r in recs)} "
+              f"cells)\n")
+        print(render(recs, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.serve.engine import (  # noqa: F401
+    ServeConfig, make_prefill_step, make_serve_step, sample_token)
+from repro.serve.batcher import BatchServer, Request  # noqa: F401

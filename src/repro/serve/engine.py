@@ -1,0 +1,94 @@
+"""Serving engine: prefill / decode steps + sampling.
+
+``serve_step`` is the unit the decode-shape dry-runs lower: one new token
+against a KV (or SSM-state) cache — memory-bound, and exactly where the
+paper's packed binary weights pay off (the whole weight stream shrinks
+~16x, see §Roofline FP-vs-quantized decode comparison).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    temperature: float = 0.8
+    top_k: int = 32
+    max_new_tokens: int = 64
+    greedy: bool = False
+
+
+def sample_token(logits: jnp.ndarray, key, scfg: ServeConfig) -> jnp.ndarray:
+    """logits (B, 1, V[, K-codebooks already folded]) -> token ids (B, 1).
+    Temperature + top-k sampling (paper App. E benchmark settings:
+    temperature 0.8, top-k 32)."""
+    lf = logits.astype(jnp.float32)
+    if lf.ndim == 4:                       # audio: (B, 1, K, V)
+        lf = lf.reshape(lf.shape[0], -1, lf.shape[-1])  # (B, K, V)
+    else:
+        lf = lf[:, -1]                                   # (B, V)
+        lf = lf[:, None]                                 # (B, 1, V)
+    if scfg.greedy:
+        out = jnp.argmax(lf, axis=-1)
+    else:
+        lf = lf / max(scfg.temperature, 1e-6)
+        if scfg.top_k:
+            kth = jax.lax.top_k(lf, scfg.top_k)[0][..., -1:]
+            lf = jnp.where(lf < kth, -jnp.inf, lf)
+        out = jax.random.categorical(key, lf, axis=-1)
+    return out.astype(jnp.int32)           # (B, 1) or (B, K)
+
+
+def make_serve_step(cfg: ModelConfig):
+    """(params, token (B,1[,K]), cache, pos) -> (logits, new_cache)."""
+    def serve_step(params, token, cache, pos):
+        return T.decode_step(params, cfg, token, cache, pos)
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: Optional[int] = None):
+    """(params, tokens (B,S)[, image_embeds]) -> (last logits, cache).
+
+    The cache is created inside the step (sized max_len or S), so the
+    lowered computation covers allocation + fill — what a serving runtime
+    executes on admission."""
+    def prefill_step(params, tokens, image_embeds=None):
+        B, S = tokens.shape[0], tokens.shape[1]
+        cache = T.init_cache(cfg, B, max_len or S)
+        return T.prefill(params, cfg, tokens, cache, image_embeds)
+    return prefill_step
+
+
+def generate(params, cfg: ModelConfig, tokens, scfg: ServeConfig,
+             key=None, image_embeds=None,
+             jit_prefill=None, jit_decode=None) -> Tuple[Any, Any]:
+    """Host-driven generation loop (prefill once, then decode steps).
+    Returns (generated (B, max_new[,K]), per-step logits list)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    B, S = tokens.shape[0], tokens.shape[1]
+    max_len = S + scfg.max_new_tokens
+    prefill = jit_prefill or jax.jit(make_prefill_step(cfg, max_len))
+    decode = jit_decode or jax.jit(make_serve_step(cfg))
+
+    if cfg.family == "vlm":
+        logits, cache = prefill(params, tokens, image_embeds)
+    else:
+        logits, cache = prefill(params, tokens)
+    outs = []
+    tok = None
+    for i in range(scfg.max_new_tokens):
+        key, k = jax.random.split(key)
+        tok = sample_token(logits, k, scfg)
+        if cfg.family == "audio":
+            tok = tok[:, None, :]          # (B, 1, K)
+        outs.append(tok)
+        logits, cache = decode(params, tok, cache, jnp.asarray(S + i))
+    gen = jnp.concatenate(outs, axis=1)
+    return gen, logits

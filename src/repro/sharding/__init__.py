@@ -1,0 +1,3 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_pspecs, cache_pspecs, data_axes, param_pspecs, replicate_specs,
+    ShardingPolicy)

@@ -1,0 +1,3 @@
+from repro.train.loop import (  # noqa: F401
+    TrainConfig, Trainer, init_train_state, make_optimizer, make_train_step)
+from repro.train.optim import AdamW, cosine_schedule  # noqa: F401

@@ -1,0 +1,116 @@
+"""Binary low-rank gradient compression with error feedback.
+
+Reuses the paper's own representation — rank-k sign–value factorization
+(residual SVID, the BiLLM-family building block that also powers
+LB-ADMM's proxy step) — as a data-parallel gradient compressor:
+
+    G ≈ Σ_i sign(R_i) ⊙ (a_i b_iᵀ),  R_0 = G,  R_{i+1} = R_i − Ĝ_i
+
+On a real deployment the ±1 sign planes are bit-packed and the factors
+are what cross the slow DCN (pod) axis: each pod all-gathers the others'
+packed factors and decompresses locally — `compressed_psum` below is that
+collective, written with shard_map. Compression is lossy, so an error-
+feedback accumulator keeps the optimizer unbiased over time
+(e ← g + e − decompress(compress(g + e))).
+
+Bytes per leaf: k·(n+m)/8 (packed signs) + 4k·(n+m) bytes of f32 factor
+values vs 4·n·m uncompressed — `compression_ratio` reports it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.svid import svid_factors
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressConfig:
+    rank: int = 4                 # residual SVID planes per tensor
+    min_size: int = 65536         # leave small leaves uncompressed
+    power_iters: int = 4
+
+
+def _as2d(g: jnp.ndarray) -> Tuple[jnp.ndarray, tuple]:
+    shape = g.shape
+    if g.ndim == 1:
+        return g.reshape(1, -1), shape
+    return g.reshape(-1, shape[-1]), shape
+
+
+def compress_leaf(g: jnp.ndarray, cfg: CompressConfig):
+    """-> (signs (k, m, n) ±1, a (k, m), b (k, n)). Residual rank-k SVID."""
+    g2, shape = _as2d(g.astype(jnp.float32))
+
+    def plane(res, _):
+        a, b = svid_factors(res, cfg.power_iters)
+        s = jnp.sign(jnp.where(res == 0, 1.0, res))
+        approx = s * jnp.outer(a, b)
+        return res - approx, (s, a, b)
+
+    _, (signs, aa, bb) = jax.lax.scan(plane, g2, None, length=cfg.rank)
+    return {"signs": signs, "a": aa, "b": bb, "shape": shape}
+
+
+def decompress_leaf(c) -> jnp.ndarray:
+    recon = jnp.einsum("kmn,km,kn->mn", c["signs"], c["a"], c["b"])
+    return recon.reshape(c["shape"])
+
+
+def compress_with_error_feedback(grads, err: Optional[Any],
+                                 cfg: CompressConfig):
+    """Returns (decompressed grads, new error state). err=None initializes."""
+    if err is None:
+        err = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        if g.size < cfg.min_size or g.ndim < 2:
+            return g, jnp.zeros(g.shape, jnp.float32)
+        corrected = g.astype(jnp.float32) + e
+        c = compress_leaf(corrected, cfg)
+        d = decompress_leaf(c)
+        return d.astype(g.dtype), corrected - d
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))
+
+
+def compression_ratio(g_shape: tuple, cfg: CompressConfig) -> float:
+    """Wire-bytes ratio for one tensor (packed signs + f32 factors vs f32)."""
+    if len(g_shape) < 2:
+        return 1.0
+    m = 1
+    for s in g_shape[:-1]:
+        m *= s
+    n = g_shape[-1]
+    raw = 4.0 * m * n
+    comp = cfg.rank * (m * n / 8.0 + 4.0 * (m + n))
+    return comp / raw
+
+
+# ---------------------------------------------------------------------------
+# the actual collective (pod-axis DP exchange), for deployments where the
+# gradient all-reduce crosses the DCN: all-gather packed factors, then
+# decompress + mean locally. shard_map'd over the named DP axis.
+# ---------------------------------------------------------------------------
+
+
+def compressed_psum(g_local: jnp.ndarray, axis: str, cfg: CompressConfig):
+    """Mean of per-shard gradients exchanged in compressed form.
+
+    Must be called inside a shard_map whose mesh has `axis`. The wire
+    format is the rank-k factorization; signs travel packed in uint32 in
+    a real deployment (we keep them as ±1 here — the *byte accounting*
+    uses the packed size; see compression_ratio)."""
+    c = compress_leaf(g_local, cfg)
+    signs = jax.lax.all_gather(c["signs"], axis)      # (P, k, m, n)
+    aa = jax.lax.all_gather(c["a"], axis)
+    bb = jax.lax.all_gather(c["b"], axis)
+    recon = jnp.einsum("pkmn,pkm,pkn->mn", signs, aa, bb)
+    return (recon / signs.shape[0]).reshape(c["shape"])

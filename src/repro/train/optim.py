@@ -1,0 +1,95 @@
+"""Minimal pure-JAX optimizer substrate (no optax).
+
+AdamW with cosine / linear schedules and global-norm clipping, operating on
+arbitrary param pytrees. Optimizer state is a pytree with the same
+structure (m, v in f32 regardless of param dtype — mixed-precision master
+statistics), so it shards identically to the params under pjit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def cosine_schedule(base_lr: float, total_steps: int, warmup: int = 0,
+                    final_frac: float = 0.0) -> Callable:
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / max(warmup, 1)) if warmup else 1.0
+        t = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(math.pi * t))
+        return base_lr * warm * (final_frac + (1 - final_frac) * cos)
+    return lr
+
+
+def constant_schedule(base_lr: float) -> Callable:
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves)) if leaves else jnp.zeros(())
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), n
+
+
+class AdamW:
+    def __init__(self, lr: Callable | float, b1=0.9, b2=0.999, eps=1e-8,
+                 weight_decay=0.0, clip_norm: Optional[float] = None,
+                 mask: Optional[Callable] = None):
+        self.lr = lr if callable(lr) else constant_schedule(lr)
+        self.b1, self.b2, self.eps = b1, b2, eps
+        self.weight_decay = weight_decay
+        self.clip_norm = clip_norm
+        self.mask = mask  # fn(path_str, leaf) -> bool: apply weight decay?
+
+    def init(self, params) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         m=jax.tree.map(zeros, params),
+                         v=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamState, params):
+        if self.clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        lr = self.lr(state.step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m2, v2
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.m)
+        flat_v = jax.tree.leaves(state.v)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return new_p, AdamState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,25 @@
+import os
+import sys
+
+# tests run single-device (the dry-run alone forces 512 placeholder
+# devices; see launch/dryrun.py)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def tiny_dense_cfg():
+    from repro.models.config import ModelConfig
+    return ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                       loss_chunk=0, remat=False)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_dense_cfg):
+    from repro.models import transformer as T
+    return T.init_params(jax.random.PRNGKey(0), tiny_dense_cfg)

@@ -1,0 +1,78 @@
+"""Magnitude balancing (paper Eq. 7–9, App. A) property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balance import magnitude_balance
+
+
+def _factors(m, n, r, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(k1, (m, r)) + 0.01,
+            jax.random.normal(k2, (n, r)) + 0.01)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(4, 32), n=st.integers(4, 32), r=st.integers(1, 8),
+       seed=st.integers(0, 99))
+def test_balanced_norms_equal(m, n, r, seed):
+    """Prop. 1: after balancing, ‖U‖_F == ‖V‖_F (with identity
+    preconditioners)."""
+    pu, pv = _factors(m, n, r, seed)
+    lu, lv, _, _ = magnitude_balance(pu, pv, jnp.ones((m,)), jnp.ones((n,)))
+    nu, nv = float(jnp.linalg.norm(lu)), float(jnp.linalg.norm(lv))
+    assert abs(nu - nv) / max(nu, nv) < 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(4, 24), n=st.integers(4, 24), r=st.integers(1, 6),
+       seed=st.integers(0, 99))
+def test_product_invariance(m, n, r, seed):
+    """Eq. 12: balancing never changes U Vᵀ (scale ambiguity only)."""
+    pu, pv = _factors(m, n, r, seed)
+    lu, lv, _, _ = magnitude_balance(pu, pv, jnp.ones((m,)), jnp.ones((n,)))
+    np.testing.assert_allclose(np.asarray(lu @ lv.T), np.asarray(pu @ pv.T),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_eta_minimizes_energy():
+    """Prop. 1: η* minimizes ½(‖ηU‖² + ‖η⁻¹V‖²) over η > 0."""
+    pu, pv = _factors(12, 20, 4, 5)
+    nu = float(jnp.linalg.norm(pu))
+    nv = float(jnp.linalg.norm(pv))
+    eta_star = np.sqrt(nv / nu)
+
+    def J(eta):
+        return 0.5 * ((eta * nu) ** 2 + (nv / eta) ** 2)
+
+    for eta in [eta_star * f for f in (0.25, 0.5, 0.9, 1.1, 2.0, 4.0)]:
+        assert J(eta_star) <= J(eta) + 1e-9
+
+
+def test_preconditioner_removal():
+    """Latents are D⁻¹-unscaled proxies (Eq. 9): with diagonal
+    preconditioners d, balance(d ⊙ P) == balance(P) up to the η scale."""
+    pu, pv = _factors(10, 14, 3, 8)
+    d_out = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (10,))) + 0.5
+    d_in = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (14,))) + 0.5
+    lu1, lv1, s1a, s2a = magnitude_balance(d_out[:, None] * pu,
+                                           d_in[:, None] * pv, d_out, d_in)
+    lu2, lv2, s1b, s2b = magnitude_balance(pu, pv, jnp.ones((10,)),
+                                           jnp.ones((14,)))
+    np.testing.assert_allclose(np.asarray(lu1), np.asarray(lu2), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2a), np.asarray(s2b), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_scales_are_row_mean_abs():
+    pu, pv = _factors(9, 11, 4, 9)
+    lu, lv, s1, s2 = magnitude_balance(pu, pv, jnp.ones((9,)),
+                                       jnp.ones((11,)))
+    np.testing.assert_allclose(np.asarray(s1),
+                               np.asarray(jnp.mean(jnp.abs(lu), axis=1)),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2),
+                               np.asarray(jnp.mean(jnp.abs(lv), axis=1)),
+                               rtol=1e-5)

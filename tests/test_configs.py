@@ -1,0 +1,74 @@
+"""Config registry + input-spec cells."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs import shapes as SH
+from repro.quant.surgery import abstract_quantized_params, \
+    packed_model_bytes
+
+
+def test_registry_complete():
+    assert len(configs.list_archs()) == 10
+
+
+def test_shape_cells_assignment():
+    """long_500k only for sub-quadratic families (DESIGN.md §5)."""
+    for arch in configs.list_archs():
+        cfg = configs.get_config(arch)
+        shapes = configs.shapes_for(arch)
+        assert "train_4k" in shapes
+        assert "decode_32k" in shapes
+        if cfg.family in ("ssm", "hybrid"):
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes
+    total = sum(len(configs.shapes_for(a)) for a in configs.list_archs())
+    assert total == 32
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+def test_input_specs_no_allocation(arch):
+    for shape in configs.shapes_for(arch):
+        specs = SH.input_specs(configs.get_config(arch), shape)
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_train_specs_grad_accum_split():
+    cfg = configs.get_config("qwen1.5-110b")
+    specs = SH.input_specs(cfg, "train_4k", grad_accum=8)
+    assert specs["batch"]["tokens"].shape == (8, 32, 4096)
+
+
+def test_decode_specs_have_cache():
+    cfg = configs.get_config("qwen3-4b")
+    specs = SH.input_specs(cfg, "decode_32k")
+    assert specs["token"].shape == (128, 1)
+    k = specs["cache"]["layers"]["k"]
+    assert k.shape == (36, 128, 32768, 8, 128)
+
+
+def test_ssm_decode_state_o1():
+    cfg = configs.get_config("mamba2-370m")
+    specs = SH.input_specs(cfg, "long_500k")
+    ssm = specs["cache"]["layers"]["ssm"]
+    assert ssm.shape == (48, 1, 32, 64, 128)        # no 500k dimension
+
+
+def test_packed_model_compression_factors():
+    """Paper-scale check transposed to the pool: 1-bit packing of a
+    dense arch lands near the paper's ~10-24x whole-model factor."""
+    rep = packed_model_bytes(configs.get_config("qwen1.5-110b"), 1.0)
+    assert rep["compression_x"] > 10
+    assert rep["linears_bpw"] <= 1.0 + 1e-6
+    small = packed_model_bytes(configs.get_config("qwen1.5-0.5b"), 1.0)
+    assert small["compression_x"] > 1.5        # embedding-dominated
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+def test_abstract_quantized_tree_builds(arch):
+    tree = abstract_quantized_params(configs.get_config(arch))
+    leaves = jax.tree.leaves(tree)
+    assert any(l.dtype == jnp.uint32 for l in leaves)

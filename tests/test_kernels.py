@@ -1,0 +1,97 @@
+"""Pallas binary-matmul kernel vs pure-jnp oracle (interpret mode on CPU).
+
+Shape/dtype sweep per the deliverable: GEMV (M=1) through GEMM, ragged
+M, K/N at and off block boundaries.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.binary_matmul import (
+    lowrank_binary_matmul_pallas, packed_matmul)
+
+
+def _assert_close(got, want, dtype):
+    """f32: elementwise-exact-ish. bf16: normalized-RMS — the kernel
+    keeps f32 internals while the oracle rounds (x*s_k) and the
+    inter-stage t to bf16, so isolated cancellation-heavy elements can
+    differ by several ulps; aggregate fidelity is the meaningful bound."""
+    g = np.asarray(got, np.float32)
+    w = np.asarray(want, np.float32)
+    if dtype == jnp.bfloat16:
+        rms = float(np.sqrt(np.mean((g - w) ** 2)))
+        ref_rms = float(np.sqrt(np.mean(w ** 2))) + 1e-9
+        assert rms / ref_rms < 0.02, rms / ref_rms
+    else:
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-4)
+
+
+def _mk(m, k, n, dtype, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kx, kw, k1, k2 = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (m, k), jnp.float32).astype(dtype)
+    w = jnp.sign(jax.random.normal(kw, (k, n)))
+    w = jnp.where(w == 0, 1.0, w)
+    packed = ref.pack_signs(w)
+    s_k = jnp.abs(jax.random.normal(k1, (k,))) + 0.1
+    s_n = jnp.abs(jax.random.normal(k2, (n,))) + 0.1
+    return x, packed, s_k, s_n
+
+
+@pytest.mark.parametrize("m", [1, 7, 64, 130])
+@pytest.mark.parametrize("k,n", [(32, 32), (64, 96), (512, 128), (96, 160)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_packed_matmul_matches_ref(m, k, n, dtype):
+    x, packed, s_k, s_n = _mk(m, k, n, dtype)
+    got = packed_matmul(x, packed, s_k, s_n, interpret=True,
+                        bm=64, bn=64, bk=64)
+    want = ref.packed_matmul_ref(x, packed, s_k, s_n)
+    _assert_close(got, want, dtype)
+
+
+@pytest.mark.parametrize("shape", [(1, 64), (3, 64), (2, 5, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lowrank_chain_matches_ref(shape, dtype):
+    d_in, r, d_out = 64, 32, 96
+    key = jax.random.PRNGKey(3)
+    kx, ku, kv, k1, k2 = jax.random.split(key, 5)
+    x = jax.random.normal(kx, shape + (0,)[:0], jnp.float32)
+    x = jax.random.normal(kx, shape, jnp.float32).astype(dtype)
+    u = jnp.where(jnp.sign(jax.random.normal(ku, (d_out, r))) == 0, 1.0,
+                  jnp.sign(jax.random.normal(ku, (d_out, r))))
+    v = jnp.where(jnp.sign(jax.random.normal(kv, (d_in, r))) == 0, 1.0,
+                  jnp.sign(jax.random.normal(kv, (d_in, r))))
+    qu_t = ref.pack_signs(u.T)
+    qv = ref.pack_signs(v)
+    s1 = jnp.abs(jax.random.normal(k1, (d_out,))) + 0.1
+    s2 = jnp.abs(jax.random.normal(k2, (d_in,))) + 0.1
+    got = lowrank_binary_matmul_pallas(x, qv, qu_t, s1, s2, interpret=True,
+                                       bm=32, bn=32, bk=32)
+    want = ref.lowrank_binary_matmul_ref(x, qv, qu_t, s1, s2)
+    _assert_close(got, want, dtype)
+
+
+def test_kernel_mode_switch(monkeypatch):
+    from repro.kernels import ops
+    x, packed, s_k, s_n = _mk(4, 64, 32, jnp.float32)
+    qv = packed[:, :32]
+    with ops.kernel_mode("ref"):
+        y1 = ops.lowrank_binary_matmul(
+            x, packed[:, :32], ref.pack_signs(jnp.ones((32, 96))),
+            jnp.ones((96,)), s_k)
+    with ops.kernel_mode("pallas"):
+        y2 = ops.lowrank_binary_matmul(
+            x, packed[:, :32], ref.pack_signs(jnp.ones((32, 96))),
+            jnp.ones((96,)), s_k)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_gemv_decode_shape():
+    """decode regime: M=1 row through both stages (paper App. E GEMV)."""
+    x, packed, s_k, s_n = _mk(1, 128, 64, jnp.bfloat16, seed=9)
+    got = packed_matmul(x, packed, s_k, s_n, interpret=True)
+    want = ref.packed_matmul_ref(x, packed, s_k, s_n)
+    _assert_close(got, want, jnp.bfloat16)

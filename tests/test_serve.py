@@ -1,0 +1,96 @@
+"""Serving engine + batcher tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve import BatchServer, Request, ServeConfig
+from repro.serve.engine import generate, sample_token
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = configs.get_smoke("llama3.2-1b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_greedy_sampling_is_argmax():
+    logits = jnp.asarray([[[0.1, 3.0, -1.0, 0.0]]])
+    tok = sample_token(logits, jax.random.PRNGKey(0),
+                       ServeConfig(greedy=True))
+    assert int(tok[0, 0]) == 1
+
+
+def test_topk_restricts_support():
+    logits = jnp.asarray([[[10.0, 9.0, -50.0, -50.0]]])
+    scfg = ServeConfig(top_k=2, temperature=1.0)
+    for seed in range(20):
+        tok = sample_token(logits, jax.random.PRNGKey(seed), scfg)
+        assert int(tok[0, 0]) in (0, 1)
+
+
+def test_generate_shapes(served_model):
+    cfg, params = served_model
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              cfg.vocab_size)
+    gen, logits = generate(params, cfg, toks,
+                           ServeConfig(max_new_tokens=5))
+    assert gen.shape == (2, 5)
+    assert int(gen.max()) < cfg.vocab_size and int(gen.min()) >= 0
+
+
+def test_batch_server_completes_all(served_model):
+    cfg, params = served_model
+    srv = BatchServer(params, cfg, ServeConfig(max_new_tokens=6),
+                      max_batch=3, max_len=32)
+    rng = np.random.default_rng(0)
+    for uid in range(7):
+        srv.submit(Request(uid, rng.integers(
+            0, cfg.vocab_size, size=(5 + uid % 3,)).astype(np.int32),
+            max_new_tokens=4 + uid % 3))
+    done = srv.run()
+    assert sorted(done) == list(range(7))
+    for uid, r in done.items():
+        assert r.output is not None
+        assert 1 <= len(r.output) <= r.max_new_tokens
+
+
+def test_batch_server_eos_truncation(served_model):
+    cfg, params = served_model
+    srv = BatchServer(params, cfg, ServeConfig(max_new_tokens=8, greedy=True),
+                      max_batch=1, max_len=32)
+    prompt = np.arange(4, dtype=np.int32)
+    srv.submit(Request(0, prompt, max_new_tokens=8, eos_id=None))
+    r = srv.run()[0]
+    # determine the greedy second token and use it as eos for a new req
+    eos = int(r.output[1]) if len(r.output) > 1 else None
+    if eos is not None and eos != int(r.output[0]):
+        srv2 = BatchServer(params, cfg,
+                           ServeConfig(max_new_tokens=8, greedy=True),
+                           max_batch=1, max_len=32)
+        srv2.submit(Request(1, prompt, max_new_tokens=8, eos_id=eos))
+        r2 = srv2.run()[1]
+        assert len(r2.output) == 2
+        assert int(r2.output[-1]) == eos
+
+
+def test_quantized_model_serves(served_model):
+    """Packed model is a drop-in for the server (paper's deployment)."""
+    from repro.core.pipeline import QuantConfig, nanoquant_quantize
+    from repro.data import calib_batches
+    cfg, params = served_model
+    calib = calib_batches(cfg, 4, 32, batch=2)
+    qcfg = QuantConfig(admm_iters=4, t_pre=0, t_post=2, t_glob=0,
+                       rank_align=32, min_dim=32)
+    qp, _ = nanoquant_quantize(params, cfg, calib, qcfg, verbose=False)
+    srv = BatchServer(qp, cfg, ServeConfig(max_new_tokens=4), max_batch=2,
+                      max_len=16)
+    srv.submit(Request(0, np.arange(6, dtype=np.int32)))
+    srv.submit(Request(1, np.arange(4, dtype=np.int32)))
+    done = srv.run()
+    assert len(done) == 2
+    for r in done.values():
+        assert np.isfinite(r.output).all()

@@ -1,0 +1,60 @@
+"""Fault-tolerance supervisor tests."""
+import os
+import sys
+
+import pytest
+
+from repro.launch.supervisor import run_with_restarts, supervise
+
+
+def test_run_with_restarts_retries():
+    calls = []
+
+    def flaky(attempt):
+        calls.append(attempt)
+        if attempt < 2:
+            raise RuntimeError("simulated node failure")
+
+    used = run_with_restarts(flaky, max_restarts=3, log=lambda *_: None)
+    assert used == 2
+    assert calls == [0, 1, 2]
+
+
+def test_run_with_restarts_exhausts():
+    def always_fails(attempt):
+        raise RuntimeError("dead")
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(always_fails, max_restarts=2, log=lambda *_: None)
+
+
+def test_supervise_restarts_until_success(tmp_path):
+    """Child crashes twice (via a state file) then succeeds — the
+    process-level restart path used for real node failures."""
+    marker = tmp_path / "attempts"
+    script = (
+        "import os, sys\n"
+        f"p = {str(marker)!r}\n"
+        "n = int(open(p).read()) if os.path.exists(p) else 0\n"
+        "open(p, 'w').write(str(n + 1))\n"
+        "sys.exit(0 if n >= 2 else 1)\n"
+    )
+    rc = supervise([sys.executable, "-c", script], max_restarts=5,
+                   backoff_s=0.0, log=lambda *_: None)
+    assert rc == 0
+    assert int(marker.read_text()) == 3
+
+
+def test_supervise_gives_up(tmp_path):
+    rc = supervise([sys.executable, "-c", "import sys; sys.exit(3)"],
+                   max_restarts=1, backoff_s=0.0, log=lambda *_: None)
+    assert rc != 0
+
+
+def test_supervise_kills_hung_child():
+    rc = supervise(
+        [sys.executable, "-c",
+         "import time; print('x', flush=True); time.sleep(600)"],
+        max_restarts=0, hang_timeout=2.0, backoff_s=0.0,
+        log=lambda *_: None)
+    assert rc != 0

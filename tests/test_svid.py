@@ -1,0 +1,78 @@
+"""SVID (paper Eq. 6) unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.svid import svid, svid_factors
+
+
+def _rand(m, n, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (m, n))
+
+
+def test_svid_preserves_signs():
+    p = _rand(24, 40)
+    z = svid(p)
+    signs_match = jnp.sign(z) == jnp.sign(jnp.where(p == 0, 1.0, p))
+    assert bool(signs_match.all())
+
+
+def test_svid_magnitude_is_rank1():
+    p = _rand(16, 32, seed=1)
+    z = svid(p)
+    mag = jnp.abs(z)
+    # |Z| = a b^T exactly -> rank 1
+    s = jnp.linalg.svd(mag, compute_uv=False)
+    assert float(s[1] / s[0]) < 1e-5
+
+
+def test_svid_matches_svd_of_abs():
+    """Power iteration must find the leading singular pair of |P|
+    (Perron–Frobenius: non-negative matrix -> non-negative pair)."""
+    p = _rand(20, 28, seed=2)
+    a, b = svid_factors(p, n_iter=50)
+    ab = jnp.abs(p)
+    u, s, vt = jnp.linalg.svd(ab, full_matrices=False)
+    best = s[0] * jnp.outer(jnp.abs(u[:, 0]), jnp.abs(vt[0]))
+    np.testing.assert_allclose(np.asarray(jnp.outer(a, b)), np.asarray(best),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_svid_is_best_sign_preserving_rank1():
+    """Residual of SVID <= residual of random sign-preserving rank-1
+    proxies (optimality, Pouransari'20)."""
+    p = _rand(12, 18, seed=3)
+    z = svid(p, n_iter=50)
+    base = float(jnp.linalg.norm(p - z))
+    key = jax.random.PRNGKey(4)
+    for i in range(10):
+        k1, k2, key = jax.random.split(key, 3)
+        a = jnp.abs(jax.random.normal(k1, (12,)))
+        b = jnp.abs(jax.random.normal(k2, (18,)))
+        cand = jnp.sign(p) * jnp.outer(a, b)
+        assert base <= float(jnp.linalg.norm(p - cand)) + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(2, 24), n=st.integers(2, 24), seed=st.integers(0, 99))
+def test_svid_residual_bounded(m, n, seed):
+    p = _rand(m, n, seed)
+    z = svid(p)
+    assert float(jnp.linalg.norm(p - z)) <= float(jnp.linalg.norm(p)) + 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 99))
+def test_svid_exact_on_rank1_sign_value(seed):
+    """If P already has the sign-value structure, SVID recovers it."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    a = jnp.abs(jax.random.normal(k1, (10,))) + 0.1
+    b = jnp.abs(jax.random.normal(k2, (14,))) + 0.1
+    s = jnp.sign(jax.random.normal(k3, (10, 14)))
+    p = s * jnp.outer(a, b)
+    z = svid(p, n_iter=60)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(p), rtol=1e-4,
+                               atol=1e-5)
