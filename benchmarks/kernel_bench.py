@@ -7,9 +7,9 @@ kernel itself is validated bit-exactly in tests/test_kernels.py."""
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro import configs
+from repro import api
 from repro.configs.shapes import param_specs
-from repro.quant.surgery import packed_model_bytes, quantizable_paths
+from repro.api import packed_model_bytes, quantizable_paths
 from repro.roofline.analysis import V5E
 
 
@@ -23,8 +23,8 @@ def _weight_stream_bytes(cfg, packed: bool):
 
 def run():
     rows = []
-    for arch in configs.list_archs():
-        cfg = configs.get_config(arch)
+    for arch in api.list_archs():
+        cfg = api.get_config(arch)
         b_fp = _weight_stream_bytes(cfg, packed=False)
         b_q = _weight_stream_bytes(cfg, packed=True)
         tps_fp = V5E.hbm_bw / b_fp

@@ -3,9 +3,9 @@ for the paper's Llama-2-7B and extended to all 10 assigned archs."""
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro import configs
+from repro import api
 from repro.core import bpw
-from repro.quant.surgery import packed_model_bytes, quantizable_paths
+from repro.api import packed_model_bytes, quantizable_paths
 from repro.configs.shapes import param_specs
 
 _METHODS = ("nanoquant", "billm", "stbllm_4:8", "stbllm_6:8", "stbllm_8:8",
@@ -28,8 +28,8 @@ def run():
     rows.append(row)
 
     # --- assigned archs ------------------------------------------------------
-    for arch in configs.list_archs():
-        cfg = configs.get_config(arch)
+    for arch in api.list_archs():
+        cfg = api.get_config(arch)
         qp = quantizable_paths(param_specs(cfg), cfg)
         shapes = []
         for _, v in qp:

@@ -10,8 +10,8 @@ import time
 import jax
 
 from benchmarks.common import calib, emit, eval_ppl, teacher
+from repro import api
 from repro.core.baselines import rtn_binarize, xnor_binarize
-from repro.core.pipeline import QuantConfig, nanoquant_quantize
 
 _Q = dict(lr_pre=3e-4, lr_post=1e-4, lr_glob=1e-4, admm_iters=20, t_pre=8, t_post=12, t_glob=8, rank_align=32,
           min_dim=32)
@@ -44,11 +44,11 @@ def run():
                  "ppl": eval_ppl(cfg, _binarize_all(params, xnor_binarize))})
     for bpw in (1.0, 0.8, 0.55):
         t0 = time.time()
-        qp, _ = nanoquant_quantize(params, cfg, cal,
-                                   QuantConfig(target_bpw=bpw, **_Q),
-                                   verbose=False)
+        model = api.NanoQuantModel.quantize(
+            params, cfg, cal, api.QuantConfig(target_bpw=bpw, **_Q),
+            verbose=False)
         rows.append({"method": f"NanoQuant@{bpw}", "w_bits": bpw,
-                     "ppl": eval_ppl(cfg, qp),
+                     "ppl": eval_ppl(cfg, model.params),
                      "wall_s": time.time() - t0})
     emit("table2_perplexity", rows)
     return rows

@@ -5,8 +5,8 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import CALIB_SEQ, calib, emit, eval_ppl, teacher
+from repro import api
 from repro.core.baselines import rtn_binarize, xnor_binarize
-from repro.core.pipeline import QuantConfig, nanoquant_quantize
 
 
 def run():
@@ -16,13 +16,16 @@ def run():
     for n_samples, tag in ((8, "small-calib"), (24, "3x-calib")):
         cal = calib(cfg, n_samples=n_samples)
         t0 = time.time()
-        qp, rep = nanoquant_quantize(
+        model = api.NanoQuantModel.quantize(
             params, cfg, cal,
-            QuantConfig(target_bpw=1.0, lr_pre=3e-4, lr_post=1e-4, lr_glob=1e-4, admm_iters=20, t_pre=8, t_post=12,
-                        t_glob=8, rank_align=32, min_dim=32), verbose=False)
+            api.QuantConfig(target_bpw=1.0, lr_pre=3e-4, lr_post=1e-4,
+                            lr_glob=1e-4, admm_iters=20, t_pre=8, t_post=12,
+                            t_glob=8, rank_align=32, min_dim=32),
+            verbose=False)
         rows.append({"method": f"NanoQuant ({tag})", "bits": 1.0,
                      "data_tokens": n_samples * CALIB_SEQ,
-                     "wall_s": time.time() - t0, "ppl": eval_ppl(cfg, qp)})
+                     "wall_s": time.time() - t0,
+                     "ppl": eval_ppl(cfg, model.params)})
     emit("table4_efficiency", rows)
     return rows
 

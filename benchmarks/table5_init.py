@@ -3,20 +3,20 @@
 from __future__ import annotations
 
 from benchmarks.common import calib, emit, eval_ppl, teacher
-from repro.core.pipeline import QuantConfig, nanoquant_quantize
+from repro import api
 
 
 def run():
     cfg, params, _ = teacher()
     cal = calib(cfg)
     rows = []
-    for method in ("dual_svid", "dbf_admm", "lb_admm"):
-        qp, _ = nanoquant_quantize(
+    for method in api.list_init_methods():
+        model = api.NanoQuantModel.quantize(
             params, cfg, cal,
-            QuantConfig(target_bpw=0.8, init_method=method, admm_iters=20,
-                        t_pre=6, t_post=10, t_glob=6, rank_align=32,
-                        min_dim=32), verbose=False)
-        rows.append({"init": method, "ppl": eval_ppl(cfg, qp)})
+            api.QuantConfig(target_bpw=0.8, init_method=method,
+                            admm_iters=20, t_pre=6, t_post=10, t_glob=6,
+                            rank_align=32, min_dim=32), verbose=False)
+        rows.append({"init": method, "ppl": eval_ppl(cfg, model.params)})
     emit("table5_init", rows)
     return rows
 

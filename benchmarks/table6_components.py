@@ -3,7 +3,7 @@ factorized refinement / model reconstruction)."""
 from __future__ import annotations
 
 from benchmarks.common import calib, emit, eval_ppl, teacher
-from repro.core.pipeline import QuantConfig, nanoquant_quantize
+from repro import api
 
 _BASE = dict(target_bpw=1.0, lr_pre=3e-4, lr_post=1e-4, lr_glob=1e-4, admm_iters=20, t_pre=8, t_post=12, t_glob=8,
              rank_align=32, min_dim=32)
@@ -21,9 +21,9 @@ def run():
     ]
     rows = []
     for name, kw in variants:
-        qp, _ = nanoquant_quantize(params, cfg, cal,
-                                   QuantConfig(**_BASE, **kw), verbose=False)
-        rows.append({"components": name, "ppl": eval_ppl(cfg, qp)})
+        model = api.NanoQuantModel.quantize(
+            params, cfg, cal, api.QuantConfig(**_BASE, **kw), verbose=False)
+        rows.append({"components": name, "ppl": eval_ppl(cfg, model.params)})
     emit("table6_components", rows)
     return rows
 

@@ -3,7 +3,7 @@ reconstruction (more block-recon data -> better PPL)."""
 from __future__ import annotations
 
 from benchmarks.common import calib, emit, eval_ppl, teacher
-from repro.core.pipeline import QuantConfig, nanoquant_quantize
+from repro import api
 
 
 def run():
@@ -13,16 +13,16 @@ def run():
         for model_samples in (8, 24):
             cal_block = calib(cfg, n_samples=block_samples)
             cal_model = calib(cfg, n_samples=model_samples, seed=77)
-            qcfg = QuantConfig(target_bpw=1.0, lr_pre=3e-4, lr_post=1e-4, lr_glob=1e-4, admm_iters=16, t_pre=6,
-                               t_post=10, t_glob=0, rank_align=32,
-                               min_dim=32)
-            qp, _ = nanoquant_quantize(params, cfg, cal_block, qcfg,
-                                       verbose=False)
+            qcfg = api.QuantConfig(target_bpw=1.0, lr_pre=3e-4,
+                                   lr_post=1e-4, lr_glob=1e-4,
+                                   admm_iters=16, t_pre=6, t_post=10,
+                                   t_glob=0, rank_align=32, min_dim=32)
+            qp = api.NanoQuantModel.quantize(params, cfg, cal_block, qcfg,
+                                             verbose=False).params
             # model reconstruction with its own budget
-            from repro.core.pipeline import _tune_scales_kd
             import dataclasses
             qcfg2 = dataclasses.replace(qcfg, t_glob=8)
-            qp, _ = _tune_scales_kd(params, qp, cfg, cal_model, qcfg2)
+            qp, _ = api.tune_scales_kd(params, qp, cfg, cal_model, qcfg2)
             rows.append({"block_samples": block_samples,
                          "model_samples": model_samples,
                          "ppl": eval_ppl(cfg, qp)})

@@ -11,15 +11,14 @@ import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro import configs
-from repro.checkpoint import CheckpointManager
+from repro import api
 from repro.data import train_iterator
 from repro.launch.supervisor import run_with_restarts
 from repro.train import TrainConfig, Trainer
 
 
 def main():
-    cfg = configs.get_smoke("mamba2-370m")
+    cfg = api.get_smoke("mamba2-370m")
     tcfg = TrainConfig(lr=2e-3, warmup=10, total_steps=120,
                        compress_grads=True, compress_rank=2)
     ckpt_dir = tempfile.mkdtemp(prefix="nq_ft_")
@@ -29,7 +28,7 @@ def main():
     crash_at = {0: 35, 1: 70}          # attempt -> step to "crash" at
 
     def attempt(n):
-        mgr = CheckpointManager(ckpt_dir, keep=2)
+        mgr = api.CheckpointManager(ckpt_dir, keep=2)
         start = mgr.latest_step() or 0
         it = train_iterator(cfg, batch=8, seq=48, start_step=start)
         tr = Trainer(cfg, tcfg, it, mgr, ckpt_every=10, log_every=10)

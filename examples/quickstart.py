@@ -1,29 +1,26 @@
-"""Quickstart: train a small FP teacher, quantize it with NanoQuant to
-1 bit, and compare perplexities + packed size — the paper's pipeline
-end-to-end in a few minutes on CPU.
+"""Quickstart: the full ``repro.api`` lifecycle on CPU in a few minutes —
+train a small FP teacher, quantize it with NanoQuant to 1 bit, save the
+packed artifact, load it back, generate, and compare perplexities.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
+import numpy as np
 
-from repro import configs
-from repro.core.packing import packed_nbytes
-from repro.core.pipeline import QuantConfig, nanoquant_quantize
+from repro import api
 from repro.data import SyntheticCorpus, calib_batches, train_iterator
-from repro.data.synthetic import eval_perplexity
-from repro.models import transformer as T
 from repro.train import TrainConfig, Trainer
 
 
 def main():
     # 1. a reduced llama3.2-style config (the full config is what the
-    #    dry-run lowers at scale; --arch selects any of the 10)
-    cfg = configs.get_smoke("llama3.2-1b")
+    #    dry-run lowers at scale; api.list_archs() names all 10)
+    cfg = api.get_smoke("llama3.2-1b")
     print(f"model: {cfg.name}  (family={cfg.family}, "
           f"{cfg.param_count()/1e6:.2f}M params)")
 
@@ -37,33 +34,36 @@ def main():
 
     corpus = SyntheticCorpus(cfg.vocab_size)
     evalb = calib_batches(cfg, 12, 64, seed=999, corpus=corpus)
-    ppl_fp = eval_perplexity(T.loss_fn, params, cfg, evalb)
+    ppl_fp = api.NanoQuantModel.from_fp(params, cfg).perplexity(evalb)
 
     # 3. NanoQuant PTQ (paper Alg. 1): calibrate -> block reconstruction
     #    (LB-ADMM init + STE refinement) -> scale-only KD
     calib = calib_batches(cfg, 16, 64, corpus=corpus)
-    qcfg = QuantConfig(target_bpw=1.0, admm_iters=20, t_pre=8, t_post=12,
-                       t_glob=8, min_dim=32)
-    qparams, report = nanoquant_quantize(params, cfg, calib, qcfg)
-    ppl_q = eval_perplexity(T.loss_fn, qparams, cfg, evalb)
+    qcfg = api.QuantConfig(target_bpw=1.0, admm_iters=20, t_pre=8,
+                           t_post=12, t_glob=8, min_dim=32)
+    model = api.NanoQuantModel.quantize(params, cfg, calib, qcfg)
+    ppl_q = model.perplexity(evalb)
 
-    # 4. results
-    packed = sum(packed_nbytes(lin) for lin in _packed_linears(qparams))
+    # 4. persist + reload: the artifact is self-describing (manifest
+    #    carries configs + ranks), so load needs only the directory
+    out = tempfile.mkdtemp(prefix="nq_quickstart_")
+    model.save(out)
+    reloaded = api.NanoQuantModel.load(out)
+
+    # 5. generate from the packed model
+    prompts = [np.arange(8, dtype=np.int32), np.arange(12, dtype=np.int32)]
+    outs = reloaded.generate(prompts, max_new_tokens=8)
+
+    # 6. results
+    sizes = reloaded.size_report()
     print("\n=== quickstart results ===")
     print(f"FP16 teacher ppl : {ppl_fp:.3f}")
     print(f"NanoQuant ppl    : {ppl_q:.3f}   (target 1.0 bit/weight)")
-    print(f"packed linears   : {packed/1e6:.2f} MB "
-          f"(wall {report['wall_s']:.0f}s, "
-          f"{len(report['ranks'])} layers factorized)")
-
-
-def _packed_linears(tree):
-    if isinstance(tree, dict):
-        if "qu_t" in tree:
-            yield tree
-        else:
-            for v in tree.values():
-                yield from _packed_linears(v)
+    print(f"linears bpw      : {sizes['linears_bpw']:.3f} "
+          f"(wall {model.report['wall_s']:.0f}s, "
+          f"{len(model.ranks)} layers factorized)")
+    print(f"artifact         : {out} (manifest + packed checkpoint)")
+    print(f"generated        : {[o.tolist() for o in outs]}")
 
 
 if __name__ == "__main__":

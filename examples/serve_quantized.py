@@ -1,6 +1,7 @@
-"""Batched serving of a NanoQuant-packed model: quantize a teacher, then
-drive the wave-scheduled BatchServer with a stream of requests — the
-end-to-end inference driver (paper §4.4 deployment scenario).
+"""Batched serving of a NanoQuant-packed model through the ``repro.api``
+facade: quantize a teacher, then drive the wave-scheduled BatchServer
+with a stream of requests — the end-to-end inference driver (paper §4.4
+deployment scenario).
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -13,33 +14,32 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
-from repro import configs
-from repro.core.pipeline import QuantConfig, nanoquant_quantize
+from repro import api
 from repro.data import calib_batches
 from repro.models import transformer as T
-from repro.serve import BatchServer, Request, ServeConfig
 
 
 def main():
-    cfg = configs.get_smoke("qwen3-4b")
+    cfg = api.get_smoke("qwen3-4b")
     params = T.init_params(jax.random.PRNGKey(0), cfg)
 
     print("[1/3] quantizing to 1 bit (fast settings)...")
     calib = calib_batches(cfg, 8, 48, batch=4)
-    qcfg = QuantConfig(admm_iters=10, t_pre=4, t_post=6, t_glob=4,
-                       min_dim=32)
-    qparams, _ = nanoquant_quantize(params, cfg, calib, qcfg, verbose=False)
+    qcfg = api.QuantConfig(admm_iters=10, t_pre=4, t_post=6, t_glob=4,
+                           min_dim=32)
+    model = api.NanoQuantModel.quantize(params, cfg, calib, qcfg,
+                                        verbose=False)
 
     print("[2/3] starting batch server (max_batch=4)...")
-    srv = BatchServer(qparams, cfg, ServeConfig(max_new_tokens=16,
-                                                temperature=0.8, top_k=32),
-                      max_batch=4, max_len=64)
+    srv = model.server(api.ServeConfig(max_new_tokens=16, temperature=0.8,
+                                       top_k=32),
+                       max_batch=4, max_len=64)
     rng = np.random.default_rng(0)
     n_req = 12
     for uid in range(n_req):
         prompt = rng.integers(0, cfg.vocab_size,
                               size=(8 + uid % 5,)).astype(np.int32)
-        srv.submit(Request(uid, prompt, max_new_tokens=8 + uid % 9))
+        srv.submit(api.Request(uid, prompt, max_new_tokens=8 + uid % 9))
 
     print("[3/3] serving...")
     t0 = time.time()

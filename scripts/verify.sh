@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# One reproducible gate for builders: tier-1 tests + a CPU smoke of the
+# full repro.api lifecycle (quantize -> save -> load -> generate).
+#
+#   scripts/verify.sh            # everything
+#   scripts/verify.sh --fast     # skip the launcher smoke
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+  echo "== CPU smoke: quantize -> save =="
+  OUT="${TMPDIR:-/tmp}/nq-verify-$$"
+  python -m repro.launch.quantize --arch qwen1.5-0.5b \
+    --teacher-steps 30 --calib-samples 4 --calib-seq 32 \
+    --admm-iters 6 --t-pre 2 --t-post 2 --t-glob 2 --out "$OUT"
+  echo "== CPU smoke: load artifact -> generate =="
+  python -m repro.launch.serve --quantized-ckpt "$OUT" \
+    --requests 2 --prompt-len 8 --max-new 4 --max-batch 2
+  rm -rf "$OUT"
+fi
+
+echo "verify: OK"

@@ -1,0 +1,66 @@
+"""``repro.api`` — the single public surface of the NanoQuant repro.
+
+Lifecycle::
+
+    from repro import api
+
+    cfg   = api.get_smoke("llama3.2-1b")
+    model = api.NanoQuantModel.quantize(params, cfg, calib,
+                                        api.QuantConfig(target_bpw=1.0))
+    model.save("/ckpt/nq")
+    model = api.NanoQuantModel.load("/ckpt/nq")
+    outs  = model.generate(prompts, max_new_tokens=32)
+    ppl   = model.perplexity()
+
+Extension points::
+
+    @api.register_init_method("my_init")     # paper Table 5 ablations
+    def my_init(w, d_in, d_out, *, rank, admm, key): ...
+
+    @api.register_arch("my-model-1b")        # new architectures
+    def _spec(): return api.ArchSpec(...)
+
+    with api.kernel_policy(api.KernelPolicy(mode="pallas")):
+        ...                                  # explicit kernel dispatch
+
+Everything here is re-exported from the implementing layer; downstream
+code (launchers, examples, benchmarks) should import only this module.
+"""
+from repro.api.archs import (  # noqa: F401
+    ARCHS, ArchSpec, get_arch, get_config, get_smoke, list_archs,
+    register_arch, shapes_for)
+from repro.api.init_methods import (  # noqa: F401
+    INIT_METHODS, get_init_method, list_init_methods, register_init_method)
+from repro.api.model import (  # noqa: F401
+    MANIFEST_NAME, MANIFEST_VERSION, NanoQuantModel)
+from repro.api.registry import Registry, UnknownNameError  # noqa: F401
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    QuantConfig, nanoquant_quantize, tune_scales_kd)
+from repro.kernels.ops import (  # noqa: F401
+    KernelPolicy, current_kernel_policy, kernel_policy,
+    lowrank_binary_matmul, set_kernel_policy)
+from repro.quant.surgery import (  # noqa: F401
+    abstract_quantized_params, packed_model_bytes, quantizable_paths)
+from repro.serve.batcher import BatchServer, Request  # noqa: F401
+from repro.serve.engine import ServeConfig  # noqa: F401
+
+__all__ = [
+    # artifact
+    "NanoQuantModel", "MANIFEST_NAME", "MANIFEST_VERSION",
+    # pipeline
+    "QuantConfig", "nanoquant_quantize", "tune_scales_kd",
+    # registries
+    "Registry", "UnknownNameError",
+    "ARCHS", "ArchSpec", "register_arch", "get_arch", "get_config",
+    "get_smoke", "list_archs", "shapes_for",
+    "INIT_METHODS", "register_init_method", "get_init_method",
+    "list_init_methods",
+    # kernels
+    "KernelPolicy", "kernel_policy", "current_kernel_policy",
+    "set_kernel_policy", "lowrank_binary_matmul",
+    # surgery / storage
+    "abstract_quantized_params", "packed_model_bytes", "quantizable_paths",
+    # serving / persistence
+    "BatchServer", "Request", "ServeConfig", "CheckpointManager",
+]

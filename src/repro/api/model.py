@@ -1,0 +1,190 @@
+"""The NanoQuant model artifact: one object for the whole lifecycle.
+
+    model = NanoQuantModel.quantize(params, cfg, calib, qcfg)
+    model.save("/ckpt/nq")                      # packed params + manifest
+    model = NanoQuantModel.load("/ckpt/nq")     # self-describing
+    outs  = model.generate(prompts, max_new_tokens=32)
+    ppl   = model.perplexity(eval_batches)
+    model.size_report()                         # storage accounting
+
+A saved artifact is a ``CheckpointManager`` checkpoint plus a versioned
+``nanoquant.json`` manifest carrying the full model/quant configs, the
+per-layer factorization ranks and the pipeline report — enough to
+rebuild the restore template and the serving stack without the caller
+re-wiring ``core.pipeline`` + ``quant.surgery`` + ``checkpoint`` +
+``serve`` by hand.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.pipeline import QuantConfig, nanoquant_quantize
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.quant.surgery import abstract_quantized_params, packed_model_bytes
+from repro.serve.batcher import BatchServer, Request
+from repro.serve.engine import ServeConfig
+
+MANIFEST_NAME = "nanoquant.json"
+MANIFEST_VERSION = 1
+
+
+@dataclasses.dataclass
+class NanoQuantModel:
+    """A (possibly) NanoQuant-packed model: params + configs + report."""
+    params: Any
+    cfg: ModelConfig
+    qcfg: Optional[QuantConfig] = None      # None => FP (unquantized)
+    report: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # ---- lifecycle: quantize ---------------------------------------------
+
+    @classmethod
+    def quantize(cls, params, cfg: ModelConfig, calib,
+                 qcfg: Optional[QuantConfig] = None,
+                 verbose: bool = True) -> "NanoQuantModel":
+        """Run the full pipeline (paper Alg. 1) on an FP teacher."""
+        qcfg = qcfg or QuantConfig()
+        qparams, report = nanoquant_quantize(params, cfg, calib, qcfg,
+                                             verbose=verbose)
+        return cls(qparams, cfg, qcfg, report)
+
+    @classmethod
+    def from_fp(cls, params, cfg: ModelConfig) -> "NanoQuantModel":
+        """Wrap unquantized params (FP baseline) in the same artifact."""
+        return cls(params, cfg, None, {})
+
+    @property
+    def quantized(self) -> bool:
+        return self.qcfg is not None
+
+    @property
+    def ranks(self) -> Dict[str, int]:
+        return dict(self.report.get("ranks", {}))
+
+    # ---- lifecycle: save / load ------------------------------------------
+
+    def save(self, directory: str, step: int = 0) -> str:
+        """Write packed params + versioned manifest; returns `directory`."""
+        os.makedirs(directory, exist_ok=True)
+        CheckpointManager(directory).save(step, self.params)
+        manifest = {
+            "format": "nanoquant-model",
+            "version": MANIFEST_VERSION,
+            "arch": self.cfg.name,
+            "family": self.cfg.family,
+            "quantized": self.quantized,
+            "target_bpw": self.qcfg.target_bpw if self.quantized else 16.0,
+            "model_config": dataclasses.asdict(self.cfg),
+            "quant_config": (dataclasses.asdict(self.qcfg)
+                             if self.quantized else None),
+            "ranks": self.report.get("ranks", {}),
+            "report": _json_safe(
+                {k: v for k, v in self.report.items() if k != "ranks"}),
+        }
+        with open(os.path.join(directory, MANIFEST_NAME), "w") as f:
+            json.dump(manifest, f, indent=1)
+        return directory
+
+    @classmethod
+    def load(cls, directory: str) -> "NanoQuantModel":
+        """Restore from :meth:`save` output. Self-describing: the
+        manifest rebuilds the configs and the restore template."""
+        path = os.path.join(directory, MANIFEST_NAME)
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"{path} not found — is {directory!r} a NanoQuantModel "
+                f"artifact (written by NanoQuantModel.save)?")
+        with open(path) as f:
+            manifest = json.load(f)
+        if manifest.get("format") != "nanoquant-model":
+            raise ValueError(f"{path} is not a nanoquant-model manifest")
+        if manifest["version"] > MANIFEST_VERSION:
+            raise ValueError(
+                f"manifest version {manifest['version']} is newer than "
+                f"this build supports ({MANIFEST_VERSION})")
+        cfg = ModelConfig(**manifest["model_config"])
+        qcfg = (QuantConfig(**manifest["quant_config"])
+                if manifest.get("quantized") else None)
+        template = jax.tree.map(lambda s: np.zeros(s.shape, s.dtype),
+                                _param_template(cfg, qcfg))
+        restored = CheckpointManager(directory).restore_latest(
+            template=template)
+        if restored is None:
+            raise FileNotFoundError(f"no checkpoint steps in {directory!r}")
+        _, params = restored
+        report = dict(manifest.get("report", {}))
+        report["ranks"] = manifest.get("ranks", {})
+        return cls(params, cfg, qcfg, report)
+
+    # ---- lifecycle: serve -------------------------------------------------
+
+    def server(self, scfg: Optional[ServeConfig] = None, max_batch: int = 8,
+               max_len: int = 512, seed: int = 0) -> BatchServer:
+        """A wave-scheduled :class:`BatchServer` over this model."""
+        return BatchServer(self.params, self.cfg, scfg or ServeConfig(),
+                           max_batch=max_batch, max_len=max_len, seed=seed)
+
+    def generate(self, prompts: Sequence[np.ndarray],
+                 max_new_tokens: Optional[int] = None,
+                 scfg: Optional[ServeConfig] = None, max_batch: int = 8,
+                 seed: int = 0) -> List[np.ndarray]:
+        """Batched generation; returns one output array per prompt, in
+        order. The token budget is `max_new_tokens` if given, else
+        `scfg.max_new_tokens`."""
+        if not prompts:
+            raise ValueError("generate() needs at least one prompt")
+        if max_new_tokens is None:
+            max_new_tokens = (scfg or ServeConfig()).max_new_tokens
+        scfg = scfg or ServeConfig(max_new_tokens=max_new_tokens)
+        max_len = max(len(p) for p in prompts) + max_new_tokens
+        srv = self.server(scfg, max_batch=max_batch, max_len=max_len,
+                          seed=seed)
+        for uid, prompt in enumerate(prompts):
+            srv.submit(Request(uid, np.asarray(prompt, np.int32),
+                               max_new_tokens=max_new_tokens))
+        done = srv.run()
+        return [done[uid].output for uid in range(len(prompts))]
+
+    # ---- lifecycle: evaluate ---------------------------------------------
+
+    def perplexity(self, batches=None, n_samples: int = 8, seq: int = 64,
+                   seed: int = 99) -> float:
+        """exp(mean token NLL). `batches` defaults to a deterministic
+        synthetic eval set (offline WikiText-2 stand-in)."""
+        from repro.data.synthetic import calib_batches, eval_perplexity
+        if batches is None:
+            batches = calib_batches(self.cfg, n_samples, seq, seed=seed)
+        return eval_perplexity(T.loss_fn, self.params, self.cfg, batches)
+
+    def size_report(self) -> Dict[str, float]:
+        """Full-scale storage accounting for this config/bpw (exact
+        formulas — see ``quant.surgery.packed_model_bytes``)."""
+        q = self.qcfg or QuantConfig()
+        return packed_model_bytes(self.cfg, q.target_bpw, q.min_dim,
+                                  q.rank_align)
+
+
+def _param_template(cfg: ModelConfig, qcfg: Optional[QuantConfig]):
+    if qcfg is None:
+        from repro.configs.shapes import param_specs
+        return param_specs(cfg)
+    return abstract_quantized_params(cfg, qcfg.target_bpw, qcfg.min_dim,
+                                     qcfg.rank_align)
+
+
+def _json_safe(obj):
+    if isinstance(obj, dict):
+        return {k: _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_safe(v) for v in obj]
+    if isinstance(obj, (np.floating, np.integer)):
+        return obj.item()
+    return obj

@@ -1,4 +1,4 @@
-"""Assigned-architecture registry (``--arch <id>``).
+"""Assigned-architecture configs (``--arch <id>``).
 
 Each ``<arch>.py`` module defines:
 
@@ -6,47 +6,39 @@ Each ``<arch>.py`` module defines:
 - ``SMOKE``   — a reduced same-family config for CPU smoke tests,
 - ``SHAPES``  — the input-shape cells this arch runs (subset of
   ``repro.configs.shapes.SHAPES``; ``long_500k`` only for sub-quadratic
-  families per the assignment note — see DESIGN.md §5).
+  families per the assignment note — see DESIGN.md §5),
+
+and self-registers into the ``repro.api`` arch registry via
+``@register_arch`` — the static module-name table that used to live
+here is gone. This module keeps the historical accessors
+(``list_archs`` / ``get_config`` / ``get_smoke`` / ``shapes_for``) as
+thin delegations; new code should use ``repro.api`` directly.
 """
 from __future__ import annotations
 
-import importlib
-from typing import Dict, List
+from typing import List
 
+from repro.api import archs as _archs
 from repro.models.config import ModelConfig
 
-# arch-id (CLI spelling) -> module name
-_REGISTRY: Dict[str, str] = {
-    "musicgen-medium": "musicgen_medium",
-    "zamba2-1.2b": "zamba2_1p2b",
-    "qwen3-4b": "qwen3_4b",
-    "qwen1.5-110b": "qwen1p5_110b",
-    "qwen1.5-0.5b": "qwen1p5_0p5b",
-    "llama3.2-1b": "llama3p2_1b",
-    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
-    "deepseek-v2-lite-16b": "deepseek_v2_lite",
-    "llama-3.2-vision-90b": "llama3p2_vision_90b",
-    "mamba2-370m": "mamba2_370m",
-}
-
-
-def _module(arch: str):
-    if arch not in _REGISTRY:
-        raise KeyError(f"unknown arch {arch!r}; choose from {list(_REGISTRY)}")
-    return importlib.import_module(f"repro.configs.{_REGISTRY[arch]}")
+# importing the arch modules registers them (decorator side effect)
+from repro.configs import (  # noqa: F401,E402
+    deepseek_v2_lite, llama3p2_1b, llama3p2_vision_90b, mamba2_370m,
+    musicgen_medium, qwen1p5_0p5b, qwen1p5_110b, qwen3_4b, qwen3_moe_235b,
+    zamba2_1p2b)
 
 
 def list_archs() -> List[str]:
-    return list(_REGISTRY)
+    return _archs.list_archs()
 
 
 def get_config(arch: str) -> ModelConfig:
-    return _module(arch).CONFIG
+    return _archs.get_config(arch)
 
 
 def get_smoke(arch: str) -> ModelConfig:
-    return _module(arch).SMOKE
+    return _archs.get_smoke(arch)
 
 
 def shapes_for(arch: str) -> List[str]:
-    return list(_module(arch).SHAPES)
+    return _archs.shapes_for(arch)

@@ -1,5 +1,6 @@
 """llama3.2-1b [dense] — 16L d_model=2048 32H (GQA kv=8) d_ff=8192
 vocab=128256 [hf:meta-llama/Llama-3.2-1B; unverified]."""
+from repro.api.archs import ArchSpec, register_arch
 from repro.models.config import ModelConfig, scaled_down
 
 CONFIG = ModelConfig(
@@ -22,3 +23,8 @@ SMOKE = scaled_down(
     loss_chunk=0, remat=False)
 
 SHAPES = ["train_4k", "prefill_32k", "decode_32k"]
+
+
+@register_arch("llama3.2-1b")
+def _arch() -> ArchSpec:
+    return ArchSpec("llama3.2-1b", CONFIG, SMOKE, tuple(SHAPES))

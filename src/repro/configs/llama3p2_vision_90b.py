@@ -6,6 +6,7 @@ The vision frontend is a STUB per the assignment: ``input_specs``
 provides precomputed patch embeddings (B, n_image_tokens, d_model); the
 backbone projects them to per-cross-layer K/V.
 """
+from repro.api.archs import ArchSpec, register_arch
 from repro.models.config import ModelConfig, scaled_down
 
 CONFIG = ModelConfig(
@@ -29,3 +30,8 @@ SMOKE = scaled_down(
     cross_attn_every=2, n_image_tokens=16, loss_chunk=0, remat=False)
 
 SHAPES = ["train_4k", "prefill_32k", "decode_32k"]
+
+
+@register_arch("llama-3.2-vision-90b")
+def _arch() -> ArchSpec:
+    return ArchSpec("llama-3.2-vision-90b", CONFIG, SMOKE, tuple(SHAPES))

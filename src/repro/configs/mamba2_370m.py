@@ -1,5 +1,6 @@
 """mamba2-370m [ssm] — 48L d_model=1024, attn-free, vocab=50280,
 ssm_state=128, SSD state-space duality [arXiv:2405.21060; unverified]."""
+from repro.api.archs import ArchSpec, register_arch
 from repro.models.config import ModelConfig, scaled_down
 
 CONFIG = ModelConfig(
@@ -24,3 +25,8 @@ SMOKE = scaled_down(
     loss_chunk=0, remat=False)
 
 SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+@register_arch("mamba2-370m")
+def _arch() -> ArchSpec:
+    return ArchSpec("mamba2-370m", CONFIG, SMOKE, tuple(SHAPES))

@@ -6,6 +6,7 @@ assignment: the backbone consumes precomputed 4-codebook token streams
 (tokens shape (B, S, 4)); embeddings are summed per-codebook tables and
 the head predicts all 4 codebooks in parallel.
 """
+from repro.api.archs import ArchSpec, register_arch
 from repro.models.config import ModelConfig, scaled_down
 
 CONFIG = ModelConfig(
@@ -29,3 +30,8 @@ SMOKE = scaled_down(
 
 # full attention -> long_500k skipped (see DESIGN.md §5)
 SHAPES = ["train_4k", "prefill_32k", "decode_32k"]
+
+
+@register_arch("musicgen-medium")
+def _arch() -> ArchSpec:
+    return ArchSpec("musicgen-medium", CONFIG, SMOKE, tuple(SHAPES))

@@ -1,5 +1,6 @@
 """qwen1.5-0.5b [dense] — 24L d_model=1024 16H (GQA kv=16) d_ff=2816
 vocab=151936, QKV bias [hf:Qwen/Qwen1.5-0.5B; hf]."""
+from repro.api.archs import ArchSpec, register_arch
 from repro.models.config import ModelConfig, scaled_down
 
 CONFIG = ModelConfig(
@@ -21,3 +22,8 @@ SMOKE = scaled_down(
     loss_chunk=0, remat=False)
 
 SHAPES = ["train_4k", "prefill_32k", "decode_32k"]
+
+
+@register_arch("qwen1.5-0.5b")
+def _arch() -> ArchSpec:
+    return ArchSpec("qwen1.5-0.5b", CONFIG, SMOKE, tuple(SHAPES))

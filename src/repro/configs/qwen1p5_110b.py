@@ -1,5 +1,6 @@
 """qwen1.5-110b [dense] — 80L d_model=8192 64H (GQA kv=8) d_ff=49152
 vocab=152064, QKV bias [hf:Qwen/Qwen1.5-0.5B family scaling; hf]."""
+from repro.api.archs import ArchSpec, register_arch
 from repro.models.config import ModelConfig, scaled_down
 
 CONFIG = ModelConfig(
@@ -22,3 +23,8 @@ SMOKE = scaled_down(
     loss_chunk=0, remat=False)
 
 SHAPES = ["train_4k", "prefill_32k", "decode_32k"]
+
+
+@register_arch("qwen1.5-110b")
+def _arch() -> ArchSpec:
+    return ArchSpec("qwen1.5-110b", CONFIG, SMOKE, tuple(SHAPES))

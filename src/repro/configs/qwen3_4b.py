@@ -1,5 +1,6 @@
 """qwen3-4b [dense] — 36L d_model=2560 32H (GQA kv=8) d_ff=9728
 vocab=151936, qk_norm [hf:Qwen/Qwen3-8B; hf]."""
+from repro.api.archs import ArchSpec, register_arch
 from repro.models.config import ModelConfig, scaled_down
 
 CONFIG = ModelConfig(
@@ -22,3 +23,8 @@ SMOKE = scaled_down(
     loss_chunk=0, remat=False)
 
 SHAPES = ["train_4k", "prefill_32k", "decode_32k"]
+
+
+@register_arch("qwen3-4b")
+def _arch() -> ArchSpec:
+    return ArchSpec("qwen3-4b", CONFIG, SMOKE, tuple(SHAPES))

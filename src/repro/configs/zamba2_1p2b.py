@@ -7,6 +7,7 @@ style). We give the shared block a 4096 sliding window so the arch stays
 sub-quadratic at the ``long_500k`` decode cell (adaptation recorded in
 DESIGN.md §5).
 """
+from repro.api.archs import ArchSpec, register_arch
 from repro.models.config import ModelConfig, scaled_down
 
 CONFIG = ModelConfig(
@@ -34,3 +35,8 @@ SMOKE = scaled_down(
     loss_chunk=0, remat=False)
 
 SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+@register_arch("zamba2-1.2b")
+def _arch() -> ArchSpec:
+    return ArchSpec("zamba2-1.2b", CONFIG, SMOKE, tuple(SHAPES))

@@ -1,0 +1,31 @@
+"""Param-tree layout shared by the concrete pipeline and the abstract
+surgery — the single source of truth for *which* linears NanoQuant packs.
+
+``core.pipeline`` (walks real weights) and ``quant.surgery`` (walks
+ShapeDtypeStructs) must agree exactly on the selection rule, or the
+serving dry-run template diverges from what the pipeline emits.
+"""
+from __future__ import annotations
+
+# param-tree keys holding transformer blocks (per family)
+BLOCK_STACKS = ("layers", "dense_layers", "self_layers", "cross_layers",
+                "shared_attn")
+
+# router: FP by design (paper; <0.01% of params). w_uk/w_uv: the MLA
+# absorbed-decode path contracts these into the latent cache space — they
+# stay FP (DESIGN.md §5; ~1% of deepseek params).
+EXCLUDE_LINEARS = frozenset({"router", "w_uk", "w_uv"})
+
+# sign bits are packed 32-per-uint32 along d_in, so only d_in % 32 == 0
+# linears are packable
+PACK_ALIGN = 32
+
+
+def quantizable_linear(name: str, w_shape, min_dim: int) -> bool:
+    """Selection rule for one linear leaf ``{"w": w_shape}`` named
+    ``name``: not excluded, 2D (or stacked-expert 3D), both matmul dims
+    >= ``min_dim``, and a packable d_in."""
+    return (name not in EXCLUDE_LINEARS
+            and len(w_shape) >= 2
+            and min(w_shape[-2:]) >= min_dim
+            and w_shape[-2] % PACK_ALIGN == 0)

@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.core import packing, precond, quantize, util
 from repro.core.admm import ADMMConfig
-from repro.core.baselines import dbf_admm_init, dual_svid_init
+from repro.core.layout import EXCLUDE_LINEARS, quantizable_linear
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.train.optim import AdamW, cosine_schedule
@@ -134,10 +134,9 @@ def make_apply(cfg, kind):
 # linear enumeration within a block
 # ---------------------------------------------------------------------------
 
-# router: FP by design (paper; <0.01% of params). w_uk/w_uv: the MLA
-# absorbed-decode path contracts these into the latent cache space — they
-# stay FP (DESIGN.md §5; ~1% of deepseek params).
-_EXCLUDE = {"router", "w_uk", "w_uv"}
+# selection rule + FP exclusions single-sourced in core.layout (shared
+# with quant.surgery's abstract walk)
+_EXCLUDE = EXCLUDE_LINEARS
 
 
 def linear_paths(bp, min_dim: int) -> List[Tuple[str, ...]]:
@@ -148,10 +147,7 @@ def linear_paths(bp, min_dim: int) -> List[Tuple[str, ...]]:
             v = d[k]
             if isinstance(v, dict):
                 if "w" in v and not isinstance(v["w"], dict):
-                    w = v["w"]
-                    if (k not in _EXCLUDE and w.ndim in (2, 3)
-                            and min(w.shape[-2:]) >= min_dim
-                            and w.shape[-2] % 32 == 0):   # packable d_in
+                    if quantizable_linear(k, v["w"].shape, min_dim):
                         paths.append(path + (k,))
                 else:
                     walk(v, path + (k,))
@@ -241,20 +237,24 @@ def _is_scale_path(path: str) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# init dispatch (Table 5 ablation)
+# init dispatch (Table 5 ablation) — resolved through the repro.api
+# init-method registry; new methods plug in via @register_init_method
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("rank", "admm", "method"))
+@functools.lru_cache(maxsize=None)
+def _jitted_init(fn, rank: int, admm: ADMMConfig):
+    return jax.jit(lambda w, d_in, d_out, key: fn(
+        w, d_in, d_out, rank=rank, admm=admm, key=key))
+
+
 def _init_latent_2d(w, d_in, d_out, rank, admm, method, key):
-    if method == "lb_admm":
-        lat, _ = quantize.quantize_weight(w, d_in, d_out, rank, admm, key)
-        return lat
-    if method == "dual_svid":
-        return dual_svid_init(w, rank)
-    if method == "dbf_admm":
-        return dbf_admm_init(w, rank, iters=admm.iters, key=key)
-    raise ValueError(method)
+    # resolve on every call (cheap dict lookup) so re-registered /
+    # unregistered methods take effect; the jit cache keys on the
+    # resolved function object
+    from repro.api.init_methods import get_init_method
+    return _jitted_init(get_init_method(method), rank, admm)(
+        w, d_in, d_out, key)
 
 
 def _init_latent(p, d_in, d_out, qcfg: QuantConfig, key):
@@ -483,3 +483,8 @@ def _tune_scales_kd(teacher, qparams, cfg, calib_batches, qcfg: QuantConfig):
         trainable, state, _ = opt.update(grads, state, trainable)
         losses.append(float(lval))
     return util.combine(trainable, frozen), losses
+
+
+# public name (repro.api): run Phase 3 standalone with its own data
+# budget (paper Table 9 block-vs-model reconstruction splits)
+tune_scales_kd = _tune_scales_kd

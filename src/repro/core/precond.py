@@ -83,16 +83,25 @@ def collect_stats(loss_fn, params, cfg, batches, jit: bool = True):
     from repro.models import layers as L
 
     collector = StatCollector()
-    L.set_tap(collector)
+
+    def _loss(p, b):
+        return loss_fn(p, cfg, b, training=False)
+    fwd = jax.jit(_loss) if jit else _loss
+    g = jax.jit(jax.grad(_loss)) if jit else jax.grad(_loss)
     try:
-        def _loss(p, b):
-            return loss_fn(p, cfg, b, training=False)
-        g = jax.grad(_loss)
-        if jit:
-            g = jax.jit(g)
+        # "in" taps: forward-only pass. jax drops plain debug callbacks
+        # inside scan bodies under grad (the primal is re-staged through
+        # partial eval without them), so the activation moments must come
+        # from an undifferentiated forward.
+        L.set_tap(collector, fields=("in",))
+        for b in batches:
+            fwd(params, b)
+            jax.effects_barrier()          # block until callbacks flush
+        # "out" taps: fire from the custom-vjp backward rule, which the
+        # grad pass does execute.
+        L.set_tap(collector, fields=("out",))
         for b in batches:
             g(params, b)
-            # block until callbacks flush
             jax.effects_barrier()
     finally:
         L.set_tap(None)

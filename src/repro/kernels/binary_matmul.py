@@ -23,6 +23,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed TPUCompilerParams -> CompilerParams across jax releases
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _kernel(x_ref, w_ref, sk_ref, sn_ref, o_ref, acc_ref, *, n_k: int, bk: int):
     @pl.when(pl.program_id(2) == 0)
@@ -96,7 +100,7 @@ def packed_matmul(x, packed_w, s_k=None, s_n=None, *,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, packed_w, sk2, sn2)

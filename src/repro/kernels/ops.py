@@ -1,57 +1,136 @@
 """Jit'd public wrappers for the binary kernels.
 
-The model stack calls :func:`lowrank_binary_matmul`; execution mode is a
-process-global policy:
+The model stack calls :func:`lowrank_binary_matmul`; execution is
+governed by an explicit, immutable :class:`KernelPolicy`:
 
-- ``"ref"``   — pure-jnp oracle. Lowerable on every backend and under any
-  pjit sharding, so it is the default for CPU runs and the multi-pod
-  dry-run (XLA SPMD partitions it like any matmul chain).
-- ``"pallas"`` — the Pallas TPU kernel (interpret=True off-TPU), for real
-  deployments and kernel validation.
-- ``"auto"``  — pallas on TPU backends, ref elsewhere.
+- ``mode="ref"``    — pure-jnp oracle. Lowerable on every backend and
+  under any pjit sharding, so it is the right choice for CPU runs and
+  the multi-pod dry-run (XLA SPMD partitions it like any matmul chain).
+- ``mode="pallas"`` — the Pallas TPU kernel (interpret mode off-TPU),
+  for real deployments and kernel validation.
+- ``mode="auto"``   — pallas on TPU backends, ref elsewhere.
+
+A policy can be threaded explicitly (``lowrank_binary_matmul(...,
+policy=p)``), installed for a scope (``with kernel_policy(p): ...``), or
+set process-wide (:func:`set_kernel_policy`). The scoped form restores
+the previous policy on exit and is contextvar-based, so concurrent
+threads / asyncio tasks do not trample each other.
+
+``set_kernel_mode`` / ``kernel_mode`` are deprecated shims over the old
+mutable process-global mode list.
 """
 from __future__ import annotations
 
 import contextlib
+import contextvars
+import dataclasses
+import warnings
+from typing import Optional, Union
 
 import jax
 
 from repro.kernels import binary_matmul, ref
 
-_MODE = ["auto"]
+_MODES = ("auto", "ref", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Execution policy for the packed binary matmul.
+
+    interpret: run the Pallas kernel in interpreter mode. ``None``
+    resolves at call time to "interpret unless on a real TPU backend".
+    """
+    mode: str = "auto"
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(
+                f"unknown kernel mode {self.mode!r}; choose from {_MODES}")
+
+    def use_pallas(self) -> bool:
+        if self.mode == "auto":
+            return jax.default_backend() == "tpu"
+        return self.mode == "pallas"
+
+    def resolve_interpret(self) -> bool:
+        if self.interpret is None:
+            return jax.default_backend() != "tpu"
+        return self.interpret
+
+
+# Scoped overrides live in a ContextVar (thread/async-local); the
+# process-wide default lives in a plain module global so that
+# set_kernel_policy is visible from every thread (new threads start with
+# a fresh contextvars.Context and would miss a ContextVar-only set).
+_DEFAULT_POLICY = [KernelPolicy()]
+_POLICY: contextvars.ContextVar[Optional[KernelPolicy]] = \
+    contextvars.ContextVar("nanoquant_kernel_policy", default=None)
+
+
+def current_kernel_policy() -> KernelPolicy:
+    scoped = _POLICY.get()
+    return scoped if scoped is not None else _DEFAULT_POLICY[0]
+
+
+def set_kernel_policy(policy: KernelPolicy) -> KernelPolicy:
+    """Install `policy` process-wide (all threads); returns the previous
+    default. Scoped `kernel_policy(...)` overrides still win."""
+    prev = _DEFAULT_POLICY[0]
+    _DEFAULT_POLICY[0] = _coerce(policy)
+    return prev
+
+
+def _coerce(policy: Union[KernelPolicy, str]) -> KernelPolicy:
+    if isinstance(policy, str):
+        return KernelPolicy(mode=policy)
+    return policy
+
+
+@contextlib.contextmanager
+def kernel_policy(policy: Union[KernelPolicy, str]):
+    """Scoped policy override (this thread/task only); restores the
+    prior policy on exit."""
+    token = _POLICY.set(_coerce(policy))
+    try:
+        yield current_kernel_policy()
+    finally:
+        _POLICY.reset(token)
+
+
+def lowrank_binary_matmul(x, qv, qu_t, s1, s2,
+                          policy: Optional[KernelPolicy] = None):
+    """y = s1 ⊙ ((x ⊙ s2) @ V±1) @ U±1ᵀ  — packed operands (paper Eq. 1).
+
+    Dispatches per `policy` (explicit argument wins, else the active
+    contextvar policy)."""
+    p = policy if policy is not None else current_kernel_policy()
+    if p.use_pallas():
+        return binary_matmul.lowrank_binary_matmul_pallas(
+            x, qv, qu_t, s1, s2, interpret=p.resolve_interpret())
+    return ref.lowrank_binary_matmul_ref(x, qv, qu_t, s1, s2)
+
+
+# ---------------------------------------------------------------------------
+# deprecated process-global mode API (pre-KernelPolicy)
+# ---------------------------------------------------------------------------
 
 
 def set_kernel_mode(mode: str) -> None:
-    assert mode in ("auto", "ref", "pallas")
-    _MODE[0] = mode
+    """Deprecated: use ``set_kernel_policy(KernelPolicy(mode=...))``."""
+    warnings.warn("set_kernel_mode is deprecated; use set_kernel_policy",
+                  DeprecationWarning, stacklevel=2)
+    set_kernel_policy(KernelPolicy(mode=mode))
 
 
 @contextlib.contextmanager
 def kernel_mode(mode: str):
-    prev = _MODE[0]
-    set_kernel_mode(mode)
-    try:
+    """Deprecated: use ``kernel_policy(mode)``."""
+    warnings.warn("kernel_mode is deprecated; use kernel_policy",
+                  DeprecationWarning, stacklevel=2)
+    with kernel_policy(mode):
         yield
-    finally:
-        _MODE[0] = prev
-
-
-def _use_pallas() -> bool:
-    mode = _MODE[0]
-    if mode == "pallas":
-        return True
-    if mode == "ref":
-        return False
-    return jax.default_backend() == "tpu"
-
-
-def lowrank_binary_matmul(x, qv, qu_t, s1, s2):
-    """y = s1 ⊙ ((x ⊙ s2) @ V±1) @ U±1ᵀ  — packed operands (paper Eq. 1)."""
-    if _use_pallas():
-        interp = jax.default_backend() != "tpu"
-        return binary_matmul.lowrank_binary_matmul_pallas(
-            x, qv, qu_t, s1, s2, interpret=interp)
-    return ref.lowrank_binary_matmul_ref(x, qv, qu_t, s1, s2)
 
 
 pack_signs = ref.pack_signs

@@ -82,7 +82,8 @@ def build_cell(arch: str, shape: str, mesh,
         cfg = dataclasses.replace(cfg, **cfg_overrides)
     cell = SH.SHAPES[shape]
     mode = cell.mode
-    kops.set_kernel_mode("ref")     # SPMD-partitionable path for AOT
+    # SPMD-partitionable path for AOT
+    kops.set_kernel_policy(kops.KernelPolicy(mode="ref"))
     # pin activation shardings (GSPMD propagation alone replicates
     # attention when kv-heads < the model axis — §Perf iteration 1)
     from repro.models import layers as L

@@ -27,9 +27,11 @@ def _mk(shape: Tuple[int, ...], axes: Tuple[str, ...]):
             f"set XLA_FLAGS=--xla_force_host_platform_device_count={need} "
             f"before the first jax import (dryrun.py does this)")
     try:
-        return jax.make_mesh(
-            shape, axes, devices=devs[:need],
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        kwargs = {}
+        if hasattr(jax.sharding, "AxisType"):   # absent in older jax
+            kwargs["axis_types"] = (
+                jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, devices=devs[:need], **kwargs)
     except TypeError:  # older jax without devices/axis_types kwargs
         from jax.experimental import mesh_utils
         arr = mesh_utils.create_device_mesh(shape, devices=devs[:need])

@@ -1,5 +1,6 @@
 """Quantization driver: train-or-load an FP teacher, run the NanoQuant
-pipeline, save the packed model, and report sizes + perplexities.
+pipeline through the ``repro.api`` facade, save the packed artifact, and
+report sizes + perplexities.
 
     PYTHONPATH=src python -m repro.launch.quantize --arch llama3.2-1b \
         --bpw 1.0 --teacher-steps 150 --out /tmp/nq
@@ -13,40 +14,39 @@ import argparse
 import json
 import os
 
-import jax
-
-from repro import configs
-from repro.checkpoint import CheckpointManager
-from repro.core.pipeline import QuantConfig, nanoquant_quantize
+from repro import api
 from repro.data import SyntheticCorpus, calib_batches, train_iterator
-from repro.data.synthetic import eval_perplexity
-from repro.models import transformer as T
-from repro.quant.surgery import packed_model_bytes
 from repro.train import TrainConfig, Trainer
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b",
-                    choices=configs.list_archs())
+                    choices=api.list_archs())
     ap.add_argument("--full", action="store_true",
                     help="full published config (needs real hardware)")
     ap.add_argument("--bpw", type=float, default=1.0)
+    ap.add_argument("--init-method", default="lb_admm",
+                    choices=api.list_init_methods())
     ap.add_argument("--teacher-steps", type=int, default=150)
     ap.add_argument("--calib-samples", type=int, default=16)
     ap.add_argument("--calib-seq", type=int, default=128)
     ap.add_argument("--out", default="")
     ap.add_argument("--teacher-ckpt", default="")
     ap.add_argument("--rank-align", type=int, default=32)
+    # pipeline budget knobs (CI smoke uses tiny values)
+    ap.add_argument("--admm-iters", type=int, default=40)
+    ap.add_argument("--t-pre", type=int, default=40)
+    ap.add_argument("--t-post", type=int, default=60)
+    ap.add_argument("--t-glob", type=int, default=60)
     args = ap.parse_args()
 
-    cfg = (configs.get_config(args.arch) if args.full
-           else configs.get_smoke(args.arch))
+    cfg = api.get_config(args.arch) if args.full else api.get_smoke(args.arch)
     tcfg = TrainConfig(lr=1e-3, warmup=20, total_steps=args.teacher_steps)
 
     # ---- FP teacher --------------------------------------------------------
     if args.teacher_ckpt:
-        mgr = CheckpointManager(args.teacher_ckpt)
+        mgr = api.CheckpointManager(args.teacher_ckpt)
         tr = Trainer(cfg, tcfg, train_iterator(cfg, 8, args.calib_seq), mgr)
         tr.restore_or_init()
         if tr.step < args.teacher_steps:
@@ -63,27 +63,29 @@ def main():
     calib = calib_batches(cfg, args.calib_samples, args.calib_seq,
                           corpus=corpus)
     evalb = calib_batches(cfg, 8, args.calib_seq, seed=99, corpus=corpus)
-    ppl_fp = eval_perplexity(T.loss_fn, params, cfg, evalb)
+    ppl_fp = api.NanoQuantModel.from_fp(params, cfg).perplexity(evalb)
 
     # ---- NanoQuant ---------------------------------------------------------
-    qcfg = QuantConfig(target_bpw=args.bpw, rank_align=args.rank_align)
-    qparams, report = nanoquant_quantize(params, cfg, calib, qcfg)
-    ppl_q = eval_perplexity(T.loss_fn, qparams, cfg, evalb)
+    qcfg = api.QuantConfig(target_bpw=args.bpw, rank_align=args.rank_align,
+                           init_method=args.init_method,
+                           admm_iters=args.admm_iters, t_pre=args.t_pre,
+                           t_post=args.t_post, t_glob=args.t_glob)
+    model = api.NanoQuantModel.quantize(params, cfg, calib, qcfg)
+    ppl_q = model.perplexity(evalb)
 
-    sizes = packed_model_bytes(cfg, args.bpw, qcfg.min_dim, args.rank_align)
+    sizes = model.size_report()
     print(f"\n[quantize] {cfg.name} target_bpw={args.bpw}")
     print(f"  FP teacher ppl   : {ppl_fp:.3f}")
     print(f"  NanoQuant ppl    : {ppl_q:.3f}")
     print(f"  linears bpw      : {sizes['linears_bpw']:.3f}")
-    print(f"  wall time        : {report['wall_s']:.1f}s")
+    print(f"  wall time        : {model.report['wall_s']:.1f}s")
     if args.out:
-        os.makedirs(args.out, exist_ok=True)
-        CheckpointManager(args.out).save(0, qparams)
+        model.save(args.out)
         with open(os.path.join(args.out, "report.json"), "w") as f:
             json.dump({"ppl_fp": ppl_fp, "ppl_q": ppl_q,
                        "sizes": sizes,
-                       "ranks": report["ranks"],
-                       "wall_s": report["wall_s"]}, f, indent=1)
+                       "ranks": model.ranks,
+                       "wall_s": model.report["wall_s"]}, f, indent=1)
         print(f"  saved to {args.out}")
 
 

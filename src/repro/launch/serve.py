@@ -1,7 +1,12 @@
-"""Serving driver: batched generation from a (quantized) model.
+"""Serving driver: batched generation from a (quantized) model artifact.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
         --quantized-ckpt /tmp/nq --requests 16 --max-new 32
+
+A ``--quantized-ckpt`` directory written by ``launch/quantize.py`` (a
+``NanoQuantModel`` artifact) is self-describing: the manifest carries the
+model config, so ``--arch`` is only needed for the fresh-quantize demo
+path.
 """
 from __future__ import annotations
 
@@ -11,22 +16,18 @@ import time
 import jax
 import numpy as np
 
-from repro import configs
-from repro.checkpoint import CheckpointManager
-from repro.core.pipeline import QuantConfig, nanoquant_quantize
-from repro.data import SyntheticCorpus, calib_batches
+from repro import api
+from repro.data import calib_batches
 from repro.models import transformer as T
-from repro.quant.surgery import abstract_quantized_params
-from repro.serve import BatchServer, Request, ServeConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b",
-                    choices=configs.list_archs())
+                    choices=api.list_archs())
     ap.add_argument("--quantized-ckpt", default="",
-                    help="packed checkpoint from launch/quantize.py; if "
-                         "empty, quantizes a fresh random-init teacher")
+                    help="NanoQuantModel artifact from launch/quantize.py; "
+                         "if empty, quantizes a fresh random-init teacher")
     ap.add_argument("--fp", action="store_true",
                     help="serve the FP teacher instead (baseline)")
     ap.add_argument("--requests", type=int, default=8)
@@ -35,34 +36,32 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     args = ap.parse_args()
 
-    cfg = configs.get_smoke(args.arch)
-    key = jax.random.PRNGKey(0)
-    params = T.init_params(key, cfg)
-    if not args.fp:
-        if args.quantized_ckpt:
-            import dataclasses as dc
-            template = jax.tree.map(
-                lambda s: np.zeros(s.shape, s.dtype),
-                abstract_quantized_params(cfg, rank_align=32))
-            mgr = CheckpointManager(args.quantized_ckpt)
-            step, params = mgr.restore_latest(template=template)
-            print(f"[serve] loaded packed checkpoint step {step}")
-        else:
+    if args.quantized_ckpt and not args.fp:
+        model = api.NanoQuantModel.load(args.quantized_ckpt)
+        print(f"[serve] loaded artifact {args.quantized_ckpt} "
+              f"(arch={model.cfg.name}, "
+              f"bpw={model.qcfg.target_bpw if model.quantized else 16})")
+    else:
+        cfg = api.get_smoke(args.arch)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        model = api.NanoQuantModel.from_fp(params, cfg)
+        if not args.fp:
             calib = calib_batches(cfg, 8, 64)
-            qcfg = QuantConfig(admm_iters=10, t_pre=5, t_post=5, t_glob=5,
-                               rank_align=32)
-            params, _ = nanoquant_quantize(params, cfg, calib, qcfg,
-                                           verbose=False)
+            qcfg = api.QuantConfig(admm_iters=10, t_pre=5, t_post=5,
+                                   t_glob=5, rank_align=32)
+            model = api.NanoQuantModel.quantize(params, cfg, calib, qcfg,
+                                                verbose=False)
             print("[serve] quantized random-init teacher (demo)")
 
-    scfg = ServeConfig(max_new_tokens=args.max_new)
-    srv = BatchServer(params, cfg, scfg, max_batch=args.max_batch,
-                      max_len=args.prompt_len + args.max_new)
+    cfg = model.cfg
+    scfg = api.ServeConfig(max_new_tokens=args.max_new)
+    srv = model.server(scfg, max_batch=args.max_batch,
+                       max_len=args.prompt_len + args.max_new)
     rng = np.random.default_rng(0)
     shape = ((args.prompt_len, cfg.n_codebooks)
              if cfg.family == "audio" else (args.prompt_len,))
     for uid in range(args.requests):
-        srv.submit(Request(uid, rng.integers(
+        srv.submit(api.Request(uid, rng.integers(
             0, cfg.vocab_size, size=shape).astype(np.int32),
             max_new_tokens=args.max_new))
     t0 = time.time()

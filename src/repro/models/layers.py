@@ -27,11 +27,18 @@ from repro.kernels import ops as kops
 # --------------------------------------------------------------------------
 
 _TAP = [None]
+_TAP_FIELDS = [("in", "out")]
 _SCOPE = [("", None)]  # (stack_name, traced layer index | None)
 
 
-def set_tap(collector) -> None:
+def set_tap(collector, fields=("in", "out")) -> None:
+    """Install `collector`; `fields` selects which taps fire ("in":
+    forward activation moments, "out": output-gradient moments). The
+    calibration driver runs them in separate passes — jax drops plain
+    forward debug callbacks inside scan under grad, so "in" must be
+    collected by a forward-only pass."""
     _TAP[0] = collector
+    _TAP_FIELDS[0] = tuple(fields)
 
 
 def set_scope(stack: str, idx) -> None:
@@ -62,7 +69,7 @@ _grad_tap.defvjp(_grad_tap_fwd, _grad_tap_bwd)
 
 def _tap_pre(name, x, expert=False):
     tap = _TAP[0]
-    if tap is None or name is None:
+    if tap is None or name is None or "in" not in _TAP_FIELDS[0]:
         return
     stack, idx = _SCOPE[0]
     red = (1,) if expert else tuple(range(x.ndim - 1))
@@ -75,7 +82,7 @@ def _tap_pre(name, x, expert=False):
 
 def _tap_post(name, y, expert=False):
     tap = _TAP[0]
-    if tap is None or name is None:
+    if tap is None or name is None or "out" not in _TAP_FIELDS[0]:
         return y
     stack, idx = _SCOPE[0]
     cb = tap.make_cb(stack, name, "out")

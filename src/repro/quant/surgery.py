@@ -16,14 +16,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bpw import nanoquant_bits, rank_for_bpw
+from repro.core.layout import BLOCK_STACKS, quantizable_linear
 from repro.models.config import ModelConfig
 
-# param-tree keys holding transformer blocks (per family)
-_BLOCK_STACKS = ("layers", "dense_layers", "self_layers", "cross_layers",
-                 "shared_attn")
-# keep in sync with core.pipeline._EXCLUDE (router FP by design; MLA
-# w_uk/w_uv stay FP for the absorbed decode path)
-_EXCLUDE = {"router", "w_uk", "w_uv"}
+# selection rule + FP exclusions single-sourced in core.layout (shared
+# with core.pipeline's concrete walk)
+_BLOCK_STACKS = BLOCK_STACKS
 
 
 def quantizable_paths(params, cfg: ModelConfig, min_dim: int = 48
@@ -37,10 +35,7 @@ def quantizable_paths(params, cfg: ModelConfig, min_dim: int = 48
             if not isinstance(v, dict):
                 continue
             if "w" in v and not isinstance(v["w"], dict):
-                w = v["w"]
-                if (k not in _EXCLUDE and len(w.shape) >= 2
-                        and min(w.shape[-2:]) >= min_dim
-                        and w.shape[-2] % 32 == 0):
+                if quantizable_linear(k, v["w"].shape, min_dim):
                     out.append((path + (k,), v))
             else:
                 walk(v, path + (k,))
@@ -79,9 +74,7 @@ def abstract_quantized_params(cfg: ModelConfig, target_bpw: float = 1.0,
         for k, v in tree.items():
             if isinstance(v, dict) and "w" in v and not isinstance(v["w"], dict):
                 w = v["w"]
-                if (k not in _EXCLUDE and len(w.shape) >= 2
-                        and min(w.shape[-2:]) >= min_dim
-                        and w.shape[-2] % 32 == 0):
+                if quantizable_linear(k, w.shape, min_dim):
                     struct, _ = _packed_struct(w.shape, target_bpw,
                                                rank_align)
                     if "b" in v:

@@ -1,0 +1,245 @@
+"""``repro.api`` facade: registries, NanoQuantModel lifecycle, and
+explicit kernel policy."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.data import calib_batches
+from repro.models import transformer as T
+
+_FAST = dict(admm_iters=4, t_pre=2, t_post=2, t_glob=2, rank_align=32,
+             min_dim=32)
+
+
+@pytest.fixture(scope="module")
+def tiny_quantized():
+    cfg = api.get_smoke("qwen1.5-0.5b")
+    cfg = dataclasses.replace(cfg, name="api-tiny")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    calib = calib_batches(cfg, 4, 32, batch=2)
+    model = api.NanoQuantModel.quantize(params, cfg, calib,
+                                        api.QuantConfig(**_FAST),
+                                        verbose=False)
+    return cfg, calib, model
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_init_method_lists_available():
+    with pytest.raises(KeyError) as exc:
+        api.get_init_method("no_such_init")
+    msg = str(exc.value)
+    for name in ("lb_admm", "dual_svid", "dbf_admm"):
+        assert name in msg
+    assert "no_such_init" in msg
+
+
+def test_unknown_arch_lists_available():
+    with pytest.raises(KeyError) as exc:
+        api.get_arch("no-such-arch")
+    msg = str(exc.value)
+    assert "llama3.2-1b" in msg and "no-such-arch" in msg
+    # the configs-package delegation surfaces the same error
+    from repro import configs
+    with pytest.raises(KeyError):
+        configs.get_config("no-such-arch")
+
+
+def test_unknown_init_method_fails_inside_pipeline():
+    cfg = api.get_smoke("llama3.2-1b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    calib = calib_batches(cfg, 2, 32, batch=2)
+    qcfg = api.QuantConfig(init_method="bogus", **_FAST)
+    with pytest.raises(KeyError, match="bogus"):
+        api.nanoquant_quantize(params, cfg, calib, qcfg, verbose=False)
+
+
+def test_register_custom_init_method_threads_through_pipeline():
+    @api.register_init_method("test_zero_lowrank")
+    def zero_init(w, d_in, d_out, *, rank, admm, key):
+        din, dout = w.shape
+        return {"lu": jnp.ones((dout, rank)), "lv": jnp.ones((din, rank)),
+                "s1": jnp.zeros((dout,)), "s2": jnp.zeros((din,))}
+
+    try:
+        assert "test_zero_lowrank" in api.list_init_methods()
+        cfg = api.get_smoke("llama3.2-1b")
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        calib = calib_batches(cfg, 2, 32, batch=2)
+        qcfg = api.QuantConfig(init_method="test_zero_lowrank",
+                               admm_iters=0, t_pre=0, t_post=0, t_glob=0,
+                               rank_align=32, min_dim=32)
+        model = api.NanoQuantModel.quantize(params, cfg, calib, qcfg,
+                                            verbose=False)
+        # zero scales => every packed linear contributes exactly 0
+        lp0 = jax.tree.map(lambda l: l[0], model.params["layers"])
+        assert float(jnp.abs(lp0["attn"]["wq"]["s1"]).max()) == 0.0
+    finally:
+        api.INIT_METHODS.unregister("test_zero_lowrank")
+
+
+def test_register_duplicate_rejected():
+    reg = api.Registry("thing")
+    reg.register("a", object())
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("a", object())
+    reg.register("a", object(), overwrite=True)
+
+
+def test_register_custom_arch():
+    cfg = api.get_smoke("llama3.2-1b")
+
+    @api.register_arch("test-custom-arch")
+    def _spec():
+        return api.ArchSpec("test-custom-arch", cfg, cfg, ("train_4k",))
+
+    try:
+        assert api.get_config("test-custom-arch") is cfg
+        assert api.shapes_for("test-custom-arch") == ["train_4k"]
+    finally:
+        api.ARCHS.unregister("test-custom-arch")
+
+
+# ---------------------------------------------------------------------------
+# NanoQuantModel lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_save_load_roundtrip(tmp_path, tiny_quantized):
+    cfg, calib, model = tiny_quantized
+    out = str(tmp_path / "artifact")
+    model.save(out)
+
+    loaded = api.NanoQuantModel.load(out)
+    assert loaded.cfg == cfg
+    assert loaded.qcfg == model.qcfg
+    assert loaded.ranks == model.ranks and loaded.ranks
+    # packed params preserved exactly (dtypes + bits)
+    la, lb = jax.tree.leaves(model.params), jax.tree.leaves(loaded.params)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_loaded_model_generates(tmp_path, tiny_quantized):
+    cfg, calib, model = tiny_quantized
+    out = str(tmp_path / "artifact")
+    model.save(out)
+    loaded = api.NanoQuantModel.load(out)
+    prompts = [np.arange(6, dtype=np.int32), np.arange(9, dtype=np.int32)]
+    outs = loaded.generate(prompts, max_new_tokens=4, max_batch=2)
+    assert len(outs) == 2
+    assert all(o.shape == (4,) for o in outs)
+    assert np.isfinite(loaded.perplexity(calib))
+
+
+def test_load_missing_manifest_raises(tmp_path):
+    with pytest.raises(FileNotFoundError, match="manifest|artifact"):
+        api.NanoQuantModel.load(str(tmp_path))
+
+
+def test_fp_artifact_roundtrip(tmp_path):
+    cfg = api.get_smoke("llama3.2-1b")
+    params = T.init_params(jax.random.PRNGKey(1), cfg)
+    out = str(tmp_path / "fp")
+    api.NanoQuantModel.from_fp(params, cfg).save(out)
+    loaded = api.NanoQuantModel.load(out)
+    assert not loaded.quantized
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(loaded.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_size_report_matches_surgery(tiny_quantized):
+    cfg, _, model = tiny_quantized
+    q = model.qcfg
+    direct = api.packed_model_bytes(cfg, q.target_bpw, q.min_dim,
+                                    q.rank_align)
+    assert model.size_report() == direct
+
+
+# ---------------------------------------------------------------------------
+# kernel policy
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_policy_scoped_override_restores():
+    before = api.current_kernel_policy()
+    with api.kernel_policy("ref") as p:
+        assert p.mode == "ref"
+        assert api.current_kernel_policy() is p
+        with api.kernel_policy(api.KernelPolicy(mode="pallas")):
+            assert api.current_kernel_policy().mode == "pallas"
+        assert api.current_kernel_policy() is p
+    assert api.current_kernel_policy() == before
+
+
+def test_kernel_policy_set_returns_previous():
+    from repro.kernels import ops
+    before = ops.current_kernel_policy()
+    prev = ops.set_kernel_policy(api.KernelPolicy(mode="ref"))
+    try:
+        assert prev == before
+        assert ops.current_kernel_policy().mode == "ref"
+    finally:
+        ops.set_kernel_policy(before)
+
+
+def test_set_kernel_policy_visible_across_threads():
+    import threading
+    from repro.kernels import ops
+    before = ops.set_kernel_policy(api.KernelPolicy(mode="ref"))
+    try:
+        seen = []
+        t = threading.Thread(
+            target=lambda: seen.append(ops.current_kernel_policy().mode))
+        t.start()
+        t.join()
+        assert seen == ["ref"]      # process-wide, not context-local
+    finally:
+        ops.set_kernel_policy(before)
+
+
+def test_kernel_policy_invalid_mode_rejected():
+    with pytest.raises(ValueError, match="unknown kernel mode"):
+        api.KernelPolicy(mode="cuda")
+
+
+def test_explicit_policy_argument_wins():
+    from repro.kernels import ref
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 64))
+    u = jnp.sign(jax.random.normal(jax.random.PRNGKey(1), (96, 32)))
+    u = jnp.where(u == 0, 1.0, u)
+    v = jnp.sign(jax.random.normal(jax.random.PRNGKey(2), (64, 32)))
+    v = jnp.where(v == 0, 1.0, v)
+    qu_t, qv = ref.pack_signs(u.T), ref.pack_signs(v)
+    s1, s2 = jnp.ones((96,)), jnp.ones((64,))
+    with api.kernel_policy("ref"):
+        y_ref = api.lowrank_binary_matmul(x, qv, qu_t, s1, s2)
+        y_pal = api.lowrank_binary_matmul(
+            x, qv, qu_t, s1, s2, policy=api.KernelPolicy(mode="pallas"))
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pal),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_deprecated_mode_shims_warn_and_work():
+    from repro.kernels import ops
+    before = ops.current_kernel_policy()
+    with pytest.warns(DeprecationWarning):
+        with ops.kernel_mode("ref"):
+            assert ops.current_kernel_policy().mode == "ref"
+    assert ops.current_kernel_policy() == before
+    with pytest.warns(DeprecationWarning):
+        ops.set_kernel_mode("pallas")
+    try:
+        assert ops.current_kernel_policy().mode == "pallas"
+    finally:
+        ops.set_kernel_policy(before)

@@ -73,9 +73,10 @@ def test_shape_mismatch_raises(tmp_path):
 
 
 def test_reshard_on_load_single_device(tmp_path):
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    # Mesh directly: jax.make_mesh(axis_types=...) post-dates the oldest
+    # jax this repo supports
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
     mgr = CheckpointManager(str(tmp_path))
     s = {"w": jnp.arange(8.0)}
     mgr.save(1, s)

@@ -77,11 +77,11 @@ def test_kernel_mode_switch(monkeypatch):
     from repro.kernels import ops
     x, packed, s_k, s_n = _mk(4, 64, 32, jnp.float32)
     qv = packed[:, :32]
-    with ops.kernel_mode("ref"):
+    with ops.kernel_policy("ref"):
         y1 = ops.lowrank_binary_matmul(
             x, packed[:, :32], ref.pack_signs(jnp.ones((32, 96))),
             jnp.ones((96,)), s_k)
-    with ops.kernel_mode("pallas"):
+    with ops.kernel_policy("pallas"):
         y2 = ops.lowrank_binary_matmul(
             x, packed[:, :32], ref.pack_signs(jnp.ones((32, 96))),
             jnp.ones((96,)), s_k)
