@@ -11,9 +11,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig9_admm, kernel_bench, table2_perplexity,
-                        table4_efficiency, table5_init, table6_components,
-                        table9_databudget, table13_storage)
+from benchmarks import (fig9_admm, kernel_bench, serve_bench,
+                        table2_perplexity, table4_efficiency, table5_init,
+                        table6_components, table9_databudget,
+                        table13_storage)
 
 TABLES = {
     "table2": table2_perplexity,
@@ -24,6 +25,7 @@ TABLES = {
     "table13": table13_storage,
     "fig9": fig9_admm,
     "kernels": kernel_bench,
+    "serve": serve_bench,
 }
 
 

@@ -1,10 +1,15 @@
-"""Batched serving of a NanoQuant-packed model through the ``repro.api``
-facade: quantize a teacher, then drive the wave-scheduled BatchServer
-with a stream of requests — the end-to-end inference driver (paper §4.4
-deployment scenario).
+"""Continuous-batching serving of a NanoQuant-packed model through the
+``repro.api`` facade: quantize a teacher, then drive the slot-scheduled
+``InferenceEngine`` with a stream of mixed-length requests — the
+end-to-end inference driver (paper §4.4 deployment scenario).
 
     PYTHONPATH=src python examples/serve_quantized.py
+    PYTHONPATH=src python examples/serve_quantized.py --engine wave
+
+``--engine wave`` reproduces the legacy drain-then-refill BatchServer
+schedule over the same engine, for comparison.
 """
+import argparse
 import os
 import sys
 import time
@@ -20,6 +25,11 @@ from repro.models import transformer as T
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="continuous",
+                    choices=["continuous", "wave"])
+    args = ap.parse_args()
+
     cfg = api.get_smoke("qwen3-4b")
     params = T.init_params(jax.random.PRNGKey(0), cfg)
 
@@ -30,24 +40,37 @@ def main():
     model = api.NanoQuantModel.quantize(params, cfg, calib, qcfg,
                                         verbose=False)
 
-    print("[2/3] starting batch server (max_batch=4)...")
-    srv = model.server(api.ServeConfig(max_new_tokens=16, temperature=0.8,
+    print(f"[2/3] starting inference engine "
+          f"(max_batch=4, admission={args.engine})...")
+    eng = model.engine(api.ServeConfig(max_new_tokens=16, temperature=0.8,
                                        top_k=32),
-                       max_batch=4, max_len=64)
+                       max_batch=4, max_len=64, admission=args.engine)
     rng = np.random.default_rng(0)
     n_req = 12
+    handles = []
+    streamed = []
     for uid in range(n_req):
         prompt = rng.integers(0, cfg.vocab_size,
                               size=(8 + uid % 5,)).astype(np.int32)
-        srv.submit(api.Request(uid, prompt, max_new_tokens=8 + uid % 9))
+        # request 0 streams per-token through a callback
+        cb = (lambda u, t: streamed.append(int(t))) if uid == 0 else None
+        handles.append(eng.submit(
+            api.Request(uid, prompt, max_new_tokens=8 + uid % 9),
+            on_token=cb))
 
     print("[3/3] serving...")
     t0 = time.time()
-    done = srv.run()
+    done = eng.run()
     dt = time.time() - t0
     total = sum(len(r.output) for r in done.values())
-    print(f"\nserved {len(done)} requests / {total} tokens "
-          f"in {dt:.1f}s (incl. compile)")
+    lats = np.asarray(sorted(h.latency for h in handles))
+    print(f"\nserved {len(done)} requests / {total} tokens in {dt:.1f}s "
+          f"({total/dt:.1f} tok/s incl. compile)")
+    print(f"latency: mean {lats.mean():.2f}s  p95 "
+          f"{np.percentile(lats, 95):.2f}s; wasted slot-steps "
+          f"{eng.stats['wasted_slot_steps']}; prefill compilations "
+          f"{eng.stats['prefill_traces']}")
+    print(f"req 0 streamed tokens: {streamed}")
     for uid in sorted(done)[:3]:
         print(f"  req {uid}: prompt[:4]={done[uid].prompt[:4]} -> "
               f"output={done[uid].output[:8]}")

@@ -21,6 +21,8 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m repro.launch.serve --quantized-ckpt "$OUT" \
     --requests 2 --prompt-len 8 --max-new 4 --max-batch 2
   rm -rf "$OUT"
+  echo "== CPU smoke: serving scheduler (wave vs continuous) =="
+  python -m benchmarks.serve_bench --smoke
 fi
 
 echo "verify: OK"

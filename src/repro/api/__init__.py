@@ -10,6 +10,8 @@ Lifecycle::
     model.save("/ckpt/nq")
     model = api.NanoQuantModel.load("/ckpt/nq")
     outs  = model.generate(prompts, max_new_tokens=32)
+    eng   = model.engine()                   # continuous-batching server
+    handle = eng.submit(api.Request(0, prompt))
     ppl   = model.perplexity()
 
 Extension points::
@@ -42,8 +44,10 @@ from repro.kernels.ops import (  # noqa: F401
     lowrank_binary_matmul, set_kernel_policy)
 from repro.quant.surgery import (  # noqa: F401
     abstract_quantized_params, packed_model_bytes, quantizable_paths)
-from repro.serve.batcher import BatchServer, Request  # noqa: F401
-from repro.serve.engine import ServeConfig  # noqa: F401
+from repro.serve.batcher import BatchServer  # noqa: F401  (deprecated shim)
+from repro.serve.engine import (  # noqa: F401
+    InferenceEngine, RequestHandle, ServeConfig)
+from repro.serve.scheduler import Request  # noqa: F401
 
 __all__ = [
     # artifact
@@ -62,5 +66,6 @@ __all__ = [
     # surgery / storage
     "abstract_quantized_params", "packed_model_bytes", "quantizable_paths",
     # serving / persistence
-    "BatchServer", "Request", "ServeConfig", "CheckpointManager",
+    "InferenceEngine", "RequestHandle", "Request", "ServeConfig",
+    "BatchServer", "CheckpointManager",
 ]

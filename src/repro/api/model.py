@@ -29,8 +29,9 @@ from repro.core.pipeline import QuantConfig, nanoquant_quantize
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.quant.surgery import abstract_quantized_params, packed_model_bytes
-from repro.serve.batcher import BatchServer, Request
-from repro.serve.engine import ServeConfig
+from repro.serve.batcher import BatchServer
+from repro.serve.engine import InferenceEngine, ServeConfig
+from repro.serve.scheduler import Request
 
 MANIFEST_NAME = "nanoquant.json"
 MANIFEST_VERSION = 1
@@ -126,9 +127,23 @@ class NanoQuantModel:
 
     # ---- lifecycle: serve -------------------------------------------------
 
+    def engine(self, scfg: Optional[ServeConfig] = None, max_batch: int = 8,
+               max_len: int = 512, seed: int = 0,
+               admission: str = "continuous") -> InferenceEngine:
+        """The serving entry point: a slot-scheduled, continuously
+        batched :class:`InferenceEngine` over this model
+        (`submit(req) -> handle`, per-token streaming, `step()` /
+        `run()`). `admission="wave"` reproduces the legacy
+        drain-then-refill schedule for comparison."""
+        return InferenceEngine(self.params, self.cfg,
+                               scfg or ServeConfig(), max_batch=max_batch,
+                               max_len=max_len, seed=seed,
+                               admission=admission)
+
     def server(self, scfg: Optional[ServeConfig] = None, max_batch: int = 8,
                max_len: int = 512, seed: int = 0) -> BatchServer:
-        """A wave-scheduled :class:`BatchServer` over this model."""
+        """Deprecated: a wave-admission :class:`BatchServer` shim over
+        the engine. Use :meth:`engine` for continuous batching."""
         return BatchServer(self.params, self.cfg, scfg or ServeConfig(),
                            max_batch=max_batch, max_len=max_len, seed=seed)
 
@@ -136,21 +151,21 @@ class NanoQuantModel:
                  max_new_tokens: Optional[int] = None,
                  scfg: Optional[ServeConfig] = None, max_batch: int = 8,
                  seed: int = 0) -> List[np.ndarray]:
-        """Batched generation; returns one output array per prompt, in
-        order. The token budget is `max_new_tokens` if given, else
-        `scfg.max_new_tokens`."""
+        """Batched generation on the continuous engine; returns one
+        output array per prompt, in order. The token budget is
+        `max_new_tokens` if given, else `scfg.max_new_tokens`."""
         if not prompts:
             raise ValueError("generate() needs at least one prompt")
         if max_new_tokens is None:
             max_new_tokens = (scfg or ServeConfig()).max_new_tokens
         scfg = scfg or ServeConfig(max_new_tokens=max_new_tokens)
         max_len = max(len(p) for p in prompts) + max_new_tokens
-        srv = self.server(scfg, max_batch=max_batch, max_len=max_len,
+        eng = self.engine(scfg, max_batch=max_batch, max_len=max_len,
                           seed=seed)
         for uid, prompt in enumerate(prompts):
-            srv.submit(Request(uid, np.asarray(prompt, np.int32),
+            eng.submit(Request(uid, np.asarray(prompt, np.int32),
                                max_new_tokens=max_new_tokens))
-        done = srv.run()
+        done = eng.run()
         return [done[uid].output for uid in range(len(prompts))]
 
     # ---- lifecycle: evaluate ---------------------------------------------

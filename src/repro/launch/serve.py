@@ -6,7 +6,9 @@
 A ``--quantized-ckpt`` directory written by ``launch/quantize.py`` (a
 ``NanoQuantModel`` artifact) is self-describing: the manifest carries the
 model config, so ``--arch`` is only needed for the fresh-quantize demo
-path.
+path. ``--engine continuous`` (default) serves through the
+slot-scheduled ``InferenceEngine``; ``--engine wave`` reproduces the
+legacy drain-then-refill schedule for comparison.
 """
 from __future__ import annotations
 
@@ -30,6 +32,10 @@ def main():
                          "if empty, quantizes a fresh random-init teacher")
     ap.add_argument("--fp", action="store_true",
                     help="serve the FP teacher instead (baseline)")
+    ap.add_argument("--engine", default="continuous",
+                    choices=["continuous", "wave"],
+                    help="slot admission policy (wave = legacy "
+                         "BatchServer schedule)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
@@ -55,23 +61,32 @@ def main():
 
     cfg = model.cfg
     scfg = api.ServeConfig(max_new_tokens=args.max_new)
-    srv = model.server(scfg, max_batch=args.max_batch,
-                       max_len=args.prompt_len + args.max_new)
+    eng = model.engine(scfg, max_batch=args.max_batch,
+                       max_len=args.prompt_len + args.max_new,
+                       admission=args.engine)
     rng = np.random.default_rng(0)
     shape = ((args.prompt_len, cfg.n_codebooks)
              if cfg.family == "audio" else (args.prompt_len,))
-    for uid in range(args.requests):
-        srv.submit(api.Request(uid, rng.integers(
-            0, cfg.vocab_size, size=shape).astype(np.int32),
-            max_new_tokens=args.max_new))
     t0 = time.time()
-    done = srv.run()
+    handles = []
+    for uid in range(args.requests):
+        handles.append(eng.submit(api.Request(uid, rng.integers(
+            0, cfg.vocab_size, size=shape).astype(np.int32),
+            max_new_tokens=args.max_new)))
+    done = eng.run()
     dt = time.time() - t0
     n_tok = sum(len(r.output) for r in done.values())
-    print(f"[serve] {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok/dt:.1f} tok/s incl. compile)")
-    any_r = done[0]
-    print(f"[serve] sample output for request 0: {any_r.output[:16]}")
+    lats = np.asarray(sorted(h.latency for h in handles))
+    print(f"[serve] engine={args.engine}: {len(done)} requests, "
+          f"{n_tok} tokens in {dt:.2f}s ({n_tok/dt:.1f} tok/s incl. "
+          f"compile)")
+    print(f"[serve] request latency: mean {lats.mean():.2f}s  "
+          f"p50 {np.percentile(lats, 50):.2f}s  "
+          f"p95 {np.percentile(lats, 95):.2f}s")
+    print(f"[serve] decode steps {eng.stats['decode_steps']}, wasted "
+          f"slot-steps {eng.stats['wasted_slot_steps']}, prefill "
+          f"compilations {eng.stats['prefill_traces']}")
+    print(f"[serve] sample output for request 0: {done[0].output[:16]}")
 
 
 if __name__ == "__main__":

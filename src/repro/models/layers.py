@@ -257,22 +257,27 @@ def init_attention(key, cfg, dtype=jnp.bfloat16):
 
 
 def _mask(q_pos, k_pos, window: int, causal: bool = True):
-    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    """q_pos (Sq,) or (B,Sq) per-slot; k_pos (Sk,).
+    Returns bool (Sq,Sk) or (B,Sq,Sk)."""
+    q = q_pos[..., :, None]
+    m = jnp.ones((q_pos.shape[-1], k_pos.shape[0]), bool)
     if causal:
-        m &= k_pos[None, :] <= q_pos[:, None]
+        m = m & (k_pos <= q)
     if window:
-        m &= k_pos[None, :] > q_pos[:, None] - window
+        m = m & (k_pos > q - window)
     return m
 
 
 def sdpa(q, k, v, mask, scale):
-    """q (B,Sq,Hq,D), k/v (B,Sk,Hkv,Dk/Dv), mask (Sq,Sk) -> (B,Sq,Hq,Dv)."""
+    """q (B,Sq,Hq,D), k/v (B,Sk,Hkv,Dk/Dv), mask (Sq,Sk) or per-slot
+    (B,Sq,Sk) -> (B,Sq,Hq,Dv)."""
     B, Sq, Hq, D = q.shape
     Hkv = k.shape[2]
     G = Hq // Hkv
     qg = q.reshape(B, Sq, Hkv, G, D)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
-    s = jnp.where(mask[None, None, None], s, -1e30)
+    msk = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+    s = jnp.where(msk, s, -1e30)
     p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
     return o.reshape(B, Sq, Hq, -1)
@@ -339,11 +344,56 @@ def sdpa_flash(q, k, v, q_pos, k_pos, scale, window=0,
     return o
 
 
+def _cache_write(buf, new, cache_pos):
+    """Write `new` (B,S,...) into `buf` (B,Smax,...) at sequence offset
+    `cache_pos` — a scalar shared by the batch, or a (B,) vector of
+    per-slot offsets (continuous-batching decode)."""
+    new = new.astype(buf.dtype)
+    if jnp.ndim(cache_pos):
+        return jax.vmap(lambda b, n, p: jax.lax.dynamic_update_slice(
+            b, n, (p,) + (0,) * (b.ndim - 1)))(buf, new, cache_pos)
+    return jax.lax.dynamic_update_slice(
+        buf, new, (0, cache_pos) + (0,) * (buf.ndim - 2))
+
+
+def _cache_valid(k_pos, cache_pos, S):
+    """Rows of the cache holding real entries: (Smax,) for scalar
+    cache_pos, (B,1,Smax) for per-slot (B,) cache_pos."""
+    if jnp.ndim(cache_pos):
+        return (k_pos[None, :] < cache_pos[:, None] + S)[:, None, :]
+    return k_pos < cache_pos + S
+
+
+def _decode_mask(q_pos, cache_pos, n_rows, window):
+    """Single-token decode mask over a cache buffer that may be a ring
+    (hybrid sliding window: cache_pos == q_pos % window, so absolute
+    positions and row indices diverge after the first wrap). Row r last
+    held the key of absolute position ``q - ((cache_pos - r) mod
+    n_rows)``; a negative value means the row was never written.
+    Causality is implicit (row positions never exceed q). For a linear
+    cache (cache_pos == q_pos) this reduces to the plain causal+window
+    mask. q_pos: (S,) or per-slot (B,S) with S == 1; cache_pos scalar
+    or (B,). Returns (S, n_rows) or (B, S, n_rows)."""
+    r = jnp.arange(n_rows)
+    if jnp.ndim(cache_pos):
+        delta = (cache_pos[:, None] - r[None, :]) % n_rows   # (B, n_rows)
+        abs_pos = q_pos[:, :, None] - delta[:, None, :]      # (B, S, rows)
+    else:
+        delta = (cache_pos - r) % n_rows                     # (n_rows,)
+        abs_pos = q_pos[..., :, None] - delta
+    m = abs_pos >= 0
+    if window:
+        m = m & (abs_pos > q_pos[..., :, None] - window)
+    return m
+
+
 def attention(p, cfg, x, positions, cache=None, cache_pos=None):
     """GQA attention. Returns (out, new_cache).
 
     cache: None (training) or dict(k=(B,Smax,Hkv,D), v=...) being filled.
-    cache_pos: scalar write offset for decode; positions: (S,) absolute.
+    cache_pos: write offset for decode — scalar, or (B,) per-slot vector
+    (with positions (B,S)) for slot-scheduled continuous batching.
+    positions: (S,) absolute, or (B,S) per-slot.
     """
     flash_threshold = cfg.flash_threshold
     B, S, _ = x.shape
@@ -381,10 +431,8 @@ def attention(p, cfg, x, positions, cache=None, cache_pos=None):
         o = constrain(o, "dp", None, "tp", None)
         new_cache = None
     else:
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, cache_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, cache_pos, 0, 0))
+        ck = _cache_write(cache["k"], k, cache_pos)
+        cv = _cache_write(cache["v"], v, cache_pos)
         new_cache = {"k": ck, "v": cv}
         if S > 1:
             # prompt prefill (cache was empty at cache_pos=0): attend over
@@ -406,11 +454,11 @@ def attention(p, cfg, x, positions, cache=None, cache_pos=None):
             # single-token decode: grouped GQA against the cache (which
             # stays at Hkv heads — sharded on heads when divisible, else
             # on sequence; softmax/contraction over a sharded sequence
-            # costs three small all-reduces).
-            Smax = ck.shape[1]
-            k_pos = jnp.arange(Smax)
-            valid = k_pos < cache_pos + S
-            msk = _mask(positions, k_pos, window) & valid[None, :]
+            # costs three small all-reduces). With per-slot cache_pos the
+            # mask is (B,1,Smax): each slot attends to its own prefix.
+            # _decode_mask also handles the hybrid ring buffer, where
+            # cache_pos wraps modulo the window.
+            msk = _decode_mask(positions, cache_pos, ck.shape[1], window)
             o = sdpa(q, ck, cv, msk, scale)
     return dense(p["wo"], o.reshape(B, S, -1), "attn.wo"), new_cache
 
@@ -451,15 +499,12 @@ def mla_attention(p, cfg, x, positions, cache=None, cache_pos=None):
 
     scale = 1.0 / math.sqrt(dn + dr)
     if cache is not None:
-        c_kv = jax.lax.dynamic_update_slice(
-            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_pos, 0))
-        k_rope = jax.lax.dynamic_update_slice(
-            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
-            (0, cache_pos, 0, 0))
+        c_kv = _cache_write(cache["c_kv"], c_kv, cache_pos)
+        k_rope = _cache_write(cache["k_rope"], k_rope, cache_pos)
         new_cache = {"c_kv": c_kv, "k_rope": k_rope}
         T = c_kv.shape[1]
         k_pos = jnp.arange(T)
-        msk = _mask(positions, k_pos, 0) & (k_pos < cache_pos + S)[None, :]
+        msk = _mask(positions, k_pos, 0) & _cache_valid(k_pos, cache_pos, S)
     else:
         new_cache = None
         T = S
@@ -475,7 +520,7 @@ def mla_attention(p, cfg, x, positions, cache=None, cache_pos=None):
     s += jnp.einsum("bshd,btxd->bhst", q_rope,
                     k_rope.astype(q_rope.dtype)).astype(jnp.float32)
     s *= scale
-    s = jnp.where(msk[None, None], s, -1e30)
+    s = jnp.where(msk[:, None] if msk.ndim == 3 else msk[None, None], s, -1e30)
     prob = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     o_lat = jnp.einsum("bhst,btc->bshc", prob, c_kv)             # (B,S,H,dc)
     o = jnp.einsum("bshc,chd->bshd", o_lat, w_uv)                # absorbed V up

@@ -332,15 +332,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     fam = cfg.family
     hd = cfg.head_dim
 
-    def attn_cache(n):
+    def attn_cache(n, rows=max_len):
         if cfg.is_mla:
             return {
-                "c_kv": jnp.zeros((n, batch, max_len, cfg.kv_lora_rank), dt),
-                "k_rope": jnp.zeros((n, batch, max_len, 1, cfg.qk_rope_dim), dt),
+                "c_kv": jnp.zeros((n, batch, rows, cfg.kv_lora_rank), dt),
+                "k_rope": jnp.zeros((n, batch, rows, 1, cfg.qk_rope_dim), dt),
             }
         return {
-            "k": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), dt),
-            "v": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, hd), dt),
+            "k": jnp.zeros((n, batch, rows, cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((n, batch, rows, cfg.n_kv_heads, hd), dt),
         }
 
     def ssm_state(n):
@@ -365,8 +365,12 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     if fam == "hybrid":
         n_apps = cfg.n_layers // cfg.attn_every
         win = min(max_len, cfg.sliding_window or max_len)
+        # the shared-attn cache is a ring of exactly `win` rows: writes
+        # wrap at win (pos % win in _cached_forward), and the decode
+        # mask's ring modulo is the buffer length — sizing it max_len
+        # would both waste KV memory and desynchronize the modulo.
         return {"layers": ssm_state(cfg.n_layers),
-                "shared_attn": attn_cache(n_apps),
+                "shared_attn": attn_cache(n_apps, win),
                 "window": win}
     if fam == "vlm":
         per = cfg.cross_attn_every
@@ -388,11 +392,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
 def _cached_forward(params, cfg, tokens, cache, pos, image_embeds=None):
     """Shared implementation for prefill (S>=1) and decode (S==1).
 
-    pos: scalar int — absolute position of tokens[:, 0].
+    pos: absolute position of tokens[:, 0] — a scalar shared by the
+    batch, or a (B,) vector of per-slot positions (continuous-batching
+    decode, S == 1 only): each batch row then gets its own RoPE phase,
+    cache write offset and causal mask.
     Returns (hidden, new_cache)."""
     x = embed_tokens(params, cfg, tokens)
     S = x.shape[1]
-    positions = pos + jnp.arange(S)
+    pos = jnp.asarray(pos)
+    if pos.ndim:                                   # per-slot (B,) positions
+        positions = pos[:, None] + jnp.arange(S)[None, :]     # (B, S)
+    else:
+        positions = pos + jnp.arange(S)                       # (S,)
     fam = cfg.family
 
     if fam in ("dense", "audio", "moe"):
@@ -525,14 +536,25 @@ def _mamba_prefill(p, cfg, x, state):
     return L.dense(p["out_proj"], y), new_state
 
 
-def prefill(params, cfg, tokens, cache, image_embeds=None):
-    """Process the prompt; returns (last-token logits, filled cache)."""
+def prefill(params, cfg, tokens, cache, image_embeds=None, last_idx=None):
+    """Process the prompt; returns (last-token logits, filled cache).
+
+    last_idx: position of the final *real* prompt token. Defaults to the
+    last column; pass it when `tokens` is right-padded to a compile
+    bucket — causality makes the logits at last_idx (and the cache rows
+    up to it) identical to an unpadded prefill."""
     h, cache = _cached_forward(params, cfg, tokens, cache, 0, image_embeds)
-    return logits_fn(params, cfg, h[:, -1:]), cache
+    if last_idx is None:
+        h = h[:, -1:]
+    else:
+        h = jax.lax.dynamic_slice_in_dim(h, last_idx, 1, axis=1)
+    return logits_fn(params, cfg, h), cache
 
 
 def decode_step(params, cfg, token, cache, pos):
-    """One decode step. token: (B, 1[, K]); pos: scalar absolute position."""
+    """One decode step. token: (B, 1[, K]); pos: absolute position —
+    scalar (lockstep batch) or (B,) per-slot vector (continuous
+    batching)."""
     h, cache = _cached_forward(params, cfg, token, cache, pos)
     return logits_fn(params, cfg, h), cache
 

@@ -1,3 +1,6 @@
 from repro.serve.engine import (  # noqa: F401
-    ServeConfig, make_prefill_step, make_serve_step, sample_token)
-from repro.serve.batcher import BatchServer, Request  # noqa: F401
+    InferenceEngine, RequestHandle, ServeConfig, make_prefill_step,
+    make_serve_step, make_slot_prefill_step, sample_token)
+from repro.serve.scheduler import (  # noqa: F401
+    Request, SlotScheduler, bucket_length)
+from repro.serve.batcher import BatchServer  # noqa: F401

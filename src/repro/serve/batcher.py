@@ -1,91 +1,61 @@
-"""Wave-scheduled request batcher for quantized-model serving.
+"""DEPRECATED: wave-admission compatibility shim over InferenceEngine.
 
-Requests are admitted into fixed-size waves: prompts are left-padded to
-the wave maximum, prefilled once, then decoded in lockstep until every
-request hits its token budget or EOS. This is the batched-serving driver
-the example application uses; slot-level continuous batching is noted as
-future work in DESIGN.md (it needs per-slot cache write offsets).
+The wave-lockstep scheduler that used to live here — left-pad a batch,
+prefill once, decode everyone to the wave-max budget, drain before
+admitting — is gone. Serving is now the slot-scheduled, continuously
+batched :class:`repro.serve.engine.InferenceEngine`. ``BatchServer``
+remains as a thin shim that drives the engine with ``admission="wave"``
+(a new batch is admitted only once every slot is free) so existing
+callers keep working; greedy outputs are token-identical per request to
+the continuous engine. New code should use ``InferenceEngine`` /
+``NanoQuantModel.engine()`` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional
+import warnings
+from typing import Dict, List
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.serve.engine import ServeConfig, make_prefill_step, \
-    make_serve_step, sample_token
-
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray                # (S,) or (S, K) token ids
-    max_new_tokens: int = 32
-    eos_id: Optional[int] = None
-    output: Optional[np.ndarray] = None
+from repro.serve.engine import InferenceEngine, ServeConfig
+from repro.serve.scheduler import Request  # noqa: F401  (re-export)
 
 
 class BatchServer:
+    """Deprecated wave-scheduled facade over :class:`InferenceEngine`."""
+
     def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig,
                  max_batch: int = 8, max_len: int = 512, seed: int = 0):
+        warnings.warn(
+            "BatchServer is deprecated; use InferenceEngine "
+            "(NanoQuantModel.engine()) for slot-scheduled continuous "
+            "batching", DeprecationWarning, stacklevel=2)
+        self.engine = InferenceEngine(params, cfg, scfg,
+                                      max_batch=max_batch, max_len=max_len,
+                                      seed=seed, admission="wave")
         self.params, self.cfg, self.scfg = params, cfg, scfg
         self.max_batch, self.max_len = max_batch, max_len
-        self.key = jax.random.PRNGKey(seed)
-        self._prefill = jax.jit(make_prefill_step(cfg, max_len))
-        self._decode = jax.jit(make_serve_step(cfg))
-        self.queue: List[Request] = []
-        self.done: Dict[int, Request] = {}
+
+    @property
+    def queue(self) -> List[Request]:
+        return [h.request for h in self.engine.scheduler.pending]
+
+    @property
+    def done(self) -> Dict[int, Request]:
+        return self.engine.done
 
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def _pad_prompts(self, reqs: List[Request]):
-        S = max(len(r.prompt) for r in reqs)
-        S = max(S, 1)
-        tshape = (len(reqs), S) + reqs[0].prompt.shape[1:]
-        toks = np.zeros(tshape, np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, S - len(r.prompt):] = r.prompt     # left pad
-        return jnp.asarray(toks), S
+        self.engine.submit(req)
 
     def step_wave(self) -> List[Request]:
-        """Serve one wave; returns completed requests."""
-        if not self.queue:
+        """Serve one wave to completion; returns its requests."""
+        if not self.engine.in_flight:
             return []
-        wave = self.queue[: self.max_batch]
-        self.queue = self.queue[self.max_batch:]
-        toks, S = self._pad_prompts(wave)
-        budget = max(r.max_new_tokens for r in wave)
-        budget = min(budget, self.max_len - S)
-
-        logits, cache = self._prefill(self.params, toks)
-        outs = []
-        for i in range(budget):
-            self.key, k = jax.random.split(self.key)
-            tok = sample_token(logits, k, self.scfg)
-            if self.cfg.family == "audio":
-                tok = tok[:, None, :]
-            outs.append(np.asarray(tok))
-            logits, cache = self._decode(self.params, tok, cache,
-                                         jnp.asarray(S + i))
-        gen = np.concatenate(outs, axis=1)             # (B, budget[, K])
-        for i, r in enumerate(wave):
-            g = gen[i][: r.max_new_tokens]
-            if r.eos_id is not None:
-                flat = g if g.ndim == 1 else g[..., 0]
-                hits = np.nonzero(flat == r.eos_id)[0]
-                if hits.size:
-                    g = g[: hits[0] + 1]
-            r.output = g
-            self.done[r.uid] = r
-        return wave
+        finished = list(self.engine.step())     # admits the wave
+        while self.engine.active.any():
+            finished.extend(self.engine.step())
+        return finished
 
     def run(self) -> Dict[int, Request]:
-        while self.queue:
+        while self.engine.in_flight:
             self.step_wave()
-        return self.done
+        return self.engine.done

@@ -1,20 +1,38 @@
-"""Serving engine: prefill / decode steps + sampling.
+"""Serving engine: slot-scheduled continuous batching + the raw
+prefill / decode steps and sampling.
 
 ``serve_step`` is the unit the decode-shape dry-runs lower: one new token
 against a KV (or SSM-state) cache — memory-bound, and exactly where the
 paper's packed binary weights pay off (the whole weight stream shrinks
 ~16x, see §Roofline FP-vs-quantized decode comparison).
+
+:class:`InferenceEngine` is the serving surface built on those steps: a
+fixed pool of ``max_batch`` decode slots over one persistent cache,
+where each slot carries its own position, token budget and EOS state.
+Freed slots are refilled mid-flight by per-slot prefill (prompt lengths
+bucketed to powers of two so prefill compiles once per bucket), and
+finished slots are masked on device so they are no-ops until refilled.
+
+    engine = InferenceEngine(params, cfg, ServeConfig(), max_batch=8)
+    handle = engine.submit(Request(0, prompt), on_token=print)
+    for tok in handle:          # streams; pumps engine.step() as needed
+        ...
+    done = engine.run()         # or drain everything at once
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serve.scheduler import (Request, SlotScheduler, bucket_length,
+                                   cache_insert_slot, cache_select_active)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +84,21 @@ def make_prefill_step(cfg: ModelConfig, max_len: Optional[int] = None):
     return prefill_step
 
 
+def make_slot_prefill_step(cfg: ModelConfig, max_len: int):
+    """(params, tokens (1, bucket[, K]), last_idx) -> (logits, cache).
+
+    The single-slot admission unit: allocates a batch-1 cache sized
+    `max_len` (so it inserts into the pooled cache shape-for-shape),
+    prefills a right-padded prompt and reads logits at `last_idx`, the
+    final real token. `last_idx` is traced, so one compilation covers
+    every prompt length inside a bucket."""
+    def prefill_step(params, tokens, last_idx, image_embeds=None):
+        cache = T.init_cache(cfg, tokens.shape[0], max_len)
+        return T.prefill(params, cfg, tokens, cache, image_embeds,
+                         last_idx=last_idx)
+    return prefill_step
+
+
 def generate(params, cfg: ModelConfig, tokens, scfg: ServeConfig,
              key=None, image_embeds=None,
              jit_prefill=None, jit_decode=None) -> Tuple[Any, Any]:
@@ -92,3 +125,319 @@ def generate(params, cfg: ModelConfig, tokens, scfg: ServeConfig,
         logits, cache = decode(params, tok, cache, jnp.asarray(S + i))
     gen = jnp.concatenate(outs, axis=1)
     return gen, logits
+
+
+# ===========================================================================
+# continuous-batching engine
+# ===========================================================================
+
+
+class RequestHandle:
+    """Streaming view of one submitted request.
+
+    `tokens` grows as the engine emits; iterate the handle to stream
+    (iteration pumps `engine.step()` when it runs out of buffered
+    tokens), or call `result()` to block until completion."""
+
+    def __init__(self, engine: "InferenceEngine", request: Request,
+                 on_token: Optional[Callable] = None):
+        self._engine = engine
+        self.request = request
+        self.uid = request.uid
+        self.on_token = on_token
+        self.tokens: List[Any] = []
+        self.done = False
+        self.submit_t = time.monotonic()
+        self.finish_t: Optional[float] = None
+
+    def _append(self, token) -> None:
+        self.tokens.append(token)
+
+    def result(self) -> np.ndarray:
+        while not self.done:
+            if not self._engine.in_flight:
+                raise RuntimeError(
+                    f"request {self.uid} unfinished but engine is idle")
+            self._engine.step()
+        return self.request.output
+
+    def __iter__(self):
+        i = 0
+        while True:
+            if i < len(self.tokens):
+                yield self.tokens[i]
+                i += 1
+            elif self.done:
+                return
+            else:
+                if not self._engine.in_flight:
+                    raise RuntimeError(
+                        f"request {self.uid} unfinished but engine is idle")
+                self._engine.step()
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finish_t is None:
+            return None
+        return self.finish_t - self.submit_t
+
+
+@dataclasses.dataclass
+class _SlotTask:
+    """Host-side record of the request occupying one decode slot."""
+    handle: RequestHandle
+    budget: int                        # new tokens still allowed
+    toks: List[Any] = dataclasses.field(default_factory=list)
+
+
+class InferenceEngine:
+    """Slot-scheduled, continuously-batched serving engine.
+
+    A fixed pool of `max_batch` decode slots over one persistent cache.
+    Each slot carries its own position, budget and EOS state; one fused
+    decode step advances every active slot (per-slot positions, cache
+    writes and causal masks — see `models.transformer.decode_step`),
+    while finished slots are masked on device into no-ops. Freed slots
+    are refilled mid-flight: admission prefills the new prompt into a
+    single-slot cache (right-padded to a power-of-two bucket so the
+    prefill compiles once per bucket) and scatters it into the pool.
+
+    `admission="wave"` reproduces the legacy drain-then-refill
+    `BatchServer` schedule for comparison; greedy outputs are identical
+    per request under either policy.
+
+    Caveat (MoE families): capacity-bounded expert dispatch couples
+    batch rows — any slot's tokens (including an inactive slot's masked
+    pad row) consume per-expert capacity and can, under tight
+    `capacity_factor`, drop an active neighbor's expert assignment.
+    This is inherent to batched capacity-bounded MoE decode (the wave
+    scheduler routed finished requests' real tokens, which is strictly
+    worse); per-request identity with a solo decode holds exactly for
+    non-MoE families and for MoE when capacity is not saturated.
+    """
+
+    def __init__(self, params, cfg: ModelConfig,
+                 scfg: Optional[ServeConfig] = None, max_batch: int = 8,
+                 max_len: int = 512, seed: int = 0,
+                 admission: str = "continuous"):
+        self.params, self.cfg = params, cfg
+        self.scfg = scfg or ServeConfig()
+        self.max_batch, self.max_len = max_batch, max_len
+        self.key = jax.random.PRNGKey(seed)
+        self.scheduler = SlotScheduler(max_batch, admission)
+        self.cache = T.init_cache(cfg, max_batch, max_len)
+        self.pos = np.zeros((max_batch,), np.int32)
+        self.active = np.zeros((max_batch,), bool)
+        tok_shape = ((max_batch, 1, cfg.n_codebooks)
+                     if cfg.family == "audio" else (max_batch, 1))
+        self.tokens = np.zeros(tok_shape, np.int32)
+        self._tasks: List[Optional[_SlotTask]] = [None] * max_batch
+        self._callbacks: List[Tuple[Callable, int, Any]] = []
+        self.handles: Dict[int, RequestHandle] = {}
+        self.done: Dict[int, Request] = {}
+        # observability: per-uid admission/completion step and slot, plus
+        # aggregate counters (trace counters increment at trace time only,
+        # so they count *compilations*, not calls).
+        self.slot_of: Dict[int, int] = {}
+        self.admission_step: Dict[int, int] = {}
+        self.completion_step: Dict[int, int] = {}
+        self.stats: Dict[str, int] = {}
+        self.reset_stats()
+
+        slot_prefill = make_slot_prefill_step(cfg, max_len)
+
+        def prefill_fn(params, tokens, last_idx):
+            self.stats["prefill_traces"] += 1
+            return slot_prefill(params, tokens, last_idx)
+        self._prefill = jax.jit(prefill_fn)
+        # donate the pooled cache: insert/decode consume the old pool and
+        # return the next one, so XLA can update it in place instead of
+        # materializing a second full KV pool per token (the decode loop
+        # is memory-bound — this is the dominant non-weight traffic).
+        self._insert = jax.jit(cache_insert_slot, donate_argnums=(0,))
+
+        def decode_fn(params, tokens, cache, pos, active, key):
+            self.stats["decode_traces"] += 1
+            logits, new_cache = T.decode_step(params, cfg, tokens, cache,
+                                              pos)
+            new_cache = cache_select_active(new_cache, cache, active)
+            tok = sample_token(logits, key, self.scfg)
+            if cfg.family == "audio":
+                tok = tok[:, None, :]
+            keep = active.reshape((-1,) + (1,) * (tok.ndim - 1))
+            return jnp.where(keep, tok, 0), new_cache
+        self._decode = jax.jit(decode_fn, donate_argnums=(2,))
+
+    # ---- submission -------------------------------------------------------
+
+    def submit(self, req: Request,
+               on_token: Optional[Callable] = None) -> RequestHandle:
+        """Queue a request; returns a streaming handle. `on_token`
+        (optional) is called as `on_token(uid, token)` per emitted
+        token. Rejects prompts that leave no room to generate; budgets
+        beyond `max_len - prompt_len` are truncated."""
+        prompt = np.asarray(req.prompt)
+        n = prompt.shape[0]
+        if n == 0:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.uid}: max_new_tokens must be "
+                             f">= 1, got {req.max_new_tokens}")
+        if n >= self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt length {n} >= max_len "
+                f"{self.max_len} leaves no room to generate — raise "
+                f"max_len or truncate the prompt before submitting")
+        old = self.handles.get(req.uid)
+        if old is not None:
+            if not old.done:
+                raise ValueError(f"duplicate request uid {req.uid} "
+                                 f"still pending or decoding")
+            self._forget(req.uid)          # uid reuse after completion
+        handle = RequestHandle(self, req, on_token)
+        self.handles[req.uid] = handle
+        self.scheduler.submit(handle)
+        return handle
+
+    # ---- stepping ---------------------------------------------------------
+
+    @property
+    def in_flight(self) -> bool:
+        return bool(self.scheduler.pending) or bool(self.active.any())
+
+    def step(self) -> List[Request]:
+        """One scheduler tick: admit into free slots, then one fused
+        decode step across the pool. Returns requests finished now.
+
+        User `on_token` callbacks fire only after every slot's engine
+        state (positions, budgets, cache, completion bookkeeping) has
+        been committed for the tick — a raising callback cannot leave
+        the engine inconsistent (the exception still propagates)."""
+        finished = []
+        self._callbacks = []
+        for slot, handle in self.scheduler.admit_batch():
+            fin = self._admit(slot, handle)
+            if fin is not None:
+                finished.append(fin)
+        if self.active.any():
+            self.key, k = jax.random.split(self.key)
+            tok, self.cache = self._decode(
+                self.params, jnp.asarray(self.tokens), self.cache,
+                jnp.asarray(self.pos), jnp.asarray(self.active), k)
+            tok = np.array(tok)        # writable copy: slots mutate it
+            self.tokens = tok
+            self.stats["decode_steps"] += 1
+            self.stats["wasted_slot_steps"] += int(
+                self.max_batch - self.active.sum())
+            for slot in range(self.max_batch):
+                if not self.active[slot]:
+                    continue
+                self.pos[slot] += 1
+                fin = self._emit(slot, tok[slot][0])
+                if fin is not None:
+                    finished.append(fin)
+        self.stats["steps"] += 1
+        callbacks, self._callbacks = self._callbacks, []
+        err = None
+        for cb, uid, token in callbacks:
+            try:
+                cb(uid, token)
+            except BaseException as e:     # deliver to every consumer,
+                err = err or e             # then surface the first error
+        if err is not None:
+            raise err
+        return finished
+
+    def run(self) -> Dict[int, Request]:
+        """Drain the queue; returns {uid: completed Request}."""
+        while self.in_flight:
+            self.step()
+        return dict(self.done)
+
+    def reset_stats(self) -> None:
+        for k in ("steps", "decode_steps", "wasted_slot_steps",
+                  "tokens_emitted", "admissions", "prefill_traces",
+                  "decode_traces"):
+            self.stats[k] = 0
+
+    def _forget(self, uid: int) -> None:
+        for d in (self.handles, self.done, self.slot_of,
+                  self.admission_step, self.completion_step):
+            d.pop(uid, None)
+
+    def clear_finished(self) -> None:
+        """Drop bookkeeping (handles, outputs, step logs) for completed
+        requests — reclaims memory on a long-running server. Callers
+        keep their RequestHandles; only the engine's references go."""
+        for uid in list(self.done):
+            self._forget(uid)
+
+    # ---- internals --------------------------------------------------------
+
+    def _admit(self, slot: int, handle: RequestHandle) -> Optional[Request]:
+        """Prefill `handle`'s prompt into `slot` and emit its first
+        token. Returns the request if it finished immediately."""
+        req = handle.request
+        prompt = np.asarray(req.prompt, np.int32)
+        n = prompt.shape[0]
+        if self.cfg.is_ssm_layer_stack:
+            # right-padding would leak pad tokens into the recurrent
+            # SSM/conv state, so SSM-stack families prefill at the exact
+            # prompt length (one compile per distinct length).
+            bucket = n
+        else:
+            bucket = bucket_length(n, self.max_len)
+        padded = np.zeros((1, bucket) + prompt.shape[1:], np.int32)
+        padded[0, :n] = prompt
+        logits, single = self._prefill(self.params, jnp.asarray(padded),
+                                       jnp.asarray(n - 1, jnp.int32))
+        self.cache = self._insert(self.cache, single,
+                                  jnp.asarray(slot, jnp.int32))
+        self.key, k = jax.random.split(self.key)
+        tok = sample_token(logits, k, self.scfg)       # (1,1) or (1,K)
+        if self.cfg.family == "audio":
+            tok = tok[:, None, :]                      # (1,1,K)
+        tok = np.asarray(tok)
+        task = _SlotTask(handle, budget=min(req.max_new_tokens,
+                                            self.max_len - n))
+        self._tasks[slot] = task
+        self.pos[slot] = n
+        self.slot_of[req.uid] = slot
+        self.admission_step[req.uid] = self.stats["steps"]
+        self.stats["admissions"] += 1
+        fin = self._emit(slot, tok[0][0])
+        if fin is None:
+            self.active[slot] = True
+            self.tokens[slot] = tok[0]
+        return fin
+
+    def _emit(self, slot: int, token) -> Optional[Request]:
+        """Record one emitted token for `slot`; finish the slot on EOS
+        or budget exhaustion. `token`: scalar (text) or (K,) (audio)."""
+        task = self._tasks[slot]
+        req = task.handle.request
+        task.toks.append(np.asarray(token))
+        task.budget -= 1
+        self.stats["tokens_emitted"] += 1
+        task.handle._append(token)
+        if task.handle.on_token is not None:   # deferred to end of step()
+            self._callbacks.append((task.handle.on_token,
+                                    task.handle.uid, token))
+        flat = int(token if np.ndim(token) == 0 else token[0])
+        if (req.eos_id is not None and flat == req.eos_id) \
+                or task.budget <= 0:
+            return self._finish(slot)
+        return None
+
+    def _finish(self, slot: int) -> Request:
+        task = self._tasks[slot]
+        req = task.handle.request
+        req.output = np.asarray(task.toks, np.int32)
+        self.done[req.uid] = req
+        self.completion_step[req.uid] = self.stats["steps"]
+        task.handle.done = True
+        task.handle.finish_t = time.monotonic()
+        self.active[slot] = False
+        self._tasks[slot] = None
+        self.scheduler.release(slot)
+        return req

@@ -1,0 +1,132 @@
+"""Slot scheduling for the continuous-batching serving engine.
+
+The engine owns a fixed pool of ``n_slots`` decode slots over one
+persistent cache. This module holds the host-side bookkeeping — which
+request occupies which slot, what is still queued, when admission is
+allowed — plus the cache-tree helpers that make a slot a first-class
+unit on device:
+
+- :func:`bucket_length` — power-of-two prompt-length buckets so the
+  per-slot prefill compiles once per bucket, not once per distinct
+  prompt length (or per wave).
+- :func:`cache_insert_slot` — scatter a freshly prefilled single-slot
+  cache into one slot of the pooled cache (admission mid-flight).
+- :func:`cache_select_active` — keep finished slots' cache entries
+  bit-identical until they are refilled (active-slot masking), which
+  also freezes recurrent SSM state for inactive slots.
+
+Admission policies:
+
+- ``"continuous"`` — any freed slot is refilled immediately from the
+  queue (the default; what the paper's serving claim needs).
+- ``"wave"`` — a new batch is admitted only once every slot is free;
+  this reproduces the drain-then-refill schedule of the legacy
+  ``BatchServer`` and exists for the compatibility shim + benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ADMISSION_POLICIES = ("continuous", "wave")
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                # (S,) or (S, K) token ids
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    output: Optional[np.ndarray] = None
+
+
+def bucket_length(n: int, max_len: int, floor: int = 8) -> int:
+    """Smallest power-of-two bucket >= n (floored, capped at max_len)."""
+    b = max(floor, 1)
+    while b < n:
+        b <<= 1
+    return max(min(b, max_len), n)
+
+
+def _batch_axis(path) -> int:
+    # VLM self-attn caches are stacked (groups, per-1, batch, ...);
+    # every other cache leaf carries batch at axis 1.
+    if path and getattr(path[0], "key", None) == "self_layers":
+        return 2
+    return 1
+
+
+def cache_insert_slot(pool, single, slot):
+    """Insert `single` (a batch=1 cache pytree) into slot `slot` of the
+    pooled cache. Leaves below rank 2 (e.g. the hybrid window size) are
+    batch-free metadata and kept from the pool."""
+    def ins(path, b, s):
+        if jnp.ndim(b) < 2:
+            return b
+        start = [0] * jnp.ndim(b)
+        start[_batch_axis(path)] = slot
+        return jax.lax.dynamic_update_slice(b, s.astype(b.dtype),
+                                            tuple(start))
+    return jax.tree_util.tree_map_with_path(ins, pool, single)
+
+
+def cache_select_active(new, old, active):
+    """Per-slot select: active slots take the freshly written cache,
+    finished/empty slots keep their old entries bit-identical — a
+    decode step is a no-op for them until the slot is refilled."""
+    def sel(path, n, o):
+        if jnp.ndim(n) < 2:
+            return n
+        shape = [1] * jnp.ndim(n)
+        shape[_batch_axis(path)] = -1
+        return jnp.where(active.reshape(shape), n, o)
+    return jax.tree_util.tree_map_with_path(sel, new, old)
+
+
+class SlotScheduler:
+    """Host-side slot allocator: a queue of pending requests and a
+    fixed pool of slots, with pluggable admission policy."""
+
+    def __init__(self, n_slots: int, admission: str = "continuous"):
+        if admission not in ADMISSION_POLICIES:
+            raise ValueError(f"admission must be one of "
+                             f"{ADMISSION_POLICIES}, got {admission!r}")
+        self.n_slots = n_slots
+        self.admission = admission
+        self.slots: List[Optional[int]] = [None] * n_slots  # uid per slot
+        self.pending: Deque = deque()
+
+    def submit(self, item) -> None:
+        self.pending.append(item)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self.free_slots())
+
+    def admit_batch(self) -> List[Tuple[int, object]]:
+        """Pair pending requests with slots per the admission policy.
+        Marks the returned slots occupied."""
+        free = self.free_slots()
+        if not self.pending or not free:
+            return []
+        if self.admission == "wave" and len(free) != self.n_slots:
+            return []                      # wait for the wave to drain
+        out = []
+        for slot in free:
+            if not self.pending:
+                break
+            item = self.pending.popleft()
+            self.slots[slot] = getattr(item, "uid", -1)
+            out.append((slot, item))
+        return out
+
+    def release(self, slot: int) -> None:
+        self.slots[slot] = None

@@ -121,6 +121,121 @@ def test_sliding_window_masks_past():
     assert not bool(m[5, 2]) and not bool(m[5, 6])
 
 
+def test_decode_mask_ring_buffer_wrap():
+    """After the hybrid sliding-window cache wraps, the decode mask
+    reconstructs each row's absolute position from the wrapped write
+    offset — the old absolute-vs-row-index mask went all-False there."""
+    from repro.models import layers as L
+    win = 64
+    # pos 70 wrapped to row 6: every ring row holds one of the last 64
+    # positions, so the whole window is attendable
+    m = L._decode_mask(jnp.asarray([70]), jnp.asarray(70 % win), win, win)
+    assert m.shape == (1, win) and bool(m.all())
+    # pre-wrap (pos 3): only rows 0..3 written
+    m = L._decode_mask(jnp.asarray([3]), jnp.asarray(3), win, win)
+    assert m.sum() == 4 and bool(m[0, :4].all())
+    # linear (non-ring) cache: reduces to the causal prefix mask
+    m = L._decode_mask(jnp.asarray([9]), jnp.asarray(9), 32, 0)
+    assert m.sum() == 10 and bool(m[0, :10].all())
+    # per-slot vector offsets
+    m = L._decode_mask(jnp.asarray([[70], [3]]),
+                       jnp.asarray([70 % win, 3]), win, win)
+    assert m.shape == (2, 1, win)
+    assert bool(m[0].all()) and m[1].sum() == 4
+
+
+def test_hybrid_decode_survives_window_wrap():
+    """Hybrid decode past the sliding window attends over the full ring
+    (the pre-fix mask had zero valid rows there -> uniform softmax over
+    garbage), and the ring is independent of the cache max_len: the
+    shared-attn buffer is allocated at exactly `window` rows."""
+    cfg = dataclasses.replace(configs.get_smoke("zamba2-1.2b"),
+                              dtype="float32", sliding_window=8)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 4), 0,
+                              cfg.vocab_size)
+
+    def drive(max_len):
+        cache = T.init_cache(cfg, 1, max_len)
+        assert cache["window"] == 8
+        assert cache["shared_attn"]["k"].shape[2] == 8   # ring == window
+        logits, cache = T.prefill(params, cfg, toks, cache)
+        outs = []
+        for i in range(4, 20):              # crosses the wrap at pos 8
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            logits, cache = T.decode_step(params, cfg, tok, cache,
+                                          jnp.asarray(i))
+            assert np.isfinite(np.asarray(logits)).all()
+            # post-wrap logits must stay sharp, not collapse toward the
+            # uniform average an all-masked softmax produces
+            probs = jax.nn.softmax(logits[0, 0].astype(jnp.float32))
+            assert float(probs.max()) > 2.0 / cfg.vocab_size
+            outs.append(np.asarray(logits[0, 0]))
+        return np.stack(outs)
+
+    np.testing.assert_array_equal(drive(8), drive(32))
+
+
+def test_mask_per_slot_positions():
+    """(B,Sq) q_pos gives each batch row its own causal frontier."""
+    from repro.models import layers as L
+    q_pos = jnp.asarray([[3], [7]])
+    m = L._mask(q_pos, jnp.arange(10), window=0)
+    assert m.shape == (2, 1, 10)
+    assert bool(m[0, 0, 3]) and not bool(m[0, 0, 4])
+    assert bool(m[1, 0, 7]) and not bool(m[1, 0, 8])
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "deepseek-v2-lite-16b",
+                                  "zamba2-1.2b"])
+def test_decode_step_vector_pos_matches_scalar(arch):
+    """decode_step with a (B,) per-slot position vector reproduces the
+    scalar-pos path exactly when all slots sit at the same position."""
+    cfg = dataclasses.replace(configs.get_smoke(arch), dtype="float32")
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)   # dropless
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    cache = T.init_cache(cfg, 2, 16)
+    _, cache = T.prefill(params, cfg, toks[:, :8], cache)
+    tok = toks[:, 8:9]
+    l_s, c_s = T.decode_step(params, cfg, tok, cache, jnp.asarray(8))
+    l_v, c_v = T.decode_step(params, cfg, tok, cache,
+                             jnp.asarray([8, 8], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(l_s), np.asarray(l_v))
+    for a, b in zip(jax.tree.leaves(c_s), jax.tree.leaves(c_v)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "deepseek-v2-lite-16b"])
+def test_decode_step_staggered_slots(arch):
+    """Slots at *different* positions each match their own scalar-pos
+    decode: per-slot RoPE phases, cache writes and causal masks keep
+    batch rows fully independent (attention families)."""
+    cfg = dataclasses.replace(configs.get_smoke(arch), dtype="float32")
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)   # dropless
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    cache = T.init_cache(cfg, 2, 16)
+    _, cache = T.prefill(params, cfg, toks[:, :8], cache)
+    l8, c9 = T.decode_step(params, cfg, toks[:, 8:9], cache, jnp.asarray(8))
+    _, c10 = T.decode_step(params, cfg, toks[:, 9:10], c9, jnp.asarray(9))
+    l10, _ = T.decode_step(params, cfg, toks[:, 10:11], c10,
+                           jnp.asarray(10))
+    # row 0 replays pos 8 (its mask hides the newer cache rows; the
+    # write at row 8 re-stores identical k/v), row 1 decodes pos 10.
+    l_mix, _ = T.decode_step(params, cfg,
+                             jnp.stack([toks[0, 8:9], toks[1, 10:11]]),
+                             c10, jnp.asarray([8, 10], jnp.int32))
+    np.testing.assert_allclose(np.asarray(l_mix[0, 0]),
+                               np.asarray(l8[0, 0]), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l_mix[1, 0]),
+                               np.asarray(l10[1, 0]), rtol=1e-5, atol=1e-5)
+
+
 def test_ssd_chunked_matches_naive_recurrence():
     """Chunked SSD (arXiv:2405.21060) vs step-by-step recurrence."""
     from repro.models import layers as L

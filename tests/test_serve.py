@@ -1,4 +1,6 @@
-"""Serving engine + batcher tests."""
+"""Serving sampling / generate-loop tests + the deprecated BatchServer
+shim (wave admission over InferenceEngine). Scheduler invariants and
+continuous-batching coverage live in test_engine.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
