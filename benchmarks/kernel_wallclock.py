@@ -1,0 +1,9 @@
+"""Registered entry point for the measured kernel wall-clock section
+(two-call vs fused vs merged-projection; see benchmarks/kernel_bench.py,
+which also hosts the CLI: ``python -m benchmarks.kernel_bench --smoke``).
+Emits BENCH_kernel_wallclock.json."""
+from benchmarks.kernel_bench import run_wallclock
+
+
+def run():
+    return run_wallclock()

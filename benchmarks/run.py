@@ -11,9 +11,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig9_admm, kernel_bench, serve_bench,
-                        table2_perplexity, table4_efficiency, table5_init,
-                        table6_components, table9_databudget,
+from benchmarks import (fig9_admm, kernel_bench, kernel_wallclock,
+                        serve_bench, table2_perplexity, table4_efficiency,
+                        table5_init, table6_components, table9_databudget,
                         table13_storage)
 
 TABLES = {
@@ -25,6 +25,7 @@ TABLES = {
     "table13": table13_storage,
     "fig9": fig9_admm,
     "kernels": kernel_bench,
+    "kernel_wallclock": kernel_wallclock,
     "serve": serve_bench,
 }
 

@@ -23,6 +23,8 @@ if [[ "${1:-}" != "--fast" ]]; then
   rm -rf "$OUT"
   echo "== CPU smoke: serving scheduler (wave vs continuous) =="
   python -m benchmarks.serve_bench --smoke
+  echo "== CPU smoke: kernel wall-clock (two-call vs fused) =="
+  python -m benchmarks.kernel_bench --smoke
 fi
 
 echo "verify: OK"

@@ -41,9 +41,12 @@ from repro.core.pipeline import (  # noqa: F401
     QuantConfig, nanoquant_quantize, tune_scales_kd)
 from repro.kernels.ops import (  # noqa: F401
     KernelPolicy, current_kernel_policy, kernel_policy,
-    lowrank_binary_matmul, set_kernel_policy)
+    lowrank_binary_matmul, lowrank_binary_matmul_expert,
+    lowrank_binary_matmul_merged, set_kernel_policy)
+from repro.kernels.tuning import load_block_table  # noqa: F401
 from repro.quant.surgery import (  # noqa: F401
-    abstract_quantized_params, packed_model_bytes, quantizable_paths)
+    abstract_quantized_params, merge_projection_groups, packed_model_bytes,
+    quantizable_paths)
 from repro.serve.batcher import BatchServer  # noqa: F401  (deprecated shim)
 from repro.serve.engine import (  # noqa: F401
     InferenceEngine, RequestHandle, ServeConfig)
@@ -63,8 +66,11 @@ __all__ = [
     # kernels
     "KernelPolicy", "kernel_policy", "current_kernel_policy",
     "set_kernel_policy", "lowrank_binary_matmul",
+    "lowrank_binary_matmul_merged", "lowrank_binary_matmul_expert",
+    "load_block_table",
     # surgery / storage
-    "abstract_quantized_params", "packed_model_bytes", "quantizable_paths",
+    "abstract_quantized_params", "merge_projection_groups",
+    "packed_model_bytes", "quantizable_paths",
     # serving / persistence
     "InferenceEngine", "RequestHandle", "Request", "ServeConfig",
     "BatchServer", "CheckpointManager",

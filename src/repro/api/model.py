@@ -34,7 +34,9 @@ from repro.serve.engine import InferenceEngine, ServeConfig
 from repro.serve.scheduler import Request
 
 MANIFEST_NAME = "nanoquant.json"
-MANIFEST_VERSION = 1
+# v2: quant_config carries pack_k_align (tile-aligned packed operands);
+# v1 manifests load fine (missing key = 32 = the old unaligned layout).
+MANIFEST_VERSION = 2
 
 
 @dataclasses.dataclass
@@ -184,7 +186,8 @@ class NanoQuantModel:
         formulas — see ``quant.surgery.packed_model_bytes``)."""
         q = self.qcfg or QuantConfig()
         return packed_model_bytes(self.cfg, q.target_bpw, q.min_dim,
-                                  q.rank_align)
+                                  q.rank_align,
+                                  getattr(q, "pack_k_align", 32))
 
 
 def _param_template(cfg: ModelConfig, qcfg: Optional[QuantConfig]):
@@ -192,7 +195,8 @@ def _param_template(cfg: ModelConfig, qcfg: Optional[QuantConfig]):
         from repro.configs.shapes import param_specs
         return param_specs(cfg)
     return abstract_quantized_params(cfg, qcfg.target_bpw, qcfg.min_dim,
-                                     qcfg.rank_align)
+                                     qcfg.rank_align,
+                                     getattr(qcfg, "pack_k_align", 32))
 
 
 def _json_safe(obj):

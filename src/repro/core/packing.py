@@ -7,15 +7,33 @@ from repro.kernels.ref import pack_signs, unpack_signs  # noqa: F401
 import jax.numpy as jnp
 
 
-def pack_quantized(lat_u, lat_v, s1, s2, dtype=jnp.float32):
+def pack_quantized(lat_u, lat_v, s1, s2, dtype=jnp.float32,
+                   k_align: int = 32):
     """Finalize a quantized linear: latents -> packed param dict consumed by
     ``repro.models.layers.dense`` (weights layout (d_in, d_out), so
-    U (d_out, r) is stored transposed as packed Uᵀ)."""
+    U (d_out, r) is stored transposed as packed Uᵀ).
+
+    k_align: pad the packed d_in (reduction) dim up to this multiple *at
+    pack time*, so serving kernels never re-pad the stored operands per
+    call (the padded s2 columns are 0, so the padding contributes
+    exactly nothing). 32 (the packing word) is a no-op for any packable
+    linear; set e.g. 512 to guarantee full K tiles on TPU. The output
+    (d_out) and rank dims are never padded here — rank alignment comes
+    from ``QuantConfig.rank_align`` at quantize time.
+    """
     u = jnp.sign(jnp.where(lat_u == 0, 1.0, lat_u))     # (d_out, r)
     v = jnp.sign(jnp.where(lat_v == 0, 1.0, lat_v))     # (d_in, r)
+    k_align = max(32, k_align)
+    d_in = v.shape[0]
+    kp = -(-d_in // k_align) * k_align
+    if kp != d_in:
+        # padded rows pack to 0-bits (unpack to -1); harmless because
+        # the matching s2 entries are zero.
+        v = jnp.pad(v, ((0, kp - d_in), (0, 0)))
+        s2 = jnp.pad(s2.astype(dtype), (0, kp - d_in))
     return {
         "qu_t": pack_signs(u.T),                        # (r//32, d_out)
-        "qv": pack_signs(v),                            # (d_in//32, r)
+        "qv": pack_signs(v),                            # (kp//32, r)
         "s1": s1.astype(dtype),
         "s2": s2.astype(dtype),
     }

@@ -35,6 +35,10 @@ from repro.train.optim import AdamW, cosine_schedule
 class QuantConfig:
     target_bpw: float = 1.0
     rank_align: int = 32
+    # pack-time tile alignment of the packed d_in dim (stored operands
+    # are padded ONCE here instead of per kernel call; 32 = packing
+    # word, i.e. no extra padding — see core.packing.pack_quantized)
+    pack_k_align: int = 32
     admm_iters: int = 40
     rho_init: float = 0.01
     rho_final: float = 1.0
@@ -277,9 +281,9 @@ def _init_latent(p, d_in, d_out, qcfg: QuantConfig, key):
     return lat, r
 
 
-def _pack_latent(lat: dict) -> dict:
+def _pack_latent(lat: dict, k_align: int = 32) -> dict:
     def pack2d(lu, lv, s1, s2):
-        return packing.pack_quantized(lu, lv, s1, s2)
+        return packing.pack_quantized(lu, lv, s1, s2, k_align=k_align)
     if lat["lu"].ndim == 3:
         q = jax.vmap(pack2d)(lat["lu"], lat["lv"],
                              lat["s1"].astype(jnp.float32),
@@ -385,7 +389,8 @@ def nanoquant_quantize(params, cfg, calib_batches, qcfg: QuantConfig,
 
         # pack + freeze
         for path in lpaths:
-            bp = _set_path(bp, path, _pack_latent(_get_path(bp, path)))
+            bp = _set_path(bp, path, _pack_latent(_get_path(bp, path),
+                                                  qcfg.pack_k_align))
         quantized[(bref.stack, bref.idx)] = bp
 
         # advance streams

@@ -1,18 +1,34 @@
-"""Pallas TPU kernel: packed-binary matmul with fused channel scales.
+"""Pallas TPU kernels: packed-binary matmul with fused channel scales.
 
 TPU-native adaptation of the paper's binary CUDA GEMV/GEMM (App. E): the
-±1 factor matrix stays bit-packed (uint32) in HBM; each grid step streams a
-(bk//32, bn) packed tile into VMEM, expands it to ±1 with a vectorized
-shift/mask (VPU), and feeds the MXU matmul. The f32 accumulator lives in a
-VMEM scratch tile across the K grid dimension; input-side (s_k) and
-output-side (s_n) channel scales are fused so the low-rank chain
-``y = s1 ⊙ ((x ⊙ s2) @ V) @ Uᵀ`` is exactly two pallas_calls with no
-intermediate HBM round-trip of unpacked weights.
+±1 factor matrices stay bit-packed (uint32) in HBM; each grid step
+streams a packed tile into VMEM, expands it to ±1 with a vectorized
+shift/mask (VPU), and feeds the MXU matmul.
 
-GEMV (decode) is the same kernel with a single block-row grid: unlike the
-paper's CUDA GEMV (which deliberately avoids tensor cores), TPU has no
-scalar-core bypass — the MXU is always the right unit, so one kernel serves
-both regimes.
+Two execution strategies for the low-rank chain
+``y = s1 ⊙ ((x ⊙ s2) @ V±1) @ U±1ᵀ``:
+
+- :func:`fused_lowrank_matmul` (default) — ONE ``pallas_call``. The
+  grid is (group, M-tiles, K-tiles ++ N-tiles): the inner grid dim first
+  sweeps K accumulating the stage-1 reduction ``(x ⊙ s2) @ V`` into a
+  ``(bm, r)`` f32 VMEM scratch (rank r ≪ d_in, so the whole rank
+  dimension fits in one block), then sweeps N consuming that scratch
+  for stage 2 ``t @ Uᵀ ⊙ s1`` — the rank-r intermediate never touches
+  HBM and every packed tile is unpacked exactly once per M-tile.
+  The leading *group* grid dimension serves double duty: merged
+  multi-projection calls (QKV / gate-up share x, one kernel instead of
+  three/two dispatches) and stacked-expert calls (the expert axis is a
+  grid dimension instead of a host-level vmap of the kernel).
+- :func:`lowrank_binary_matmul_twocall` — the legacy two-``pallas_call``
+  form (stage 1 writes t to HBM, stage 2 re-reads it per output tile);
+  kept as the baseline `benchmarks/kernel_wallclock.py` races against
+  and as a fallback for ranks too large for a single VMEM block.
+
+GEMV (decode) is the same fused kernel with sublane-sized M tiles:
+unlike the paper's CUDA GEMV (which deliberately avoids tensor cores),
+TPU has no scalar-core bypass — the MXU is always the right unit, so
+one kernel serves both regimes; block sizes come from
+:mod:`repro.kernels.tuning`.
 """
 from __future__ import annotations
 
@@ -27,17 +43,29 @@ from jax.experimental.pallas import tpu as pltpu
 _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
 
+# ranks above this don't fit a single VMEM block comfortably alongside
+# the unpacked stage-1 tile; fall back to the two-call kernel.
+MAX_FUSED_RANK = 4096
+
+
+def _unpack_tile(packed, rows):
+    """(rows//32, cols) uint32 -> (rows, cols) ±1 f32 (VPU shift/mask)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
+    bits = (packed[:, None, :] >> shifts) & jnp.uint32(1)
+    return (bits.astype(jnp.float32) * 2.0 - 1.0).reshape(rows, -1)
+
+
+# ===========================================================================
+# two-call building block (legacy path + wallclock baseline)
+# ===========================================================================
+
 
 def _kernel(x_ref, w_ref, sk_ref, sn_ref, o_ref, acc_ref, *, n_k: int, bk: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    packed = w_ref[...]                                  # (bk//32, bn) uint32
-    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
-    bits = (packed[:, None, :] >> shifts) & jnp.uint32(1)
-    w = (bits.astype(jnp.float32) * 2.0 - 1.0).reshape(bk, -1)
-
+    w = _unpack_tile(w_ref[...], bk)                     # (bk, bn)
     x = x_ref[...].astype(jnp.float32) * sk_ref[...].astype(jnp.float32)
     acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
@@ -53,9 +81,11 @@ def packed_matmul(x, packed_w, s_k=None, s_n=None, *,
     """y = (x ⊙ s_k) @ unpack(packed_w) ⊙ s_n.
 
     x: (M, K) float; packed_w: (K//32, N) uint32; s_k: (K,); s_n: (N,).
-    M is padded to bm internally; K and N must be multiples of 32 and are
-    padded to bk / bn.
+    bm/bn/bk are preferred tiles: K and N tiles are re-fitted to
+    divisors of the operand dims when possible (see kernels.tuning), so
+    pack-aligned operands are never padded at call time.
     """
+    from repro.kernels import tuning
     M, K = x.shape
     N = packed_w.shape[1]
     assert packed_w.shape[0] * 32 == K
@@ -66,8 +96,8 @@ def packed_matmul(x, packed_w, s_k=None, s_n=None, *,
         s_n = jnp.ones((N,), jnp.float32)
 
     bm = min(bm, max(8, M))
-    bk = min(bk, K)
-    bn = min(bn, N)
+    bk = tuning._divisor_tile(K, bk, 32) or min(bk, K)
+    bn = tuning._divisor_tile(N, bn, 8) or min(bn, N)
     Mp = -(-M // bm) * bm
     Kp = -(-K // bk) * bk
     Np = -(-N // bn) * bn
@@ -107,12 +137,136 @@ def packed_matmul(x, packed_w, s_k=None, s_n=None, *,
     return out[:M, :N]
 
 
-def lowrank_binary_matmul_pallas(x, qv, qu_t, s1, s2, *, interpret=False,
-                                 bm=128, bn=128, bk=512):
-    """Two-stage NanoQuant linear, both stages as packed-matmul kernels."""
+def lowrank_binary_matmul_twocall(x, qv, qu_t, s1, s2, *, interpret=False,
+                                  bm=128, bn=128, bk=512):
+    """Two-stage NanoQuant linear, both stages as packed-matmul kernels
+    with the rank-r intermediate round-tripping HBM (pre-fusion path)."""
     shape = x.shape
     d_in = shape[-1]
     x2 = x.reshape(-1, d_in)
     t = packed_matmul(x2, qv, s_k=s2, bm=bm, bn=bn, bk=bk, interpret=interpret)
     y = packed_matmul(t, qu_t, s_n=s1, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y.reshape(*shape[:-1], y.shape[-1])
+
+
+# deprecated alias (pre-fusion public name)
+lowrank_binary_matmul_pallas = lowrank_binary_matmul_twocall
+
+
+# ===========================================================================
+# fused single-pass kernel (grouped: merged projections / stacked experts)
+# ===========================================================================
+
+
+def _fused_kernel(x_ref, qv_ref, qu_ref, s2_ref, s1_ref, rm_ref, o_ref,
+                  acc_ref, *, n_k: int, bk: int, r: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(s < n_k)
+    def _stage1():
+        v = _unpack_tile(qv_ref[0], bk)                  # (bk, r)
+        x = x_ref[0].astype(jnp.float32) * s2_ref[0].astype(jnp.float32)
+        acc_ref[...] += jnp.dot(x, v, preferred_element_type=jnp.float32)
+
+    @pl.when(s >= n_k)
+    def _stage2():
+        u = _unpack_tile(qu_ref[0], r)                   # (r, bn)
+        t = acc_ref[...] * rm_ref[0].astype(jnp.float32)
+        o_ref[0] = (jnp.dot(t, u, preferred_element_type=jnp.float32)
+                    * s1_ref[0].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def fused_lowrank_matmul_grouped(xg, qv_g, qu_g, s1_g, s2_g, rmask_g=None, *,
+                                 x_shared: bool = False, bm: int = 128,
+                                 bn: int = 128, bk: int = 512,
+                                 interpret: bool = False):
+    """One fused pass over G grouped low-rank binary linears.
+
+    xg:      (Gx, M, K)  — Gx == 1 with ``x_shared`` (merged projections
+             reading the same activations) else Gx == G (stacked experts).
+    qv_g:    (G, K//32, R) packed V; qu_g: (G, R//32, N) packed Uᵀ.
+    s1_g:    (G, N); s2_g: (G, K); rmask_g: (G, R) f32 zeroing rank
+             columns past a group's true rank (merged groups pad every
+             projection to the widest rank; None => all ranks real).
+
+    Returns (G, M, N) in xg.dtype. Stage-1 accumulates into a (bm, R)
+    VMEM scratch; stage 2 consumes it in place — no HBM traffic for the
+    intermediate, one unpack per packed tile per M-tile.
+    """
+    Gx, M, K = xg.shape
+    G, _, R = qv_g.shape
+    N = qu_g.shape[2]
+    assert qv_g.shape[1] * 32 == K, (qv_g.shape, K)
+    assert qu_g.shape[1] * 32 == R, (qu_g.shape, R)
+    assert Gx == (1 if x_shared else G)
+    if rmask_g is None:
+        rmask_g = jnp.ones((G, R), jnp.float32)
+
+    from repro.kernels import tuning
+    bm = min(bm, max(8, M))
+    bk = tuning._divisor_tile(K, bk, 32) or min(bk, K)
+    bn = tuning._divisor_tile(N, bn, 8) or min(bn, N)
+    Mp = -(-M // bm) * bm
+    Kp = -(-K // bk) * bk
+    Np = -(-N // bn) * bn
+    if Mp != M:
+        xg = jnp.pad(xg, ((0, 0), (0, Mp - M), (0, 0)))
+    if Kp != K:
+        # padded packed words unpack to -1 but the padded s2 columns are
+        # 0, so stage 1 accumulates exactly 0 from the padding.
+        xg = jnp.pad(xg, ((0, 0), (0, 0), (0, Kp - K)))
+        qv_g = jnp.pad(qv_g, ((0, 0), (0, (Kp - K) // 32), (0, 0)))
+        s2_g = jnp.pad(s2_g, ((0, 0), (0, Kp - K)))
+    if Np != N:
+        qu_g = jnp.pad(qu_g, ((0, 0), (0, 0), (0, Np - N)))
+        s1_g = jnp.pad(s1_g, ((0, 0), (0, Np - N)))
+
+    n_m, n_n, n_k = Mp // bm, Np // bn, Kp // bk
+    s2_3 = s2_g.reshape(G, 1, Kp)
+    s1_3 = s1_g.reshape(G, 1, Np)
+    rm_3 = rmask_g.reshape(G, 1, R)
+
+    def _k(g, i, s):
+        return jnp.minimum(s, n_k - 1)
+
+    def _j(g, i, s):
+        return jnp.maximum(s - n_k, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, n_k=n_k, bk=bk, r=R),
+        grid=(G, n_m, n_k + n_n),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk),
+                         (lambda g, i, s: (0, i, _k(g, i, s))) if x_shared
+                         else (lambda g, i, s: (g, i, _k(g, i, s)))),
+            pl.BlockSpec((1, Kp // 32 // n_k, R),
+                         lambda g, i, s: (g, _k(g, i, s), 0)),
+            pl.BlockSpec((1, R // 32, bn), lambda g, i, s: (g, 0, _j(g, i, s))),
+            pl.BlockSpec((1, 1, bk), lambda g, i, s: (g, 0, _k(g, i, s))),
+            pl.BlockSpec((1, 1, bn), lambda g, i, s: (g, 0, _j(g, i, s))),
+            pl.BlockSpec((1, 1, R), lambda g, i, s: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, s: (g, i, _j(g, i, s))),
+        out_shape=jax.ShapeDtypeStruct((G, Mp, Np), xg.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, R), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xg, qv_g, qu_g, s2_3, s1_3, rm_3)
+    return out[:, :M, :N]
+
+
+def fused_lowrank_matmul(x, qv, qu_t, s1, s2, *, interpret=False,
+                         bm=128, bn=128, bk=512):
+    """Single-linear fused NanoQuant matmul: one pallas_call, the rank-r
+    intermediate lives only in VMEM. x: (..., d_in) -> (..., d_out)."""
+    shape = x.shape
+    x2 = x.reshape(1, -1, shape[-1])
+    y = fused_lowrank_matmul_grouped(
+        x2, qv[None], qu_t[None], s1[None], s2[None], x_shared=True,
+        bm=bm, bn=bn, bk=bk, interpret=interpret)[0]
     return y.reshape(*shape[:-1], y.shape[-1])

@@ -1,14 +1,25 @@
 """Jit'd public wrappers for the binary kernels.
 
-The model stack calls :func:`lowrank_binary_matmul`; execution is
+The model stack calls :func:`lowrank_binary_matmul` (plus the merged
+multi-projection and stacked-expert entry points below); execution is
 governed by an explicit, immutable :class:`KernelPolicy`:
 
 - ``mode="ref"``    — pure-jnp oracle. Lowerable on every backend and
   under any pjit sharding, so it is the right choice for CPU runs and
   the multi-pod dry-run (XLA SPMD partitions it like any matmul chain).
-- ``mode="pallas"`` — the Pallas TPU kernel (interpret mode off-TPU),
+- ``mode="pallas"`` — the Pallas TPU kernels (interpret mode off-TPU),
   for real deployments and kernel validation.
 - ``mode="auto"``   — pallas on TPU backends, ref elsewhere.
+
+On the pallas path, ``fused=True`` (default) runs the whole low-rank
+chain as ONE kernel with the rank-r intermediate held in VMEM
+(:func:`repro.kernels.binary_matmul.fused_lowrank_matmul`);
+``fused=False`` keeps the legacy two-``pallas_call`` form.
+``merge_projections=True`` additionally lets the model layer batch
+projections that share an input (QKV, gate/up) into a single grouped
+kernel launch. Block sizes come from a heuristic table keyed on
+(M, K, N, r) — see :mod:`repro.kernels.tuning` — overridable per policy
+via ``block_table=`` (rows from ``tuning.load_block_table``).
 
 A policy can be threaded explicitly (``lowrank_binary_matmul(...,
 policy=p)``), installed for a scope (``with kernel_policy(p): ...``), or
@@ -17,7 +28,7 @@ the previous policy on exit and is contextvar-based, so concurrent
 threads / asyncio tasks do not trample each other.
 
 ``set_kernel_mode`` / ``kernel_mode`` are deprecated shims over the old
-mutable process-global mode list.
+mutable process-global mode list; each warns exactly once per process.
 """
 from __future__ import annotations
 
@@ -25,11 +36,12 @@ import contextlib
 import contextvars
 import dataclasses
 import warnings
-from typing import Optional, Union
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels import binary_matmul, ref
+from repro.kernels import binary_matmul, ref, tuning
 
 _MODES = ("auto", "ref", "pallas")
 
@@ -40,14 +52,27 @@ class KernelPolicy:
 
     interpret: run the Pallas kernel in interpreter mode. ``None``
     resolves at call time to "interpret unless on a real TPU backend".
+    fused: single-pass kernel (VMEM-resident rank intermediate) vs the
+    legacy two-call chain. merge_projections: allow grouped QKV /
+    gate-up launches. block_table: optional tuple of
+    ``(m_hi, k_hi, n_hi, r_hi, bm, bn, bk)`` rows (first match wins)
+    replacing the built-in heuristic table — typically produced by the
+    offline sweep (``python -m benchmarks.kernel_bench --sweep``)
+    and loaded with :func:`repro.kernels.tuning.load_block_table`.
     """
     mode: str = "auto"
     interpret: Optional[bool] = None
+    fused: bool = True
+    merge_projections: bool = True
+    block_table: Optional[Tuple[Tuple[int, ...], ...]] = None
 
     def __post_init__(self):
         if self.mode not in _MODES:
             raise ValueError(
                 f"unknown kernel mode {self.mode!r}; choose from {_MODES}")
+        if self.block_table is not None:
+            object.__setattr__(self, "block_table",
+                               tuple(tuple(r) for r in self.block_table))
 
     def use_pallas(self) -> bool:
         if self.mode == "auto":
@@ -58,6 +83,17 @@ class KernelPolicy:
         if self.interpret is None:
             return jax.default_backend() != "tpu"
         return self.interpret
+
+    def use_merged_projections(self) -> bool:
+        """Whether the model layer should issue grouped QKV / gate-up
+        kernel calls (requires the fused pallas path)."""
+        return self.use_pallas() and self.fused and self.merge_projections
+
+    def block_sizes(self, M: int, K: int, N: int, r: int,
+                    dtype=jnp.float32) -> Tuple[int, int, int]:
+        """(bm, bn, bk) for one call, from the heuristic table fitted to
+        the concrete shape (divisor tiles — no weight padding)."""
+        return tuning.fit_block_sizes(M, K, N, r, dtype, self.block_table)
 
 
 # Scoped overrides live in a ContextVar (thread/async-local); the
@@ -99,6 +135,20 @@ def kernel_policy(policy: Union[KernelPolicy, str]):
         _POLICY.reset(token)
 
 
+def _match_packed_k(x, qv):
+    """Zero-pad x's feature dim up to the packed operand's K. Stored
+    operands may be K-aligned past the activation width (surgery packs
+    them tile-aligned); the padded s2 columns are zero so the extra
+    columns contribute nothing."""
+    Kw = qv.shape[-2] * 32
+    d = x.shape[-1]
+    if Kw == d:
+        return x
+    assert Kw > d, (qv.shape, x.shape)
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, Kw - d)]
+    return jnp.pad(x, pad)
+
+
 def lowrank_binary_matmul(x, qv, qu_t, s1, s2,
                           policy: Optional[KernelPolicy] = None):
     """y = s1 ⊙ ((x ⊙ s2) @ V±1) @ U±1ᵀ  — packed operands (paper Eq. 1).
@@ -106,29 +156,115 @@ def lowrank_binary_matmul(x, qv, qu_t, s1, s2,
     Dispatches per `policy` (explicit argument wins, else the active
     contextvar policy)."""
     p = policy if policy is not None else current_kernel_policy()
+    x = _match_packed_k(x, qv)
     if p.use_pallas():
-        return binary_matmul.lowrank_binary_matmul_pallas(
-            x, qv, qu_t, s1, s2, interpret=p.resolve_interpret())
+        r = qv.shape[-1]
+        M = x.size // x.shape[-1]
+        bm, bn, bk = p.block_sizes(M, x.shape[-1], qu_t.shape[-1], r,
+                                   x.dtype)
+        interp = p.resolve_interpret()
+        if p.fused and r <= binary_matmul.MAX_FUSED_RANK:
+            return binary_matmul.fused_lowrank_matmul(
+                x, qv, qu_t, s1, s2, bm=bm, bn=bn, bk=bk, interpret=interp)
+        return binary_matmul.lowrank_binary_matmul_twocall(
+            x, qv, qu_t, s1, s2, bm=bm, bn=bn, bk=bk, interpret=interp)
     return ref.lowrank_binary_matmul_ref(x, qv, qu_t, s1, s2)
+
+
+def lowrank_binary_matmul_merged(x, mp, dims: Sequence[int],
+                                 policy: Optional[KernelPolicy] = None):
+    """Grouped projections sharing one input (QKV / gate-up): ONE kernel
+    launch instead of len(dims).
+
+    mp: merged param dict from ``quant.surgery.merge_projection_groups``
+    — ``qv`` (P, K//32, R), ``qu_t`` (P, R//32, Nmax), ``s1`` (P, Nmax),
+    ``s2`` (P, K), ``rmask`` (P, R) (every projection padded to the
+    widest rank R / output Nmax; padded s1 columns are 0 and rmask zeros
+    the padded rank columns). dims: static true d_out per projection.
+    Returns a list of per-projection outputs (..., dims[i]).
+
+    There is no two-call form of the merged launch (merging exists to
+    eliminate launches): when the policy disables the fused pallas path
+    the fallback is the grouped jnp oracle. The model layer only routes
+    here when ``policy.use_merged_projections()`` is true, so a
+    ``fused=False`` pallas policy runs per-projection two-call kernels
+    via :func:`lowrank_binary_matmul` instead.
+    """
+    p = policy if policy is not None else current_kernel_policy()
+    x = _match_packed_k(x, mp["qv"])
+    shape = x.shape
+    x2 = x.reshape(1, -1, shape[-1])
+    R = mp["qv"].shape[-1]
+    rmask = mp.get("rmask")
+    if p.use_pallas() and p.fused and R <= binary_matmul.MAX_FUSED_RANK:
+        M = x2.shape[1]
+        bm, bn, bk = p.block_sizes(M, shape[-1], mp["qu_t"].shape[-1], R,
+                                   x.dtype)
+        yg = binary_matmul.fused_lowrank_matmul_grouped(
+            x2, mp["qv"], mp["qu_t"], mp["s1"], mp["s2"], rmask,
+            x_shared=True, bm=bm, bn=bn, bk=bk,
+            interpret=p.resolve_interpret())
+    else:
+        yg = jax.vmap(
+            lambda qv, qu, s1, s2, rm: ref.lowrank_binary_matmul_fused_ref(
+                x2[0], qv, qu, s1, s2, rm),
+        )(mp["qv"], mp["qu_t"], mp["s1"], mp["s2"],
+          rmask if rmask is not None
+          else jnp.ones((mp["qv"].shape[0], R), jnp.float32))
+    return [yg[i, :, :n].reshape(*shape[:-1], n)
+            for i, n in enumerate(dims)]
+
+
+def lowrank_binary_matmul_expert(x, qv, qu_t, s1, s2,
+                                 policy: Optional[KernelPolicy] = None):
+    """Stacked-expert NanoQuant linear: x (E, C, d_in) with per-expert
+    packed operands (E, ...). On the fused pallas path the expert axis
+    becomes a kernel grid dimension (one launch for all experts) instead
+    of a host-level vmap of the kernel."""
+    p = policy if policy is not None else current_kernel_policy()
+    x = _match_packed_k(x, qv)
+    r = qv.shape[-1]
+    if p.use_pallas():
+        interp = p.resolve_interpret()
+        bm, bn, bk = p.block_sizes(x.shape[1], x.shape[-1],
+                                   qu_t.shape[-1], r, x.dtype)
+        if p.fused and r <= binary_matmul.MAX_FUSED_RANK:
+            return binary_matmul.fused_lowrank_matmul_grouped(
+                x, qv, qu_t, s1, s2, x_shared=False,
+                bm=bm, bn=bn, bk=bk, interpret=interp)
+        return jax.vmap(
+            lambda xe, v, u, a, b: binary_matmul.lowrank_binary_matmul_twocall(
+                xe, v, u, a, b, bm=bm, bn=bn, bk=bk, interpret=interp)
+        )(x, qv, qu_t, s1, s2)
+    return jax.vmap(ref.lowrank_binary_matmul_ref)(x, qv, qu_t, s1, s2)
 
 
 # ---------------------------------------------------------------------------
 # deprecated process-global mode API (pre-KernelPolicy)
 # ---------------------------------------------------------------------------
 
+_SHIM_WARNED = set()
+
+
+def _warn_once(name: str) -> None:
+    if name in _SHIM_WARNED:
+        return
+    _SHIM_WARNED.add(name)
+    warnings.warn(f"{name} is deprecated; use "
+                  f"{'set_kernel_policy' if 'set' in name else 'kernel_policy'}",
+                  DeprecationWarning, stacklevel=3)
+
 
 def set_kernel_mode(mode: str) -> None:
     """Deprecated: use ``set_kernel_policy(KernelPolicy(mode=...))``."""
-    warnings.warn("set_kernel_mode is deprecated; use set_kernel_policy",
-                  DeprecationWarning, stacklevel=2)
+    _warn_once("set_kernel_mode")
     set_kernel_policy(KernelPolicy(mode=mode))
 
 
 @contextlib.contextmanager
 def kernel_mode(mode: str):
     """Deprecated: use ``kernel_policy(mode)``."""
-    warnings.warn("kernel_mode is deprecated; use kernel_policy",
-                  DeprecationWarning, stacklevel=2)
+    _warn_once("kernel_mode")
     with kernel_policy(mode):
         yield
 

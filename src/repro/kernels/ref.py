@@ -57,6 +57,32 @@ def lowrank_binary_matmul_ref(x, qv, qu_t, s1, s2):
 
     x: (..., d_in); qv: packed V (d_in//32, r); qu_t: packed Uᵀ (r//32, d_out);
     s1: (d_out,); s2: (d_in,).
+
+    Two-stage form: the rank-r intermediate is rounded to the activation
+    dtype between stages, mirroring the pre-fusion two-kernel execution.
     """
     t = packed_matmul_ref(x, qv, s_k=s2)          # (..., r)
     return packed_matmul_ref(t, qu_t, s_n=s1)     # (..., d_out)
+
+
+def lowrank_binary_matmul_fused_ref(x, qv, qu_t, s1, s2, rmask=None):
+    """Oracle for the *fused* kernel: the whole chain runs with an f32
+    intermediate (the fused kernel keeps t in a VMEM f32 scratch, so it
+    never rounds to the activation dtype between stages).
+
+    rmask: optional (r,) f32 zeroing rank columns past the true rank —
+    merged-projection calls pad every projection to the widest rank and
+    mask the padding here.
+    """
+    v = unpack_signs(qv, jnp.float32)             # (d_in, r)
+    u = unpack_signs(qu_t, jnp.float32)           # (r, d_out)
+    xf = x.astype(jnp.float32) * s2.astype(jnp.float32)
+    t = jax.lax.dot_general(
+        xf, v, (((xf.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if rmask is not None:
+        t = t * rmask.astype(jnp.float32)
+    y = jax.lax.dot_general(
+        t, u, (((t.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return (y * s1.astype(jnp.float32)).astype(x.dtype)

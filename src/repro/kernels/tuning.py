@@ -1,0 +1,118 @@
+"""Block-size selection for the packed binary matmul kernels.
+
+Two layers:
+
+- :data:`DEFAULT_BLOCK_TABLE` — a shape-class heuristic table keyed on
+  (M, K, N, r) upper bounds, seeded from an offline sweep
+  (``python -m benchmarks.kernel_bench --sweep``) and overridable
+  per :class:`~repro.kernels.ops.KernelPolicy` (``block_table=...``).
+- :func:`fit_block_sizes` — fits the table's *preferred* tile sizes to a
+  concrete shape so that the K and N tiles **divide** the operand dims
+  whenever they are pack-aligned. This is what lets ``packed_matmul`` /
+  the fused kernel skip call-time padding of the packed weights: a
+  divisor tile means zero pad ops traced into the jitted decode step
+  (the old code padded K up to a fixed bk=512 multiple, copying the
+  whole packed tensor once per token for shapes like d_ff=2816).
+
+Table rows are plain tuples so a :class:`KernelPolicy` carrying one
+stays an immutable value type: ``(m_hi, k_hi, n_hi, r_hi, bm, bn, bk)``,
+first row whose bounds cover the shape wins.
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+# sign bits are packed 32-per-word along K; K tiles must stay multiples
+# of 32 so a tile maps to whole uint32 rows of the packed operand.
+PACK_ALIGN = 32
+
+# (m_hi, k_hi, n_hi, r_hi, bm, bn, bk) — seeded by the offline sweep in
+# benchmarks/kernel_wallclock.py (--sweep); ordered decode -> prefill.
+# Decode rows keep bm at the dtype sublane so a (B,) slot batch becomes
+# a single MXU row tile instead of being padded to 128; wide-N rows
+# stream more output columns per packed-tile unpack.
+DEFAULT_BLOCK_TABLE: Tuple[Tuple[int, ...], ...] = (
+    # decode / GEMV: tiny M, stream weights in wide tiles
+    (16, 4096, 100_000, 1024, 8, 512, 512),
+    (16, 100_000, 100_000, 100_000, 8, 256, 512),
+    # small-batch decode (continuous-batching slot pools)
+    (64, 100_000, 100_000, 100_000, 64, 256, 512),
+    # prefill / training: square MXU tiles
+    (100_000, 100_000, 100_000, 100_000, 128, 128, 512),
+)
+
+
+def _sublane(dtype) -> int:
+    """Minimum sublane count for the activation dtype (f32: 8, bf16: 16)."""
+    try:
+        if jnp.dtype(dtype).itemsize <= 2:
+            return 16
+    except TypeError:
+        pass
+    return 8
+
+
+def _divisor_tile(dim: int, pref: int, align: int) -> int:
+    """Largest multiple of `align` that divides `dim` and is <= `pref`;
+    0 when `dim` has no aligned divisor (caller falls back to padding)."""
+    if dim % align:
+        return 0
+    best = 0
+    d = align
+    while d <= min(pref, dim):
+        if dim % d == 0:
+            best = d
+        d += align
+    return best
+
+
+def lookup_block_table(M: int, K: int, N: int, r: int,
+                       table: Optional[Sequence[Tuple[int, ...]]] = None
+                       ) -> Tuple[int, int, int]:
+    """Preferred (bm, bn, bk) for a shape class, before shape fitting.
+    A custom (swept) table that covers none of the shape's bounds falls
+    through to the built-in heuristic table — a sweep run on small
+    shapes must not degrade untuned production shapes."""
+    tables = [table, DEFAULT_BLOCK_TABLE] if table else [DEFAULT_BLOCK_TABLE]
+    for t in tables:
+        for m_hi, k_hi, n_hi, r_hi, bm, bn, bk in t:
+            if M <= m_hi and K <= k_hi and N <= n_hi and r <= r_hi:
+                return bm, bn, bk
+    return 128, 128, 512
+
+
+def fit_block_sizes(M: int, K: int, N: int, r: int, dtype=jnp.float32,
+                    table: Optional[Sequence[Tuple[int, ...]]] = None
+                    ) -> Tuple[int, int, int]:
+    """Concrete (bm, bn, bk) for one kernel call.
+
+    K/N tiles are fitted to divisors of the operand dims whenever the
+    dim is pack-aligned, so the packed weights are never padded at call
+    time; the M tile covers the (small) activation batch rounded to the
+    dtype sublane. Only a dim with no aligned divisor (e.g. an N not a
+    multiple of 8; K is always 32-aligned by packing) falls back to the
+    preferred tile with call-time padding.
+    """
+    bm_p, bn_p, bk_p = lookup_block_table(M, K, N, r, table)
+    sub = _sublane(dtype)
+    bm = min(max(bm_p, sub), -(-M // sub) * sub)
+    bk = _divisor_tile(K, bk_p, PACK_ALIGN) or min(bk_p, K)
+    bn = _divisor_tile(N, bn_p, 8) or min(bn_p, N)
+    return bm, bn, bk
+
+
+def load_block_table(path: str) -> Tuple[Tuple[int, ...], ...]:
+    """Parse a swept block table (``python -m benchmarks.kernel_bench
+    --sweep``) into the tuple-of-rows form
+    `KernelPolicy(block_table=...)` takes."""
+    with open(path) as f:
+        rows = json.load(f)
+    out = []
+    for row in rows:
+        out.append((int(row["m_hi"]), int(row["k_hi"]), int(row["n_hi"]),
+                    int(row["r_hi"]), int(row["bm"]), int(row["bn"]),
+                    int(row["bk"])))
+    return tuple(out)

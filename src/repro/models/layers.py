@@ -198,12 +198,38 @@ def dense(p: dict, x: jnp.ndarray, name: Optional[str] = None) -> jnp.ndarray:
     return y
 
 
+def dense_merged(mp: dict, x: jnp.ndarray, names, dims):
+    """Grouped packed projections sharing the input `x` (attention QKV /
+    MLP gate-up): ONE fused kernel launch instead of len(dims). `mp` is
+    the merged operand group built by
+    ``quant.surgery.merge_projection_groups``; `dims` are the static
+    true output widths. Taps and per-projection biases behave exactly
+    like the equivalent per-projection :func:`dense` calls."""
+    for nm in names:
+        _tap_pre(nm, x)
+    ys = kops.lowrank_binary_matmul_merged(x, mp, dims)
+    out = []
+    for i, (nm, n) in enumerate(zip(names, dims)):
+        y = _tap_post(nm, ys[i])
+        if "b" in mp:
+            y = y + mp["b"][i, :n].astype(y.dtype)
+        out.append(y)
+    return out
+
+
+def _use_merged(p: dict, key: str) -> bool:
+    return key in p and kops.current_kernel_policy().use_merged_projections()
+
+
 def dense_expert(p: dict, x: jnp.ndarray, name: Optional[str] = None) -> jnp.ndarray:
     """Batched-expert linear: x (E, C, d_in) with stacked weights (E, ...)."""
     _tap_pre(name, x, expert=True)
     if "qu_t" in p:
-        f = lambda xe, qv, qu, s1, s2: kops.lowrank_binary_matmul(xe, qv, qu, s1, s2)
-        y = jax.vmap(f)(x, p["qv"], p["qu_t"], p["s1"], p["s2"])
+        # expert axis becomes a kernel grid dimension on the fused
+        # pallas path (one launch for all experts); ref falls back to a
+        # per-expert vmap of the two-stage oracle.
+        y = kops.lowrank_binary_matmul_expert(x, p["qv"], p["qu_t"],
+                                              p["s1"], p["s2"])
     elif "lu" in p:
         y = jax.vmap(_ste_matmul)(
             {"lu": p["lu"], "lv": p["lv"], "s1": p["s1"], "s2": p["s2"]}, x)
@@ -398,9 +424,17 @@ def attention(p, cfg, x, positions, cache=None, cache_pos=None):
     flash_threshold = cfg.flash_threshold
     B, S, _ = x.shape
     hd = cfg.head_dim
-    q = dense(p["wq"], x, "attn.wq").reshape(B, S, cfg.n_heads, hd)
-    k = dense(p["wk"], x, "attn.wk").reshape(B, S, cfg.n_kv_heads, hd)
-    v = dense(p["wv"], x, "attn.wv").reshape(B, S, cfg.n_kv_heads, hd)
+    if _use_merged(p, "wqkv"):
+        q, k, v = dense_merged(
+            p["wqkv"], x, ("attn.wq", "attn.wk", "attn.wv"),
+            (cfg.n_heads * hd, cfg.n_kv_heads * hd, cfg.n_kv_heads * hd))
+        q = q.reshape(B, S, cfg.n_heads, hd)
+        k = k.reshape(B, S, cfg.n_kv_heads, hd)
+        v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    else:
+        q = dense(p["wq"], x, "attn.wq").reshape(B, S, cfg.n_heads, hd)
+        k = dense(p["wk"], x, "attn.wk").reshape(B, S, cfg.n_kv_heads, hd)
+        v = dense(p["wv"], x, "attn.wv").reshape(B, S, cfg.n_kv_heads, hd)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
@@ -585,9 +619,16 @@ def init_ffn(key, d_model, d_ff, dtype=jnp.bfloat16):
 
 
 def ffn(p, x, prefix="ffn"):
-    g = constrain(dense(p["w_gate"], x, prefix + ".w_gate"),
-                  "dp", None, "tp")
-    u = constrain(dense(p["w_up"], x, prefix + ".w_up"), "dp", None, "tp")
+    if _use_merged(p, "wgu"):
+        d_ff = p["wgu"]["qu_t"].shape[-1]   # gate/up share d_out
+        g, u = dense_merged(p["wgu"], x,
+                            (prefix + ".w_gate", prefix + ".w_up"),
+                            (d_ff, d_ff))
+    else:
+        g = dense(p["w_gate"], x, prefix + ".w_gate")
+        u = dense(p["w_up"], x, prefix + ".w_up")
+    g = constrain(g, "dp", None, "tp")
+    u = constrain(u, "dp", None, "tp")
     return dense(p["w_down"], silu(g) * u, prefix + ".w_down")
 
 

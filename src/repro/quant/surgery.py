@@ -46,23 +46,29 @@ def quantizable_paths(params, cfg: ModelConfig, min_dim: int = 48
     return out
 
 
-def _packed_struct(w_shape, target_bpw: float, rank_align: int):
-    """SDS dict for one packed linear; returns (struct, rank)."""
+def _packed_struct(w_shape, target_bpw: float, rank_align: int,
+                   k_align: int = 32):
+    """SDS dict for one packed linear; returns (struct, rank). The d_in
+    dim is tile-aligned to ``k_align`` exactly as
+    ``core.packing.pack_quantized`` stores it."""
     *lead, d_in, d_out = w_shape
     r = rank_for_bpw(d_out, d_in, target_bpw, rank_align)
+    k_align = max(32, k_align)
+    kp = -(-d_in // k_align) * k_align
     lead = tuple(lead)
     f32 = jnp.dtype(jnp.float32)
     u32 = jnp.dtype(jnp.uint32)
     return {
         "qu_t": jax.ShapeDtypeStruct(lead + (r // 32, d_out), u32),
-        "qv": jax.ShapeDtypeStruct(lead + (d_in // 32, r), u32),
+        "qv": jax.ShapeDtypeStruct(lead + (kp // 32, r), u32),
         "s1": jax.ShapeDtypeStruct(lead + (d_out,), f32),
-        "s2": jax.ShapeDtypeStruct(lead + (d_in,), f32),
+        "s2": jax.ShapeDtypeStruct(lead + (kp,), f32),
     }, r
 
 
 def abstract_quantized_params(cfg: ModelConfig, target_bpw: float = 1.0,
-                              min_dim: int = 48, rank_align: int = 32):
+                              min_dim: int = 48, rank_align: int = 32,
+                              k_align: int = 32):
     """ShapeDtypeStruct tree of the NanoQuant-quantized model — the exact
     structure ``core.pipeline.nanoquant_quantize`` emits, built without
     touching a single weight (for AOT serving dry-runs)."""
@@ -76,7 +82,7 @@ def abstract_quantized_params(cfg: ModelConfig, target_bpw: float = 1.0,
                 w = v["w"]
                 if quantizable_linear(k, w.shape, min_dim):
                     struct, _ = _packed_struct(w.shape, target_bpw,
-                                               rank_align)
+                                               rank_align, k_align)
                     if "b" in v:
                         struct["b"] = v["b"]
                     out[k] = struct
@@ -91,17 +97,113 @@ def abstract_quantized_params(cfg: ModelConfig, target_bpw: float = 1.0,
     return new
 
 
+# ---------------------------------------------------------------------------
+# merged projection groups (serving-side)
+# ---------------------------------------------------------------------------
+
+# (sibling keys sharing the block input, merged key)
+MERGE_GROUPS = (
+    (("wq", "wk", "wv"), "wqkv"),
+    (("w_gate", "w_up"), "wgu"),
+)
+
+
+def _pad_to(a, targets):
+    """Pad trailing dims: targets maps axis-from-end -> target size."""
+    spec = [(0, 0)] * a.ndim
+    for ax_fe, tgt in targets.items():
+        ax = a.ndim - ax_fe
+        spec[ax] = (0, tgt - a.shape[ax])
+    return jnp.pad(a, spec) if any(p[1] for p in spec) else a
+
+
+def _stack_group(subs):
+    """Stack P packed sibling linears into one grouped operand set for
+    the fused merged kernel: every projection padded to the widest rank
+    R and output Nmax (padded s1 columns are 0; ``rmask`` zeros the
+    padded rank columns, see kernels.binary_matmul)."""
+    ranks = [int(s["qv"].shape[-1]) for s in subs]
+    nouts = [int(s["qu_t"].shape[-1]) for s in subs]
+    R, n_max = max(ranks), max(nouts)
+    lead = subs[0]["qv"].shape[:-2]
+    ax2, ax1 = len(lead), len(lead)          # new group axis position
+    mp = {
+        "qv": jnp.stack([_pad_to(s["qv"], {1: R}) for s in subs], ax2),
+        "qu_t": jnp.stack([_pad_to(s["qu_t"], {2: R // 32, 1: n_max})
+                           for s in subs], ax2),
+        "s1": jnp.stack([_pad_to(s["s1"].astype(jnp.float32), {1: n_max})
+                         for s in subs], ax1),
+        "s2": jnp.stack([s["s2"].astype(jnp.float32) for s in subs], ax1),
+    }
+    rmask = jnp.stack([(jnp.arange(R) < r).astype(jnp.float32)
+                       for r in ranks])
+    mp["rmask"] = jnp.broadcast_to(rmask, lead + rmask.shape) + 0.0
+    if any("b" in s for s in subs):
+        bs = []
+        for s, n in zip(subs, nouts):
+            b = s["b"].astype(jnp.float32) if "b" in s else \
+                jnp.zeros(lead + (n,), jnp.float32)
+            bs.append(_pad_to(b, {1: n_max}))
+        mp["b"] = jnp.stack(bs, ax1)
+    return mp
+
+
+def merge_projection_groups(params):
+    """Serving-side transform: wherever a block holds packed sibling
+    projections that read the same activations (attention QKV; MLP
+    gate/up) with a common packed d_in, add a merged operand group
+    (``wqkv`` / ``wgu``) so the model layer can issue ONE grouped kernel
+    launch instead of three/two (`models.layers.dense_merged`).
+
+    Original per-projection leaves are kept (calibration, the ref path
+    and checkpointing keep reading them); the merged copies add only
+    packed-width memory. FP / partially-quantized groups are skipped.
+    Applied by ``serve.engine.InferenceEngine`` on its own copy of the
+    params — saved artifacts are never rewritten.
+    """
+    def walk(d):
+        out = {}
+        changed = False
+        for k, v in d.items():
+            if isinstance(v, dict):
+                nv = walk(v)
+                changed = changed or (nv is not v)
+                out[k] = nv
+            else:
+                out[k] = v
+        for names, merged_key in MERGE_GROUPS:
+            if merged_key in out:
+                continue
+            if "router" in out:
+                # MoE expert stacks run through dense_expert (expert-grid
+                # kernel), not ffn() — a merged copy would never be read
+                continue
+            subs = [out.get(nm) for nm in names]
+            if not all(isinstance(s, dict) and "qu_t" in s for s in subs):
+                continue
+            if len({s["qv"].shape[:-1] for s in subs}) != 1:
+                continue                     # packed d_in / lead mismatch
+            out[merged_key] = _stack_group(subs)
+            changed = True
+        return out if changed else d
+
+    return walk(params) if isinstance(params, dict) else params
+
+
 def packed_model_bytes(cfg: ModelConfig, target_bpw: float = 1.0,
-                       min_dim: int = 48, rank_align: int = 32
-                       ) -> Dict[str, float]:
+                       min_dim: int = 48, rank_align: int = 32,
+                       k_align: int = 32) -> Dict[str, float]:
     """Storage accounting for the quantized checkpoint (App. F style):
     packed linears (scales counted fp16 as the paper stores them) + FP16
-    residue (embeddings, norms, head, sub-min_dim linears)."""
+    residue (embeddings, norms, head, sub-min_dim linears). k_align:
+    pack-time K tile alignment — padded qv rows / s2 columns are real
+    bytes in the artifact and are counted."""
     from repro.configs.shapes import param_specs
     params = param_specs(cfg)
     qpaths = quantizable_paths(params, cfg, min_dim)
     qset = set()
     q_bits = 0
+    k_align = max(32, k_align)
     for path, v in qpaths:
         w = v["w"]
         *lead, d_in, d_out = w.shape
@@ -109,7 +211,9 @@ def packed_model_bytes(cfg: ModelConfig, target_bpw: float = 1.0,
         for s in lead:
             n_mat *= s
         r = rank_for_bpw(d_out, d_in, target_bpw, rank_align)
-        q_bits += n_mat * nanoquant_bits(d_out, d_in, r)
+        pad_k = -(-d_in // k_align) * k_align - d_in
+        q_bits += n_mat * (nanoquant_bits(d_out, d_in, r)
+                           + pad_k * r + 16 * pad_k)
         qset.add(path)
 
     def in_qset(kp):

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as kops
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serve.scheduler import (Request, SlotScheduler, bucket_length,
@@ -220,6 +221,13 @@ class InferenceEngine:
                  scfg: Optional[ServeConfig] = None, max_batch: int = 8,
                  max_len: int = 512, seed: int = 0,
                  admission: str = "continuous"):
+        if kops.current_kernel_policy().use_merged_projections():
+            # serving-side operand grouping: QKV / gate-up projections
+            # additionally carry stacked operands so attention and MLP
+            # issue one fused kernel launch instead of three/two. The
+            # engine's copy only — saved artifacts keep the flat layout.
+            from repro.quant.surgery import merge_projection_groups
+            params = merge_projection_groups(params)
         self.params, self.cfg = params, cfg
         self.scfg = scfg or ServeConfig()
         self.max_batch, self.max_len = max_batch, max_len

@@ -230,16 +230,25 @@ def test_explicit_policy_argument_wins():
                                rtol=1e-4, atol=1e-4)
 
 
-def test_deprecated_mode_shims_warn_and_work():
+def test_deprecated_mode_shims_warn_exactly_once():
+    import warnings as _warnings
     from repro.kernels import ops
     before = ops.current_kernel_policy()
-    with pytest.warns(DeprecationWarning):
-        with ops.kernel_mode("ref"):
-            assert ops.current_kernel_policy().mode == "ref"
-    assert ops.current_kernel_policy() == before
-    with pytest.warns(DeprecationWarning):
-        ops.set_kernel_mode("pallas")
+    ops._SHIM_WARNED.clear()
     try:
+        with pytest.warns(DeprecationWarning):
+            with ops.kernel_mode("ref"):
+                assert ops.current_kernel_policy().mode == "ref"
+        assert ops.current_kernel_policy() == before
+        with pytest.warns(DeprecationWarning):
+            ops.set_kernel_mode("pallas")
         assert ops.current_kernel_policy().mode == "pallas"
+        # second use of either shim is silent (warn exactly once)
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("error", DeprecationWarning)
+            with ops.kernel_mode("ref"):
+                pass
+            ops.set_kernel_mode("ref")
     finally:
         ops.set_kernel_policy(before)
+        ops._SHIM_WARNED.clear()
