@@ -5,9 +5,12 @@ paper §4.4 deployment claim lives in this decode loop).
 Both schedules run on the same ``InferenceEngine`` (same jitted prefill
 / decode steps, greedy sampling), differing only in admission policy —
 so tok/s, per-request latency and wasted-slot-step deltas isolate the
-scheduler. Emits ``experiments/bench/serve_bench.json``.
+scheduler. ``--tp N`` adds a tensor-parallel continuous row on a
+``(data=1, model=N)`` mesh and asserts greedy token identity with the
+unsharded engine (the sharded smoke gate in ``scripts/verify.sh``).
+Emits ``experiments/bench/serve_bench.json``.
 
-    PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+    PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--tp N]
 """
 from __future__ import annotations
 
@@ -43,11 +46,11 @@ def build_trace(rng, n_req, vocab, max_prompt=24, max_new=16):
     return trace
 
 
-def drive(mode, params, cfg, trace):
+def drive(mode, params, cfg, trace, mesh=None):
     """Run one admission policy over the trace; returns a metrics row."""
     eng = InferenceEngine(params, cfg, ServeConfig(greedy=True),
                           max_batch=MAX_BATCH, max_len=MAX_LEN,
-                          admission=mode)
+                          admission=mode, mesh=mesh)
     # warm every prompt-length bucket + the decode step so the timed
     # region measures scheduling, not XLA compiles. Budget 2 (not 1):
     # a budget-1 request finishes at admission off the prefill logits
@@ -77,7 +80,7 @@ def drive(mode, params, cfg, trace):
     lats = np.asarray(sorted(h.latency for h in handles.values()))
     tokens = sum(len(eng.done[uid].output) for uid in handles)
     return {
-        "engine": mode,
+        "engine": mode if mesh is None else f"{mode}-tp{mesh.shape['model']}",
         "requests": len(handles),
         "tokens": tokens,
         "tok_per_s": tokens / dt,
@@ -88,7 +91,7 @@ def drive(mode, params, cfg, trace):
     }, {uid: eng.done[uid].output for uid in handles}
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, tp: int = 1):
     cfg = common.TINY
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(7)
@@ -113,11 +116,39 @@ def run(smoke: bool = False):
         print("[serve_bench] tok/s inverted vs decode-step count — "
               "re-racing (transient load)")
         rows, outs = race()
+
+    if tp > 1:
+        # sharded smoke rows: the same continuous trace unsharded vs on
+        # a (data=1, model=tp) mesh. Greedy outputs must be
+        # token-identical (the scale-out path must not change what the
+        # model says) and the decode-step counts must match exactly
+        # (the mesh is invisible to the scheduler). The identity pair
+        # runs in float32: a bf16 random-init model has near-tie logits
+        # that partitioned-reduction ordering can flip, which would
+        # gate on noise instead of on mesh correctness.
+        import dataclasses
+        from repro.launch.mesh import make_serving_mesh
+        cfg32 = dataclasses.replace(cfg, dtype="float32")
+        params32 = T.init_params(jax.random.PRNGKey(0), cfg32)
+        mesh = make_serving_mesh(tp)
+        row_ref, outs_ref = drive("continuous", params32, cfg32, trace)
+        row_tp, outs_tp = drive("continuous", params32, cfg32, trace,
+                                mesh=mesh)
+        row_ref["engine"] = "continuous-f32"
+        rows += [row_ref, row_tp]
+        tp_identical = all(np.array_equal(outs_ref[u], outs_tp[u])
+                           for u in outs_tp)
+        print(f"sharded (tp={tp}) greedy outputs identical to unsharded: "
+              f"{tp_identical}  ({row_tp['tok_per_s']:.1f} vs "
+              f"{row_ref['tok_per_s']:.1f} tok/s)")
+        assert tp_identical, "sharded engine diverged from unsharded"
+        assert row_tp["decode_steps"] == row_ref["decode_steps"], \
+            "mesh must not change the schedule"
     common.emit("serve_bench", rows)
 
     identical = all(np.array_equal(outs["wave"][u], outs["continuous"][u])
                     for u in outs["wave"])
-    wave, cont = rows
+    wave, cont = rows[0], rows[1]
     print(f"greedy outputs identical per request: {identical}")
     print(f"continuous vs wave: {cont['tok_per_s']:.1f} vs "
           f"{wave['tok_per_s']:.1f} tok/s, {cont['decode_steps']} vs "
@@ -144,8 +175,14 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small trace for the CI gate")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="also run a tensor-parallel continuous row on a "
+                         "(data=1, model=N) mesh and assert token "
+                         "identity (needs N devices; on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N)")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, tp=args.tp)
     return 0
 
 

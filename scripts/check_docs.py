@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Docs gate: every internal link and every ``src/repro/**`` /
+``repro.*`` module referenced from ``docs/*.md`` (and README.md) must
+exist. Runs with no third-party deps (stdlib only) so it can gate
+scripts/verify.sh before anything imports jax.
+
+Checked:
+
+- markdown links ``[text](target)`` whose target is not an http(s) URL
+  or a pure ``#anchor``: the target path (relative to the referencing
+  file, ``#fragment`` stripped) must exist;
+- inline-code path references `` `src/repro/...` `` (and `scripts/`,
+  `benchmarks/`, `tests/`, `examples/` paths): the file or directory
+  must exist;
+- inline-code dotted module references `` `repro.x.y[.attr]` ``: some
+  prefix of at least two segments must resolve to a module file or
+  package under ``src/`` (trailing attribute names are allowed).
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`([^`\n]+)`")
+PATH_PREFIXES = ("src/repro/", "scripts/", "benchmarks/", "tests/",
+                 "examples/", "docs/")
+MODULE_RE = re.compile(r"^~?(repro(?:\.\w+)+)")
+
+
+def module_exists(dotted: str) -> bool:
+    """True if some >=2-segment prefix of `dotted` is a module/package
+    under src/ (so `repro.kernels.ops.KernelPolicy` passes via the
+    `repro.kernels.ops` prefix, while `repro.kernels.nonexistent`
+    fails)."""
+    parts = dotted.split(".")
+    for end in range(len(parts), 1, -1):
+        base = os.path.join(ROOT, "src", *parts[:end])
+        if os.path.isfile(base + ".py") or os.path.isdir(base):
+            return True
+    return False
+
+
+def check_file(path: str) -> list:
+    errors = []
+    text = open(path, encoding="utf-8").read()
+    here = os.path.dirname(path)
+    # strip fenced code blocks: links/backticks inside them are code,
+    # not references (but keep inline code, which we do want to check)
+    text_nofence = re.sub(r"```.*?```", "", text, flags=re.S)
+
+    for m in LINK_RE.finditer(text_nofence):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(here, rel))):
+            errors.append(f"{path}: broken link -> {target}")
+
+    for m in CODE_RE.finditer(text_nofence):
+        ref = m.group(1).strip()
+        if ref.startswith(PATH_PREFIXES):
+            rel = ref.split("#", 1)[0].rstrip("/")
+            # tolerate `path` with trailing qualifiers like `x.py --flag`
+            rel = rel.split(" ", 1)[0]
+            if not os.path.exists(os.path.join(ROOT, rel)):
+                errors.append(f"{path}: missing path reference -> {ref}")
+            continue
+        mm = MODULE_RE.match(ref)
+        if mm and not module_exists(mm.group(1)):
+            errors.append(f"{path}: unknown module reference -> {ref}")
+    return errors
+
+
+def main() -> int:
+    docs = [os.path.join(ROOT, "README.md")]
+    docs_dir = os.path.join(ROOT, "docs")
+    if not os.path.isdir(docs_dir):
+        print("check_docs: no docs/ directory", file=sys.stderr)
+        return 1
+    docs += sorted(os.path.join(docs_dir, f) for f in os.listdir(docs_dir)
+                   if f.endswith(".md"))
+    errors = []
+    for path in docs:
+        errors += check_file(path)
+    for e in errors:
+        print(e, file=sys.stderr)
+    n_files = len(docs)
+    if errors:
+        print(f"check_docs: {len(errors)} error(s) in {n_files} file(s)",
+              file=sys.stderr)
+        return 1
+    print(f"check_docs: OK ({n_files} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,12 +1,17 @@
 #!/usr/bin/env bash
-# One reproducible gate for builders: tier-1 tests + a CPU smoke of the
-# full repro.api lifecycle (quantize -> save -> load -> generate).
+# One reproducible gate for builders: docs link check + tier-1 tests +
+# a CPU smoke of the full repro.api lifecycle (quantize -> save -> load
+# -> generate), including the sharded serving engine on a forced
+# host-device mesh.
 #
 #   scripts/verify.sh            # everything
 #   scripts/verify.sh --fast     # skip the launcher smoke
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== docs gate: links + module references =="
+python scripts/check_docs.py
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
@@ -21,8 +26,9 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m repro.launch.serve --quantized-ckpt "$OUT" \
     --requests 2 --prompt-len 8 --max-new 4 --max-batch 2
   rm -rf "$OUT"
-  echo "== CPU smoke: serving scheduler (wave vs continuous) =="
-  python -m benchmarks.serve_bench --smoke
+  echo "== CPU smoke: serving scheduler (wave vs continuous) + sharded engine =="
+  XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
+    python -m benchmarks.serve_bench --smoke --tp 2
   echo "== CPU smoke: kernel wall-clock (two-call vs fused) =="
   python -m benchmarks.kernel_bench --smoke
 fi

@@ -11,6 +11,7 @@ Lifecycle::
     model = api.NanoQuantModel.load("/ckpt/nq")
     outs  = model.generate(prompts, max_new_tokens=32)
     eng   = model.engine()                   # continuous-batching server
+    eng   = model.engine(mesh=mesh)          # ... tensor-parallel (docs/serving.md)
     handle = eng.submit(api.Request(0, prompt))
     ppl   = model.perplexity()
 
@@ -46,7 +47,8 @@ from repro.kernels.ops import (  # noqa: F401
 from repro.kernels.tuning import load_block_table  # noqa: F401
 from repro.quant.surgery import (  # noqa: F401
     abstract_quantized_params, merge_projection_groups, packed_model_bytes,
-    quantizable_paths)
+    place_cache_on_mesh, place_on_mesh, quantizable_paths)
+from repro.sharding.rules import ShardingPolicy  # noqa: F401
 from repro.serve.batcher import BatchServer  # noqa: F401  (deprecated shim)
 from repro.serve.engine import (  # noqa: F401
     InferenceEngine, RequestHandle, ServeConfig)
@@ -68,9 +70,10 @@ __all__ = [
     "set_kernel_policy", "lowrank_binary_matmul",
     "lowrank_binary_matmul_merged", "lowrank_binary_matmul_expert",
     "load_block_table",
-    # surgery / storage
+    # surgery / storage / sharding
     "abstract_quantized_params", "merge_projection_groups",
     "packed_model_bytes", "quantizable_paths",
+    "place_on_mesh", "place_cache_on_mesh", "ShardingPolicy",
     # serving / persistence
     "InferenceEngine", "RequestHandle", "Request", "ServeConfig",
     "BatchServer", "CheckpointManager",

@@ -131,16 +131,25 @@ class NanoQuantModel:
 
     def engine(self, scfg: Optional[ServeConfig] = None, max_batch: int = 8,
                max_len: int = 512, seed: int = 0,
-               admission: str = "continuous") -> InferenceEngine:
+               admission: str = "continuous", mesh=None,
+               sharding_policy=None) -> InferenceEngine:
         """The serving entry point: a slot-scheduled, continuously
         batched :class:`InferenceEngine` over this model
         (`submit(req) -> handle`, per-token streaming, `step()` /
         `run()`). `admission="wave"` reproduces the legacy
-        drain-then-refill schedule for comparison."""
+        drain-then-refill schedule for comparison.
+
+        `mesh` (e.g. ``launch.mesh.make_serving_mesh(8)``) serves
+        tensor-parallel: packed weights and the KV-cache pool are placed
+        per ``sharding.rules`` and the fused kernels launch through
+        shard_map — greedy outputs stay token-identical to the
+        unsharded engine in f32 (bf16 near-ties can flip under
+        partitioned-reduction reorder; see docs/serving.md)."""
         return InferenceEngine(self.params, self.cfg,
                                scfg or ServeConfig(), max_batch=max_batch,
                                max_len=max_len, seed=seed,
-                               admission=admission)
+                               admission=admission, mesh=mesh,
+                               sharding_policy=sharding_policy)
 
     def server(self, scfg: Optional[ServeConfig] = None, max_batch: int = 8,
                max_len: int = 512, seed: int = 0) -> BatchServer:

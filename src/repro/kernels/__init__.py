@@ -1,3 +1,20 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Packed binary matmul kernels (docs/kernels.md).
+
+- :mod:`repro.kernels.binary_matmul` — the Pallas TPU kernels: the
+  fused single-pass low-rank chain (grouped for merged projections /
+  stacked experts) and the legacy two-call baseline.
+- :mod:`repro.kernels.ref` — pure-jnp oracles (SPMD-partitionable;
+  what CPU runs and the multi-pod dry-run lowers) + sign packing.
+- :mod:`repro.kernels.tuning` — block-size heuristics fitted to
+  divisors of the operand dims, plus swept-table loading.
+- :mod:`repro.kernels.ops` — the policy-dispatched public entry points
+  (:class:`~repro.kernels.ops.KernelPolicy`: mode / fusion / merged
+  projections / block table / tensor-parallel mesh).
+
+Import :mod:`repro.kernels.ops` (or go through ``repro.api``) rather
+than the kernel modules directly. The package itself imports nothing,
+so ``from repro.kernels import ref`` never drags Pallas in for callers
+that only pack (a star-import *does* pull all four submodules via
+``__all__``).
+"""
+__all__ = ["binary_matmul", "ops", "ref", "tuning"]

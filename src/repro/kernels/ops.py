@@ -21,6 +21,18 @@ kernel launch. Block sizes come from a heuristic table keyed on
 (M, K, N, r) — see :mod:`repro.kernels.tuning` — overridable per policy
 via ``block_table=`` (rows from ``tuning.load_block_table``).
 
+Tensor-parallel launch: when the policy carries a ``mesh`` (an axis
+named ``tp_axis``, normally ``"model"``), every entry point wraps its
+kernel in ``shard_map`` so each device runs the *local* kernel on its
+weight shard, mirroring the Megatron pairing of
+``repro.sharding.rules``: column-parallel projections (QKV / gate-up /
+mamba z/x) compute their d_out shard with no collective, row-parallel
+projections (wo / w_down / out_proj) consume a d_in-sharded input and
+finish with ONE psum over the small (..., d_out) partial, and merged /
+stacked-expert group launches stay shard-local on the group axis.
+Shapes that do not divide the axis fall back to the replicated
+single-device launch — exactly the rules' divisibility fallback.
+
 A policy can be threaded explicitly (``lowrank_binary_matmul(...,
 policy=p)``), installed for a scope (``with kernel_policy(p): ...``), or
 set process-wide (:func:`set_kernel_policy`). The scoped form restores
@@ -36,10 +48,11 @@ import contextlib
 import contextvars
 import dataclasses
 import warnings
-from typing import Optional, Sequence, Tuple, Union
+from typing import Any, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels import binary_matmul, ref, tuning
 
@@ -65,6 +78,14 @@ class KernelPolicy:
     fused: bool = True
     merge_projections: bool = True
     block_table: Optional[Tuple[Tuple[int, ...], ...]] = None
+    # tensor-parallel launch: a jax Mesh with a `tp_axis` axis turns
+    # every entry point into a shard_map over that axis (col/row per
+    # repro.sharding.rules); None = single-device launch (default).
+    # NB: sharding.rules places weights on "model" only — a different
+    # tp_axis is for custom placements and forgoes the placement/launch
+    # agreement (the InferenceEngine always pins "model").
+    mesh: Optional[Any] = None
+    tp_axis: str = "model"
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -88,6 +109,12 @@ class KernelPolicy:
         """Whether the model layer should issue grouped QKV / gate-up
         kernel calls (requires the fused pallas path)."""
         return self.use_pallas() and self.fused and self.merge_projections
+
+    def tp_size(self) -> int:
+        """Devices along the tensor-parallel axis (1 = no TP)."""
+        if self.mesh is None or self.tp_axis not in self.mesh.axis_names:
+            return 1
+        return int(self.mesh.shape[self.tp_axis])
 
     def block_sizes(self, M: int, K: int, N: int, r: int,
                     dtype=jnp.float32) -> Tuple[int, int, int]:
@@ -149,14 +176,8 @@ def _match_packed_k(x, qv):
     return jnp.pad(x, pad)
 
 
-def lowrank_binary_matmul(x, qv, qu_t, s1, s2,
-                          policy: Optional[KernelPolicy] = None):
-    """y = s1 ⊙ ((x ⊙ s2) @ V±1) @ U±1ᵀ  — packed operands (paper Eq. 1).
-
-    Dispatches per `policy` (explicit argument wins, else the active
-    contextvar policy)."""
-    p = policy if policy is not None else current_kernel_policy()
-    x = _match_packed_k(x, qv)
+def _local_lowrank(x, qv, qu_t, s1, s2, p: KernelPolicy):
+    """Single-device dispatch (x already matched to the packed K)."""
     if p.use_pallas():
         r = qv.shape[-1]
         M = x.size // x.shape[-1]
@@ -169,6 +190,68 @@ def lowrank_binary_matmul(x, qv, qu_t, s1, s2,
         return binary_matmul.lowrank_binary_matmul_twocall(
             x, qv, qu_t, s1, s2, bm=bm, bn=bn, bk=bk, interpret=interp)
     return ref.lowrank_binary_matmul_ref(x, qv, qu_t, s1, s2)
+
+
+def _shard_launch(p: KernelPolicy, local, in_specs, out_specs, *operands,
+                  reduce_axis=None):
+    """shard_map-wrap a ``_local_*`` dispatcher over the policy mesh:
+    each device runs `local(*operands_shard, local_policy)` on its
+    shard (the local policy is the same policy with the mesh stripped),
+    optionally finishing with one psum over `reduce_axis`."""
+    from repro.sharding.rules import shard_map_compat
+    lp = dataclasses.replace(p, mesh=None)
+
+    def body(*ops_):
+        y = local(*ops_, lp)
+        return jax.lax.psum(y, reduce_axis) if reduce_axis else y
+
+    return shard_map_compat(body, p.mesh, in_specs=in_specs,
+                            out_specs=out_specs)(*operands)
+
+
+def _tp_lowrank(x, qv, qu_t, s1, s2, p: KernelPolicy, role: str):
+    """shard_map launch over the policy mesh (Megatron pairing):
+
+    - col: U/s1 arrive d_out-sharded, each device runs the whole fused
+      kernel on its output shard — no collective, output stays sharded.
+    - row: V/s2 arrive d_in-sharded with a d_in-sharded input, each
+      device computes a full-width partial and ONE psum finishes it.
+
+    Returns None when the shape does not divide the axis (caller falls
+    back to the replicated single-device launch, mirroring the
+    divisibility fallback of ``sharding.rules``)."""
+    ax, n = p.tp_axis, p.tp_size()
+    lead = (None,) * (x.ndim - 1)
+    if role == "col" and qu_t.shape[-1] % n == 0:
+        return _shard_launch(
+            p, _local_lowrank,
+            (P(*lead, None), P(None, None), P(None, ax), P(ax), P(None)),
+            P(*lead, ax), x, qv, qu_t, s1, s2)
+    if role == "row" and qv.shape[-2] % n == 0:
+        return _shard_launch(
+            p, _local_lowrank,
+            (P(*lead, ax), P(ax, None), P(None, None), P(None), P(ax)),
+            P(*lead, None), x, qv, qu_t, s1, s2, reduce_axis=ax)
+    return None
+
+
+def lowrank_binary_matmul(x, qv, qu_t, s1, s2,
+                          policy: Optional[KernelPolicy] = None,
+                          tp: Optional[str] = None):
+    """y = s1 ⊙ ((x ⊙ s2) @ V±1) @ U±1ᵀ  — packed operands (paper Eq. 1).
+
+    Dispatches per `policy` (explicit argument wins, else the active
+    contextvar policy). `tp`: this linear's Megatron role ('col' |
+    'row' | None, see ``sharding.rules.tp_role``) — only consulted when
+    the policy carries a mesh, in which case the kernel is launched
+    through ``shard_map`` on the policy's tensor-parallel axis."""
+    p = policy if policy is not None else current_kernel_policy()
+    x = _match_packed_k(x, qv)
+    if p.tp_size() > 1 and tp in ("col", "row") and qv.ndim == 2:
+        y = _tp_lowrank(x, qv, qu_t, s1, s2, p, tp)
+        if y is not None:
+            return y
+    return _local_lowrank(x, qv, qu_t, s1, s2, p)
 
 
 def lowrank_binary_matmul_merged(x, mp, dims: Sequence[int],
@@ -196,23 +279,44 @@ def lowrank_binary_matmul_merged(x, mp, dims: Sequence[int],
     x2 = x.reshape(1, -1, shape[-1])
     R = mp["qv"].shape[-1]
     rmask = mp.get("rmask")
-    if p.use_pallas() and p.fused and R <= binary_matmul.MAX_FUSED_RANK:
-        M = x2.shape[1]
-        bm, bn, bk = p.block_sizes(M, shape[-1], mp["qu_t"].shape[-1], R,
-                                   x.dtype)
-        yg = binary_matmul.fused_lowrank_matmul_grouped(
-            x2, mp["qv"], mp["qu_t"], mp["s1"], mp["s2"], rmask,
-            x_shared=True, bm=bm, bn=bn, bk=bk,
-            interpret=p.resolve_interpret())
-    else:
-        yg = jax.vmap(
-            lambda qv, qu, s1, s2, rm: ref.lowrank_binary_matmul_fused_ref(
-                x2[0], qv, qu, s1, s2, rm),
-        )(mp["qv"], mp["qu_t"], mp["s1"], mp["s2"],
-          rmask if rmask is not None
-          else jnp.ones((mp["qv"].shape[0], R), jnp.float32))
+    if rmask is None:
+        rmask = jnp.ones((mp["qv"].shape[0], R), jnp.float32)
+    yg = None
+    if p.tp_size() > 1 and mp["qv"].ndim == 3 \
+            and mp["qu_t"].shape[-1] % p.tp_size() == 0:
+        # merged groups are all column-parallel (QKV / gate-up): the
+        # group stacking stays shard-local and each device computes its
+        # padded-Nmax output shard; the per-projection :n slices below
+        # read the global (sharded) result.
+        ax = p.tp_axis
+        yg = _shard_launch(
+            p, _local_merged,
+            (P(None, None, None), P(None, None, None), P(None, None, ax),
+             P(None, ax), P(None, None), P(None, None)),
+            P(None, None, ax),
+            x2, mp["qv"], mp["qu_t"], mp["s1"], mp["s2"], rmask)
+    if yg is None:
+        yg = _local_merged(x2, mp["qv"], mp["qu_t"], mp["s1"], mp["s2"],
+                           rmask, p)
     return [yg[i, :, :n].reshape(*shape[:-1], n)
             for i, n in enumerate(dims)]
+
+
+def _local_merged(x2, qv, qu_t, s1, s2, rmask, p: KernelPolicy):
+    """Single-device grouped launch shared by the plain and shard_map
+    paths (x2: (1, M, K) shared input; operands carry the group axis)."""
+    R = qv.shape[-1]
+    if p.use_pallas() and p.fused and R <= binary_matmul.MAX_FUSED_RANK:
+        M = x2.shape[1]
+        bm, bn, bk = p.block_sizes(M, x2.shape[-1], qu_t.shape[-1], R,
+                                   x2.dtype)
+        return binary_matmul.fused_lowrank_matmul_grouped(
+            x2, qv, qu_t, s1, s2, rmask, x_shared=True,
+            bm=bm, bn=bn, bk=bk, interpret=p.resolve_interpret())
+    return jax.vmap(
+        lambda v, u, a, b, rm: ref.lowrank_binary_matmul_fused_ref(
+            x2[0], v, u, a, b, rm),
+    )(qv, qu_t, s1, s2, rmask)
 
 
 def lowrank_binary_matmul_expert(x, qv, qu_t, s1, s2,
@@ -223,6 +327,19 @@ def lowrank_binary_matmul_expert(x, qv, qu_t, s1, s2,
     of a host-level vmap of the kernel."""
     p = policy if policy is not None else current_kernel_policy()
     x = _match_packed_k(x, qv)
+    if p.tp_size() > 1 and qv.ndim == 3 and x.shape[0] % p.tp_size() == 0:
+        # expert-parallel: the expert grid dim shards over the TP axis,
+        # each device launching the fused grid over its local experts.
+        ax = p.tp_axis
+        return _shard_launch(
+            p, _local_expert,
+            (P(ax, None, None), P(ax, None, None), P(ax, None, None),
+             P(ax, None), P(ax, None)),
+            P(ax, None, None), x, qv, qu_t, s1, s2)
+    return _local_expert(x, qv, qu_t, s1, s2, p)
+
+
+def _local_expert(x, qv, qu_t, s1, s2, p: KernelPolicy):
     r = qv.shape[-1]
     if p.use_pallas():
         interp = p.resolve_interpret()

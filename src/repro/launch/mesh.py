@@ -49,3 +49,11 @@ def make_mesh(data: int, model: int, pod: Optional[int] = None):
     if pod:
         return _mk((pod, data, model), ("pod", "data", "model"))
     return _mk((data, model), ("data", "model"))
+
+
+def make_serving_mesh(model: int):
+    """Tensor-parallel serving mesh for the InferenceEngine: one
+    ``model`` axis of `model` devices (the data axis is size 1 — the
+    engine's slot pool is one replica; scale-out across replicas is
+    DP at the request-router level, not inside one engine)."""
+    return _mk((1, model), ("data", "model"))

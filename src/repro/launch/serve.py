@@ -8,7 +8,8 @@ A ``--quantized-ckpt`` directory written by ``launch/quantize.py`` (a
 model config, so ``--arch`` is only needed for the fresh-quantize demo
 path. ``--engine continuous`` (default) serves through the
 slot-scheduled ``InferenceEngine``; ``--engine wave`` reproduces the
-legacy drain-then-refill schedule for comparison.
+legacy drain-then-refill schedule for comparison. ``--tp N`` serves
+tensor-parallel over a ``(data=1, model=N)`` mesh (see docs/serving.md).
 """
 from __future__ import annotations
 
@@ -40,6 +41,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: serve over a "
+                         "(data=1, model=N) mesh (needs >= N devices; "
+                         "on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
 
     if args.quantized_ckpt and not args.fp:
@@ -61,9 +67,15 @@ def main():
 
     cfg = model.cfg
     scfg = api.ServeConfig(max_new_tokens=args.max_new)
+    mesh = None
+    if args.tp > 1:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(args.tp)
+        print(f"[serve] tensor-parallel over {args.tp} devices "
+              f"(mesh axes {mesh.axis_names}, shape {dict(mesh.shape)})")
     eng = model.engine(scfg, max_batch=args.max_batch,
                        max_len=args.prompt_len + args.max_new,
-                       admission=args.engine)
+                       admission=args.engine, mesh=mesh)
     rng = np.random.default_rng(0)
     shape = ((args.prompt_len, cfg.n_codebooks)
              if cfg.family == "audio" else (args.prompt_len,))

@@ -9,6 +9,8 @@ model a drop-in for serving.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import functools
 import math
 from typing import Optional
@@ -17,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+from repro.sharding.rules import tp_role
 
 # --------------------------------------------------------------------------
 # calibration taps (paper Alg. 1 Phase 1): when a StatCollector is
@@ -109,14 +112,43 @@ def sign_ste(u):
 # every constraint is a no-op) maps logical roles to mesh axes.
 # --------------------------------------------------------------------------
 
+# process-wide default (launch/cells.py installs one before lowering)
+# plus a contextvar override for scoped traces (the tensor-parallel
+# InferenceEngine) — same dual-layer shape as kernels.ops' policy, so
+# concurrent traces from different engines/threads cannot trample each
+# other's constraints.
 _ACT_SHARD = [None]
+_ACT_UNSET = object()
+_ACT_SCOPED: contextvars.ContextVar = contextvars.ContextVar(
+    "nanoquant_act_shard", default=_ACT_UNSET)
+
+
+def _make_act_policy(mesh, dp, tp):
+    return None if mesh is None else {
+        "mesh": mesh, "dp": tuple(dp) if dp else None, "tp": tp}
+
+
+def _current_act_shard():
+    scoped = _ACT_SCOPED.get()
+    return _ACT_SHARD[0] if scoped is _ACT_UNSET else scoped
 
 
 def set_activation_sharding(mesh, dp, tp) -> None:
-    """mesh: jax Mesh (or None to clear); dp: tuple of data axes;
-    tp: model axis name."""
-    _ACT_SHARD[0] = None if mesh is None else {
-        "mesh": mesh, "dp": tuple(dp) if dp else None, "tp": tp}
+    """Install process-wide. mesh: jax Mesh (or None to clear); dp:
+    tuple of data axes; tp: model axis name."""
+    _ACT_SHARD[0] = _make_act_policy(mesh, dp, tp)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, dp, tp):
+    """Scoped override (this thread/task only; restores on exit) — for
+    tracing under a specific mesh, e.g. the sharded InferenceEngine's
+    jitted steps. ``mesh=None`` scopes the constraints *off*."""
+    token = _ACT_SCOPED.set(_make_act_policy(mesh, dp, tp))
+    try:
+        yield
+    finally:
+        _ACT_SCOPED.reset(token)
 
 
 def _axis_len(mesh, axis) -> int:
@@ -134,7 +166,7 @@ def constrain(x, *roles):
     """with_sharding_constraint by per-dim logical role:
     None (replicated) | 'dp' (batch) | 'tp' (model). Divisibility-checked;
     non-divisible dims fall back to replicated."""
-    pol = _ACT_SHARD[0]
+    pol = _current_act_shard()
     if pol is None:
         return x
     mesh = pol["mesh"]
@@ -187,7 +219,8 @@ def dense(p: dict, x: jnp.ndarray, name: Optional[str] = None) -> jnp.ndarray:
     """FP / STE-latent / packed-binary linear. x: (..., d_in) -> (..., d_out)."""
     _tap_pre(name, x)
     if "qu_t" in p:      # packed low-rank binary path (paper Eq. 1)
-        y = kops.lowrank_binary_matmul(x, p["qv"], p["qu_t"], p["s1"], p["s2"])
+        y = kops.lowrank_binary_matmul(x, p["qv"], p["qu_t"], p["s1"],
+                                       p["s2"], tp=tp_role(name))
     elif "lu" in p:      # continuous latents with STE (refinement phase)
         y = _ste_matmul(p, x)
     else:
@@ -664,7 +697,7 @@ def _route(p, cfg, xf):
 
 def _dp_groups(T: int) -> int:
     """Dispatch group count == data-parallel degree (1 when no policy)."""
-    pol = _ACT_SHARD[0]
+    pol = _current_act_shard()
     if pol is None or pol.get("dp") is None:
         return 1
     g = _axis_len(pol["mesh"], pol["dp"])

@@ -1,2 +1,15 @@
+"""Quantized-model surgery: abstract (ShapeDtypeStruct) packed trees
+for dry-runs and storage accounting, serving-side merged projection
+groups, and mesh placement of packed params / KV caches — see
+:mod:`repro.quant.surgery` and docs/architecture.md (the concrete
+weight transformation itself lives in ``core.pipeline``).
+"""
 from repro.quant.surgery import (  # noqa: F401
-    abstract_quantized_params, packed_model_bytes, quantizable_paths)
+    abstract_quantized_params, merge_projection_groups, packed_model_bytes,
+    place_cache_on_mesh, place_on_mesh, quantizable_paths)
+
+__all__ = [
+    "abstract_quantized_params", "merge_projection_groups",
+    "packed_model_bytes", "place_on_mesh", "place_cache_on_mesh",
+    "quantizable_paths",
+]

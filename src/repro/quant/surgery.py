@@ -190,6 +190,36 @@ def merge_projection_groups(params):
     return walk(params) if isinstance(params, dict) else params
 
 
+def place_on_mesh(params, cfg: ModelConfig, mesh, policy=None):
+    """Place a (quantized or FP) parameter tree onto a serving mesh per
+    ``sharding.rules``: packed U/s1 d_out-sharded on ``model`` for
+    column-parallel projections, packed V/s2 d_in-sharded for
+    row-parallel ones, everything non-divisible replicated. The default
+    policy is :data:`repro.sharding.rules.SERVE` (tensor-parallel only,
+    V replicated) — the layout the shard_map kernel launch in
+    ``kernels.ops`` consumes shard-for-shard. Returns the placed tree;
+    call on the engine's own params copy at init."""
+    from repro.sharding import rules
+    pspecs = rules.param_pspecs(cfg, params, mesh,
+                                policy if policy is not None else rules.SERVE)
+    shardings = rules.to_shardings(mesh, pspecs)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), params,
+                        shardings)
+
+
+def place_cache_on_mesh(cache, cfg: ModelConfig, mesh, policy=None):
+    """Place a pooled KV / SSM cache per ``sharding.rules.cache_pspecs``
+    (kv-heads — or the sequence dim — on ``model``; slot/batch dim on
+    the data axes when divisible)."""
+    from repro.sharding import rules
+    cache = jax.tree.map(jnp.asarray, cache)   # e.g. the hybrid ring's
+    # python-int `window` leaf, which cache_pspecs sizes by .shape
+    cspecs = rules.cache_pspecs(cfg, cache, mesh,
+                                policy if policy is not None else rules.SERVE)
+    shardings = rules.to_shardings(mesh, cspecs)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), cache, shardings)
+
+
 def packed_model_bytes(cfg: ModelConfig, target_bpw: float = 1.0,
                        min_dim: int = 48, rank_align: int = 32,
                        k_align: int = 32) -> Dict[str, float]:

@@ -21,6 +21,7 @@ finished slots are masked on device so they are no-ops until refilled.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -207,6 +208,18 @@ class InferenceEngine:
     `BatchServer` schedule for comparison; greedy outputs are identical
     per request under either policy.
 
+    `mesh` (optional) turns the engine tensor-parallel: packed U/s1 and
+    V/s2 are placed per `sharding.rules` (Megatron col/row pairing —
+    see `quant.surgery.place_on_mesh`), the pooled KV cache shards its
+    kv-head (or sequence) dim over the `model` axis, and the jitted
+    prefill / decode steps trace under a mesh-carrying `KernelPolicy`
+    so every packed linear launches through the shard_map-wrapped fused
+    kernel (`kernels.ops`). Greedy outputs are token-identical to the
+    unsharded engine in f32 (bf16 near-tie argmaxes can flip under
+    partitioned-reduction reorder — see ROADMAP Open items). With
+    `mesh=None` (default) nothing changes — single-device dispatch, no
+    placement, no collectives.
+
     Caveat (MoE families): capacity-bounded expert dispatch couples
     batch rows — any slot's tokens (including an inactive slot's masked
     pad row) consume per-expert capacity and can, under tight
@@ -220,7 +233,8 @@ class InferenceEngine:
     def __init__(self, params, cfg: ModelConfig,
                  scfg: Optional[ServeConfig] = None, max_batch: int = 8,
                  max_len: int = 512, seed: int = 0,
-                 admission: str = "continuous"):
+                 admission: str = "continuous", mesh=None,
+                 sharding_policy=None):
         if kops.current_kernel_policy().use_merged_projections():
             # serving-side operand grouping: QKV / gate-up projections
             # additionally carry stacked operands so attention and MLP
@@ -228,12 +242,29 @@ class InferenceEngine:
             # engine's copy only — saved artifacts keep the flat layout.
             from repro.quant.surgery import merge_projection_groups
             params = merge_projection_groups(params)
+        self.mesh = mesh
+        self._shard_policy = None
+        self._kpolicy = None
+        if mesh is not None:
+            from repro.quant.surgery import place_on_mesh
+            from repro.sharding import rules
+            self._shard_policy = (sharding_policy if sharding_policy
+                                  is not None else rules.SERVE)
+            params = place_on_mesh(params, cfg, mesh, self._shard_policy)
+            # tp_axis pinned to "model": sharding.rules only ever
+            # places on that axis, and launch must agree with placement
+            self._kpolicy = dataclasses.replace(
+                kops.current_kernel_policy(), mesh=mesh, tp_axis="model")
         self.params, self.cfg = params, cfg
         self.scfg = scfg or ServeConfig()
         self.max_batch, self.max_len = max_batch, max_len
         self.key = jax.random.PRNGKey(seed)
         self.scheduler = SlotScheduler(max_batch, admission)
         self.cache = T.init_cache(cfg, max_batch, max_len)
+        if mesh is not None:
+            from repro.quant.surgery import place_cache_on_mesh
+            self.cache = place_cache_on_mesh(self.cache, cfg, mesh,
+                                             self._shard_policy)
         self.pos = np.zeros((max_batch,), np.int32)
         self.active = np.zeros((max_batch,), bool)
         tok_shape = ((max_batch, 1, cfg.n_codebooks)
@@ -256,7 +287,8 @@ class InferenceEngine:
 
         def prefill_fn(params, tokens, last_idx):
             self.stats["prefill_traces"] += 1
-            return slot_prefill(params, tokens, last_idx)
+            with self._trace_scope():
+                return slot_prefill(params, tokens, last_idx)
         self._prefill = jax.jit(prefill_fn)
         # donate the pooled cache: insert/decode consume the old pool and
         # return the next one, so XLA can update it in place instead of
@@ -266,15 +298,35 @@ class InferenceEngine:
 
         def decode_fn(params, tokens, cache, pos, active, key):
             self.stats["decode_traces"] += 1
-            logits, new_cache = T.decode_step(params, cfg, tokens, cache,
-                                              pos)
-            new_cache = cache_select_active(new_cache, cache, active)
-            tok = sample_token(logits, key, self.scfg)
+            with self._trace_scope():
+                logits, new_cache = T.decode_step(params, cfg, tokens,
+                                                  cache, pos)
+                new_cache = cache_select_active(new_cache, cache, active)
+                tok = sample_token(logits, key, self.scfg)
             if cfg.family == "audio":
                 tok = tok[:, None, :]
             keep = active.reshape((-1,) + (1,) * (tok.ndim - 1))
             return jnp.where(keep, tok, 0), new_cache
         self._decode = jax.jit(decode_fn, donate_argnums=(2,))
+
+    @contextlib.contextmanager
+    def _trace_scope(self):
+        """Tracing context for the jitted steps. With a mesh, scopes in
+        this engine's mesh-carrying kernel policy (shard_map TP kernel
+        launches) and activation-sharding constraints — both
+        contextvar-based, so concurrent traces from other engines or
+        training cells are untouched, and dispatch is baked into the
+        traced computation (execution needs no ambient globals)."""
+        if self.mesh is None:
+            yield
+            return
+        from repro.models import layers as L
+        from repro.sharding import rules
+        with L.activation_sharding(
+                self.mesh, rules.data_axes(self.mesh),
+                "model" if "model" in self.mesh.axis_names else None):
+            with kops.kernel_policy(self._kpolicy):
+                yield
 
     # ---- submission -------------------------------------------------------
 

@@ -64,7 +64,11 @@ def _batch_axis(path) -> int:
 def cache_insert_slot(pool, single, slot):
     """Insert `single` (a batch=1 cache pytree) into slot `slot` of the
     pooled cache. Leaves below rank 2 (e.g. the hybrid window size) are
-    batch-free metadata and kept from the pool."""
+    batch-free metadata and kept from the pool. Pure jnp scatters, so a
+    mesh-placed pool (tensor-parallel engine: kv-heads / sequence dim
+    sharded on `model`, see quant.surgery.place_cache_on_mesh) is
+    partitioned by GSPMD — the slot stays a batch-dim index and never
+    crosses the sharded dims."""
     def ins(path, b, s):
         if jnp.ndim(b) < 2:
             return b
@@ -78,7 +82,10 @@ def cache_insert_slot(pool, single, slot):
 def cache_select_active(new, old, active):
     """Per-slot select: active slots take the freshly written cache,
     finished/empty slots keep their old entries bit-identical — a
-    decode step is a no-op for them until the slot is refilled."""
+    decode step is a no-op for them until the slot is refilled. The
+    `active` mask broadcasts along the batch axis only, so the select
+    is elementwise-local under any cache sharding (no resharding in the
+    tensor-parallel engine's decode step)."""
     def sel(path, n, o):
         if jnp.ndim(n) < 2:
             return n

@@ -15,9 +15,16 @@ single-pod or ``("pod", "data", "model")`` multi-pod. Policy:
   ``layers.init_mamba2``): the wide z/x streams are TP-sharded on
   ``model`` (columns == SSD heads, so the chunked SSD shards by head);
   B/C/dt are small and replicated; out_proj is row-parallel.
-- **Quantized linears** (packed low-rank binary): U is d_out-sharded on
-  ``model`` with its s1 scale, V replicated in the baseline (r is small);
-  see §Perf for the r-sharded variant.
+- **Quantized linears** (packed low-rank binary) follow the same
+  Megatron pairing as their FP counterparts: column-parallel projections
+  (wq/wk/wv/w_gate/w_up, mamba wz/wx) shard U with its s1 scale on
+  d_out over ``model`` (V/s2 replicated — each device runs the whole
+  fused kernel on its output shard, no collective); row-parallel
+  projections (wo/w_down/out_proj) shard V on packed d_in with its s2
+  scale (U/s1 replicated — partial outputs finish with ONE psum).
+  ``qv_sharded`` additionally r-shards V on column-parallel linears
+  (residency optimization for training/FSDP; the serving launch keeps V
+  replicated, see :data:`SERVE`).
 - **KV caches**: kv-head dim on ``model`` when divisible, else the
   sequence dim (GSPMD handles softmax/contraction over a sharded
   sequence with small all-reduces); batch on data axes.
@@ -66,6 +73,47 @@ class ShardingPolicy:
 
 DEFAULT = ShardingPolicy()
 
+# Serving placement (InferenceEngine): tensor-parallel only. No FSDP —
+# there is no optimizer state to amortize and decode activations are
+# tiny — and V stays replicated so every device can run the whole fused
+# kernel on its local shard (the paper-faithful baseline layout).
+SERVE = ShardingPolicy(fsdp=False, qv_sharded=False)
+
+# Megatron pairing for quantized linears, keyed on the parent linear
+# name (the packed leaves live one level below, e.g. layers/attn/wq/qu_t).
+# Column-parallel: output dim sharded, input replicated. Row-parallel:
+# input dim sharded, output reduced with one psum. Shared with
+# kernels.ops, which mirrors this pairing in its shard_map launch.
+COL_PARALLEL = ("wq", "wk", "wv", "w_gate", "w_up", "wz", "wx",
+                "wqkv", "wgu")
+ROW_PARALLEL = ("wo", "w_down", "out_proj")
+
+
+def tp_role(name) -> Optional[str]:
+    """'col' | 'row' | None for a linear's name. Accepts bare parent
+    keys ('wo'), rule paths ('layers/attn/wo') and tap names
+    ('attn.wo')."""
+    if not name:
+        return None
+    leaf = str(name).replace(".", "/").rsplit("/", 1)[-1]
+    if leaf in COL_PARALLEL:
+        return "col"
+    if leaf in ROW_PARALLEL:
+        return "row"
+    return None
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """shard_map across jax releases (moved out of jax.experimental;
+    check_rep renamed check_vma). Replication checks are disabled: the
+    kernel launches below psum explicitly where reduction is needed."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
 
 def _fit(dim: int, axis, mesh: Mesh):
     """axis if dim divides evenly over it, else None."""
@@ -112,19 +160,44 @@ class _Ruler:
         # Leading dims are scan stacks (layers / vlm groups) and stay
         # unsharded EXCEPT the expert dim of MoE leaves, which is
         # expert-parallel on the model axis (per-expert factors whole).
-        if name in ("qu_t", "qv", "s1", "s2"):
+        if name in ("qu_t", "qv", "s1", "s2", "rmask"):
             base = 2 if name in ("qu_t", "qv") else 1
             lead = len(shape) - base
             spec = [None] * len(shape)
-            expert = "/moe/" in path or path.startswith("moe/")
+            # expert-parallel applies to true expert stacks only; the
+            # dense *shared*-expert FFN under /moe/ is a plain linear
+            # and takes the Megatron col/row pairing below (matching
+            # the role layers.dense launches it with).
+            expert = ("/moe/" in path or path.startswith("moe/")) \
+                and "/shared/" not in path
+            parent = path.split("/")[-2] if "/" in path else ""
+            role = tp_role(parent)
             if expert and lead >= 1:
                 spec[lead - 1] = _fit(shape[lead - 1], tp, mesh)
-            elif name == "qu_t":          # (..., r//32, d_out)
-                spec[-1] = _fit(shape[-1], tp, mesh)
-            elif name == "qv" and self.policy.qv_sharded:
-                spec[-1] = _fit(shape[-1], tp, mesh)   # (..., d_in//32, r)
-            elif name == "s1":
-                spec[-1] = _fit(shape[-1], tp, mesh)
+            elif role == "row":
+                # row-parallel: V/s2 shard on (packed) d_in; U/s1 stay
+                # replicated and the launch finishes with one psum. The
+                # s2 check mirrors qv's packed dim so the pair never
+                # shards inconsistently (kp % 32N == 0 <=> kp//32 % N).
+                if name == "qv":                  # (..., d_in//32, r)
+                    spec[-2] = _fit(shape[-2], tp, mesh)
+                elif name == "s2":                # (..., d_in)
+                    spec[-1] = tp if tp is not None and \
+                        shape[-1] % (32 * _axis_size(mesh, tp)) == 0 \
+                        else None
+            elif role == "col":
+                # column-parallel: U/s1 shard on d_out, shard-local
+                # launch. Role-less packed linears (MLA w_dkv/w_kr,
+                # mamba wB/wC/wdt) stay fully replicated — their FP
+                # counterparts are not TP-sharded either, and the
+                # kernel launch in ops dispatches them single-device,
+                # so placement and launch always agree.
+                if name == "qu_t":            # (..., r//32, d_out)
+                    spec[-1] = _fit(shape[-1], tp, mesh)
+                elif name == "qv" and self.policy.qv_sharded:
+                    spec[-1] = _fit(shape[-1], tp, mesh)  # (.., K//32, r)
+                elif name == "s1":
+                    spec[-1] = _fit(shape[-1], tp, mesh)
             return P(*spec)
         # STE latents (block reconstruction runs single-host; replicate)
         if name in ("lu", "lv"):

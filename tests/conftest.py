@@ -1,5 +1,7 @@
 import os
+import subprocess
 import sys
+import textwrap
 
 # tests run single-device (the dry-run alone forces 512 placeholder
 # devices; see launch/dryrun.py)
@@ -9,6 +11,25 @@ import jax
 import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_multidevice(code: str, devices: int = 8, timeout: int = 1500) -> str:
+    """Run `code` in a subprocess with `devices` forced host devices
+    (the launch/dryrun.py trick) — the shared harness for multi-device
+    SPMD tests, so the main test process stays single-device. Raises
+    AssertionError with captured output on nonzero exit."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    if r.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{r.stdout}\n{r.stderr}")
+    return r.stdout
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,158 @@
+"""Sharding rules for quantized (packed low-rank binary) leaves:
+Megatron col/row pairing, divisibility fallback (uneven mesh ->
+replicated spec, never raises), and agreement between the rules and the
+shapes ``quant.surgery`` actually produces.
+
+These tests run single-device: ``rules`` only reads ``mesh.axis_names``
+and ``mesh.shape``, so a duck-typed stand-in mesh lets us exercise any
+axis size without forcing host devices (cf. tests/test_sharding_spmd.py
+for the executed multi-device paths)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.quant.surgery import abstract_quantized_params
+from repro.sharding import rules
+
+
+class FakeMesh:
+    """Duck-typed mesh: the rule tables only need axis_names + shape."""
+
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+
+
+def _packed_linears(tree, path=()):
+    """[(path, dict)] for every packed linear in a (SDS or spec) tree."""
+    out = []
+    if isinstance(tree, dict):
+        if "qu_t" in tree:
+            out.append((path, tree))
+        else:
+            for k, v in tree.items():
+                out += _packed_linears(v, path + (k,))
+    return out
+
+
+@pytest.fixture(scope="module")
+def qtree():
+    cfg = configs.get_smoke("llama3.2-1b")
+    return cfg, abstract_quantized_params(cfg)
+
+
+def test_tp_role_mapping():
+    assert rules.tp_role("wq") == "col"
+    assert rules.tp_role("attn.wo") == "row"
+    assert rules.tp_role("layers/ffn/w_down") == "row"
+    assert rules.tp_role("wqkv") == "col"
+    assert rules.tp_role("mixer.wx") == "col"
+    assert rules.tp_role("lm_head") is None
+    assert rules.tp_role(None) is None
+
+
+def test_uneven_mesh_falls_back_to_replicated(qtree):
+    """A model axis that divides nothing must yield fully replicated
+    specs for every packed leaf — and must never raise."""
+    cfg, params = qtree
+    mesh = FakeMesh(data=1, model=7)   # 7 divides no dim in the smoke cfg
+    pspecs = rules.param_pspecs(cfg, params, mesh, rules.SERVE)
+    for path, spec in _packed_linears(pspecs):
+        for name in ("qu_t", "qv", "s1", "s2"):
+            assert spec[name] == P(*(None,) * len(spec[name])), \
+                (path, name, spec[name])
+
+
+def test_specs_never_shard_uneven_dims(qtree):
+    """Every sharded dim in every emitted spec divides the axis size
+    (the .lower().compile() determinism contract in the module doc)."""
+    cfg, params = qtree
+    for model in (2, 3, 4, 5, 8):
+        mesh = FakeMesh(data=2, model=model)
+        pspecs = rules.param_pspecs(cfg, params, mesh, rules.DEFAULT)
+
+        def check(kp, leaf):
+            spec = pspecs
+            for p in kp:
+                spec = spec[p.key]
+            assert len(spec) <= len(leaf.shape), (kp, spec)
+            for dim, ax in zip(leaf.shape, tuple(spec)):
+                if ax is not None:
+                    size = rules._axis_size(mesh, ax)
+                    assert dim % size == 0, (kp, spec, dim, ax)
+
+        jax.tree_util.tree_map_with_path(check, params)
+
+
+def test_megatron_pairing_matches_surgery_shapes(qtree):
+    """Col linears shard U/s1 on d_out; row linears shard V/s2 on
+    (packed) d_in with U/s1 replicated — on the exact shapes surgery
+    emits, with the paired leaves never sharded inconsistently."""
+    cfg, params = qtree
+    mesh = FakeMesh(data=1, model=2)
+    pspecs = rules.param_pspecs(cfg, params, mesh, rules.SERVE)
+    shapes = dict(_packed_linears(params))
+    checked = {"col": 0, "row": 0}
+    for path, spec in _packed_linears(pspecs):
+        role = rules.tp_role(path[-1])
+        if role is None:
+            continue
+        sds = shapes[path]
+        if role == "col":
+            if sds["qu_t"].shape[-1] % 2 == 0:
+                assert spec["qu_t"][-1] == "model", (path, spec["qu_t"])
+                assert spec["s1"][-1] == "model", (path, spec["s1"])
+            # SERVE keeps V replicated so each device runs the whole
+            # fused kernel on its output shard
+            assert spec["qv"] == P(*(None,) * len(sds["qv"].shape))
+            assert spec["s2"] == P(*(None,) * len(sds["s2"].shape))
+        else:
+            if sds["qv"].shape[-2] % 2 == 0:
+                assert spec["qv"][-2] == "model", (path, spec["qv"])
+                assert spec["s2"][-1] == "model", (path, spec["s2"])
+            assert spec["qu_t"] == P(*(None,) * len(sds["qu_t"].shape))
+            assert spec["s1"] == P(*(None,) * len(sds["s1"].shape))
+        # the pair (U, s1) / (V, s2) shards together or not at all
+        assert (spec["qu_t"][-1] is None) == (spec["s1"][-1] is None), path
+        assert (spec["qv"][-2] is None) == (spec["s2"][-1] is None) \
+            or role == "col", path
+        checked[role] += 1
+    assert checked["col"] and checked["row"], checked
+
+
+def test_roleless_packed_linears_stay_replicated():
+    """Packed linears whose parent has no Megatron role (MLA w_dkv /
+    w_kr, mamba wB/wC/wdt) must be fully replicated: layers.dense
+    launches them with tp=None (single-device), so sharding them would
+    make placement and launch disagree."""
+    seen = 0
+    for arch in ("deepseek-v2-lite-16b", "mamba2-370m"):
+        # full-scale configs: the smoke variants shrink w_dkv / wB / wC
+        # below min_dim, filtering exactly the linears under test (the
+        # tree is abstract ShapeDtypeStructs — no weights materialize)
+        cfg = configs.get_config(arch)
+        params = abstract_quantized_params(cfg)
+        mesh = FakeMesh(data=1, model=2)
+        pspecs = rules.param_pspecs(cfg, params, mesh, rules.SERVE)
+        shapes = dict(_packed_linears(params))
+        for path, spec in _packed_linears(pspecs):
+            if rules.tp_role(path[-1]) is not None:
+                continue
+            seen += 1
+            for name in ("qu_t", "qv", "s1", "s2"):
+                rank = len(shapes[path][name].shape)
+                assert spec[name] == P(*(None,) * rank), (path, name)
+    assert seen, "expected at least one role-less packed linear"
+
+
+def test_spec_rank_matches_leaf_rank(qtree):
+    """param_pspecs mirrors the tree: every packed leaf gets a spec of
+    exactly its own rank (shard_map in_specs are built from these)."""
+    cfg, params = qtree
+    mesh = FakeMesh(data=2, model=2)
+    pspecs = rules.param_pspecs(cfg, params, mesh, rules.DEFAULT)
+    for path, spec in _packed_linears(pspecs):
+        sds = dict(_packed_linears(params))[path]
+        for name in ("qu_t", "qv", "s1", "s2"):
+            assert len(spec[name]) == len(sds[name].shape), (path, name)

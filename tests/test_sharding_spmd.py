@@ -1,25 +1,9 @@
 """Multi-device SPMD tests — run in a subprocess with 8 forced host
-devices (the main test process stays single-device)."""
-import os
-import subprocess
-import sys
-import textwrap
-
+devices via the shared conftest harness (the main test process stays
+single-device)."""
 import pytest
 
-_ROOT = os.path.join(os.path.dirname(__file__), "..")
-
-
-def _run(code: str, timeout=1500):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, timeout=timeout,
-                       env=env)
-    if r.returncode != 0:
-        raise AssertionError(f"subprocess failed:\n{r.stdout}\n{r.stderr}")
-    return r.stdout
+from conftest import run_multidevice as _run
 
 
 @pytest.mark.slow
