@@ -1,6 +1,7 @@
 """Serving-scheduler benchmark: wave vs continuous batching on a
 mixed-length, Poisson-ish request trace (ROADMAP serving north star;
-paper §4.4 deployment claim lives in this decode loop).
+paper §4.4 deployment claim lives in this decode loop), plus the paged
+KV-cache memory-pressure race.
 
 Both schedules run on the same ``InferenceEngine`` (same jitted prefill
 / decode steps, greedy sampling), differing only in admission policy —
@@ -10,11 +11,21 @@ scheduler. ``--tp N`` adds a tensor-parallel continuous row on a
 unsharded engine (the sharded smoke gate in ``scripts/verify.sh``).
 Emits ``experiments/bench/serve_bench.json``.
 
+The paged section replays a mixed-length *memory-pressure* trace (a few
+long prompts + many short ones) on three engines: the rectangular
+oracle at full ``max_batch``, the paged pool overcommitted to HALF the
+rectangle's KV bytes, and a rectangle shrunk to the same byte budget as
+the paged pool. It asserts greedy token identity paged-vs-rectangular,
+peak KV-pool bytes <= 50%, and strictly higher admitted concurrency
+under the equal-byte budget; emits
+``experiments/bench/BENCH_serve_paged.json``.
+
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--tp N]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
 
@@ -28,6 +39,9 @@ from repro.serve.scheduler import bucket_length
 
 MAX_BATCH = 4
 MAX_LEN = 48
+PAGED_BATCH = 8          # slots in the memory-pressure race
+PAGE_SIZE = 8            # small pages so the tiny trace crosses many
+#                          page boundaries (production default is 64)
 
 
 def build_trace(rng, n_req, vocab, max_prompt=24, max_new=16):
@@ -46,10 +60,33 @@ def build_trace(rng, n_req, vocab, max_prompt=24, max_new=16):
     return trace
 
 
-def drive(mode, params, cfg, trace, mesh=None):
+def build_pressure_trace(rng, n_long, n_short, vocab):
+    """Memory-pressure mix: a few near-max_len prompts plus a burst of
+    short ones, all arriving quickly — so total *sequence capacity*
+    (KV rows), not arrival sparsity, limits concurrency. Returns
+    [(arrival_step, Request)]."""
+    trace, step, uid = [], 0, 0
+    for _ in range(n_long):
+        n = int(rng.integers(MAX_LEN * 3 // 5, MAX_LEN * 4 // 5))
+        trace.append((step, Request(uid, rng.integers(
+            0, vocab, size=(n,)).astype(np.int32),
+            max_new_tokens=int(rng.integers(4, 9)))))
+        uid += 1
+    for _ in range(n_short):
+        step += int(rng.poisson(0.4))
+        n = int(rng.integers(3, 9))
+        trace.append((step, Request(uid, rng.integers(
+            0, vocab, size=(n,)).astype(np.int32),
+            max_new_tokens=int(rng.integers(6, 14)))))
+        uid += 1
+    return sorted(trace, key=lambda t: t[0])
+
+
+def drive(mode, params, cfg, trace, mesh=None, scfg=None,
+          max_batch=MAX_BATCH):
     """Run one admission policy over the trace; returns a metrics row."""
-    eng = InferenceEngine(params, cfg, ServeConfig(greedy=True),
-                          max_batch=MAX_BATCH, max_len=MAX_LEN,
+    eng = InferenceEngine(params, cfg, scfg or ServeConfig(greedy=True),
+                          max_batch=max_batch, max_len=MAX_LEN,
                           admission=mode, mesh=mesh)
     # warm every prompt-length bucket + the decode step so the timed
     # region measures scheduling, not XLA compiles. Budget 2 (not 1):
@@ -88,7 +125,64 @@ def drive(mode, params, cfg, trace, mesh=None):
         "p95_latency_s": float(np.percentile(lats, 95)),
         "decode_steps": eng.stats["decode_steps"],
         "wasted_slot_steps": eng.stats["wasted_slot_steps"],
+        "kv_bytes": eng.kv_cache_bytes(),
+        "peak_active": eng.stats["peak_active"],
+        "preemptions": eng.stats["preemptions"],
+        "page_waits": eng.stats["page_waits"],
     }, {uid: eng.done[uid].output for uid in handles}
+
+
+def run_paged(smoke: bool = False):
+    """Paged-vs-rectangular memory-pressure race (acceptance: token
+    identity, <= 50% peak KV-pool bytes, strictly higher admitted
+    concurrency at the same KV-byte budget)."""
+    # f32 so greedy argmax cannot flip on reduction-shape noise between
+    # the gathered-pages read and the rectangle read (repo-wide identity
+    # gates all run f32 for the same reason).
+    cfg = dataclasses.replace(common.TINY, dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(11)
+    n_long, n_short = (2, 8) if smoke else (4, 24)
+    trace = build_pressure_trace(rng, n_long, n_short, cfg.vocab_size)
+
+    full_pages = PAGED_BATCH * (MAX_LEN // PAGE_SIZE)
+    paged_cfgs = {
+        "rect-full": (ServeConfig(greedy=True, paged=False), PAGED_BATCH),
+        # half the rectangle's KV bytes, same slot count: overcommitted
+        "paged-half": (ServeConfig(greedy=True, page_size=PAGE_SIZE,
+                                   kv_pool_pages=full_pages // 2),
+                       PAGED_BATCH),
+        # the rectangle shrunk to the paged pool's byte budget
+        "rect-budget": (ServeConfig(greedy=True, paged=False),
+                        (full_pages // 2) * PAGE_SIZE // MAX_LEN),
+    }
+    rows, outs = [], {}
+    for name, (scfg, mb) in paged_cfgs.items():
+        row, outs[name] = drive("continuous", params, cfg, trace,
+                                scfg=scfg, max_batch=mb)
+        row["engine"] = name
+        row["max_batch"] = mb
+        rows.append(row)
+    # the checked-in BENCH_serve_paged.json is the full-run CPU baseline;
+    # the CI smoke gate must not overwrite it with its smaller trace
+    common.emit("BENCH_serve_paged_smoke" if smoke else "BENCH_serve_paged",
+                rows)
+
+    by = {r["engine"]: r for r in rows}
+    identical = all(np.array_equal(outs["rect-full"][u], outs["paged-half"][u])
+                    for u in outs["rect-full"])
+    ratio = by["paged-half"]["kv_bytes"] / by["rect-full"]["kv_bytes"]
+    print(f"paged vs rectangular greedy outputs identical: {identical}")
+    print(f"paged pool bytes {by['paged-half']['kv_bytes']} vs rectangular "
+          f"{by['rect-full']['kv_bytes']} ({ratio:.0%}); admitted "
+          f"concurrency {by['paged-half']['peak_active']} vs "
+          f"{by['rect-budget']['peak_active']} at the same byte budget "
+          f"({by['paged-half']['preemptions']} preemptions, "
+          f"{by['paged-half']['page_waits']} page waits)")
+    assert identical, "paged engine diverged from the rectangular oracle"
+    assert ratio <= 0.5, f"paged pool bytes ratio {ratio:.2f} > 0.5"
+    assert by["paged-half"]["peak_active"] > by["rect-budget"]["peak_active"], \
+        "overcommit must admit strictly more concurrency per KV byte"
 
 
 def run(smoke: bool = False, tp: int = 1):
@@ -134,14 +228,25 @@ def run(smoke: bool = False, tp: int = 1):
         row_ref, outs_ref = drive("continuous", params32, cfg32, trace)
         row_tp, outs_tp = drive("continuous", params32, cfg32, trace,
                                 mesh=mesh)
+        # rectangular oracle row: the default engines above run the
+        # paged pool, so this also gates paged == rectangular both
+        # unsharded and (by transitivity) under --tp
+        row_rect, outs_rect = drive(
+            "continuous", params32, cfg32, trace,
+            scfg=ServeConfig(greedy=True, paged=False))
         row_ref["engine"] = "continuous-f32"
-        rows += [row_ref, row_tp]
+        row_rect["engine"] = "continuous-f32-rect"
+        rows += [row_ref, row_tp, row_rect]
         tp_identical = all(np.array_equal(outs_ref[u], outs_tp[u])
                            for u in outs_tp)
+        rect_identical = all(np.array_equal(outs_ref[u], outs_rect[u])
+                             for u in outs_rect)
         print(f"sharded (tp={tp}) greedy outputs identical to unsharded: "
               f"{tp_identical}  ({row_tp['tok_per_s']:.1f} vs "
-              f"{row_ref['tok_per_s']:.1f} tok/s)")
+              f"{row_ref['tok_per_s']:.1f} tok/s); paged identical to "
+              f"rectangular: {rect_identical}")
         assert tp_identical, "sharded engine diverged from unsharded"
+        assert rect_identical, "paged engine diverged from rectangular"
         assert row_tp["decode_steps"] == row_ref["decode_steps"], \
             "mesh must not change the schedule"
     common.emit("serve_bench", rows)
@@ -169,6 +274,8 @@ def run(smoke: bool = False, tp: int = 1):
                "machine load")
         assert smoke, msg
         print(f"[serve_bench] WARNING: {msg}")
+
+    run_paged(smoke=smoke)
 
 
 def main() -> int:

@@ -26,7 +26,9 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m repro.launch.serve --quantized-ckpt "$OUT" \
     --requests 2 --prompt-len 8 --max-new 4 --max-batch 2
   rm -rf "$OUT"
-  echo "== CPU smoke: serving scheduler (wave vs continuous) + sharded engine =="
+  echo "== CPU smoke: serving scheduler (wave vs continuous) + sharded engine + paged KV =="
+  # also gates the paged-vs-rectangular memory-pressure race (token
+  # identity, <=50% KV-pool bytes, higher admitted concurrency)
   XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
     python -m benchmarks.serve_bench --smoke --tp 2
   echo "== CPU smoke: kernel wall-clock (two-call vs fused) =="

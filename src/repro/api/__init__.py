@@ -52,6 +52,7 @@ from repro.sharding.rules import ShardingPolicy  # noqa: F401
 from repro.serve.batcher import BatchServer  # noqa: F401  (deprecated shim)
 from repro.serve.engine import (  # noqa: F401
     InferenceEngine, RequestHandle, ServeConfig)
+from repro.serve.paging import PagedKVState  # noqa: F401
 from repro.serve.scheduler import Request  # noqa: F401
 
 __all__ = [
@@ -76,5 +77,5 @@ __all__ = [
     "place_on_mesh", "place_cache_on_mesh", "ShardingPolicy",
     # serving / persistence
     "InferenceEngine", "RequestHandle", "Request", "ServeConfig",
-    "BatchServer", "CheckpointManager",
+    "PagedKVState", "BatchServer", "CheckpointManager",
 ]

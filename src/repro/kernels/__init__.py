@@ -3,6 +3,9 @@
 - :mod:`repro.kernels.binary_matmul` — the Pallas TPU kernels: the
   fused single-pass low-rank chain (grouped for merged projections /
   stacked experts) and the legacy two-call baseline.
+- :mod:`repro.kernels.paged_attention` — the Pallas gather-attention
+  decode kernel that walks a paged KV pool's block tables
+  (serve.paging) instead of slicing a rectangular cache.
 - :mod:`repro.kernels.ref` — pure-jnp oracles (SPMD-partitionable;
   what CPU runs and the multi-pod dry-run lowers) + sign packing.
 - :mod:`repro.kernels.tuning` — block-size heuristics fitted to
@@ -14,7 +17,7 @@
 Import :mod:`repro.kernels.ops` (or go through ``repro.api``) rather
 than the kernel modules directly. The package itself imports nothing,
 so ``from repro.kernels import ref`` never drags Pallas in for callers
-that only pack (a star-import *does* pull all four submodules via
+that only pack (a star-import *does* pull all five submodules via
 ``__all__``).
 """
-__all__ = ["binary_matmul", "ops", "ref", "tuning"]
+__all__ = ["binary_matmul", "ops", "paged_attention", "ref", "tuning"]

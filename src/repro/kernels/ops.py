@@ -356,6 +356,60 @@ def _local_expert(x, qv, qu_t, s1, s2, p: KernelPolicy):
     return jax.vmap(ref.lowrank_binary_matmul_ref)(x, qv, qu_t, s1, s2)
 
 
+def paged_attention(q, k_pool, v_pool, block_table, q_pos, cache_pos, *,
+                    window: int = 0, scale: float = 1.0,
+                    policy: Optional[KernelPolicy] = None):
+    """Block-table decode attention over a paged KV pool (serve.paging).
+
+    q: (B, 1, Hq, D); k_pool / v_pool: (n_pages, page_size, Hkv, D);
+    block_table: (B, pages) int32; q_pos / cache_pos: (B,) — see
+    :func:`repro.kernels.ref.paged_attention_ref` for the full
+    contract (linear caches pass cache_pos == q_pos; sliding-window
+    ring pools pass q_pos wrapped modulo the virtual ring).
+
+    Dispatch per `policy`: the Pallas gather kernel
+    (:mod:`repro.kernels.paged_attention`) on the pallas path, the
+    gather + rectangle-mask oracle otherwise. With a tensor-parallel
+    mesh the pool arrives kv-head-sharded (``sharding.rules.
+    cache_pspecs(paged=True)``) and the launch shard_maps over the
+    head dim — each device attends over its local heads with no
+    collective (GQA groups stay shard-aligned because Hq and Hkv
+    divide the axis together); non-divisible head counts fall back to
+    the replicated single-device launch, mirroring the placement
+    fallback."""
+    p = policy if policy is not None else current_kernel_policy()
+    n = p.tp_size()
+    if n > 1 and k_pool.shape[-2] % n == 0 and q.shape[-2] % n == 0:
+        ax = p.tp_axis
+        lp = dataclasses.replace(p, mesh=None)
+
+        def body(q_, kp_, vp_, bt_, qp_, cp_):
+            return _local_paged_attention(q_, kp_, vp_, bt_, qp_, cp_,
+                                          window, scale, lp)
+
+        from repro.sharding.rules import shard_map_compat
+        return shard_map_compat(
+            body, p.mesh,
+            in_specs=(P(None, None, ax, None), P(None, None, ax, None),
+                      P(None, None, ax, None), P(None, None), P(None),
+                      P(None)),
+            out_specs=P(None, None, ax, None))(
+                q, k_pool, v_pool, block_table, q_pos, cache_pos)
+    return _local_paged_attention(q, k_pool, v_pool, block_table, q_pos,
+                                  cache_pos, window, scale, p)
+
+
+def _local_paged_attention(q, k_pool, v_pool, bt, q_pos, cache_pos,
+                           window, scale, p: KernelPolicy):
+    if p.use_pallas():
+        from repro.kernels import paged_attention as pa
+        return pa.paged_decode_attention(
+            q, k_pool, v_pool, bt, q_pos, cache_pos, window=window,
+            scale=scale, interpret=p.resolve_interpret())
+    return ref.paged_attention_ref(q, k_pool, v_pool, bt, q_pos, cache_pos,
+                                   window=window, scale=scale)
+
+
 # ---------------------------------------------------------------------------
 # deprecated process-global mode API (pre-KernelPolicy)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,135 @@
+"""Pallas TPU gather-attention decode kernel over a paged KV pool.
+
+One grid step = one (slot, logical page) pair: the block specs walk the
+slot's block table — prefetched into SMEM via
+``PrefetchScalarGridSpec``, so the index maps can compute each page's
+pool address before the body runs — and DMA exactly the pages the slot
+has mapped, instead of slicing a ``max_batch x max_len`` rectangle.
+Scores accumulate across pages with an online softmax held in VMEM
+scratch (flash-attention style), so the slot's virtual rectangle is
+never materialized in HBM or VMEM.
+
+Masking is the rectangular decode-mask math on virtual row indices:
+row ``r = page*page_size + offset`` last held absolute position
+``q_pos - ((cache_pos - r) mod rows)`` (negative = never written;
+``window`` masks past the sliding window) — which makes the same
+kernel serve linear caches (``cache_pos == q_pos``) and the hybrid
+family's sliding-window ring (``cache_pos == q_pos mod rows``).
+Unmapped block-table entries point at the null page 0 and mask out
+because their virtual rows sit past every valid position.
+
+Numerics are validated against :func:`repro.kernels.ref.
+paged_attention_ref` on the CPU interpreter (tests/test_paging.py);
+block/scratch shapes have not been swept on real TPU hardware yet —
+that rides the existing ROADMAP block-table-sweep item. The MLA decode
+path gathers pages in plain XLA instead (its absorbed-latent scoring
+is a dense matmul chain, not a GQA read — see docs/kernels.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# renamed TPUCompilerParams -> CompilerParams across jax releases
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+
+def _kernel(bt_ref, qpos_ref, cpos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, pages: int, page_size: int,
+            window: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (Hq, D)
+    k = k_ref[0].astype(jnp.float32)                     # (PS, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)
+    hq, d = q.shape
+    hkv = k.shape[1]
+    qg = q.reshape(hkv, hq // hkv, d)                    # (Hkv, G, D)
+    s = jax.lax.dot_general(                             # (Hkv, G, PS)
+        qg, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale
+
+    # virtual-row validity (see module docstring)
+    rows = pages * page_size
+    r = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, page_size), 2)
+    abs_pos = qpos_ref[b] - (cpos_ref[b] - r) % rows
+    msk = abs_pos >= 0
+    if window:
+        msk = jnp.logical_and(msk, abs_pos > qpos_ref[b] - window)
+    s = jnp.where(msk, s, -1e30)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    pexp = jnp.where(msk, jnp.exp(s - m_new[..., None]), 0.0)
+    l_ref[...] = l_ref[...] * alpha + pexp.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + jax.lax.dot_general(
+        pexp, v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pages - 1)
+    def _flush():
+        o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0, 0] = o.reshape(hq, d).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_table, q_pos,
+                           cache_pos, *, window: int = 0,
+                           scale: float = 1.0, interpret: bool = False):
+    """Block-table decode attention (one pallas_call).
+
+    q: (B, 1, Hq, D); k_pool / v_pool: (n_pages, page_size, Hkv, D);
+    block_table: (B, pages) int32; q_pos / cache_pos: (B,) int32 (see
+    :func:`repro.kernels.ref.paged_attention_ref` for the contract).
+    Returns (B, 1, Hq, D) in q.dtype.
+    """
+    B, S, Hq, D = q.shape
+    assert S == 1, "paged attention is a single-token decode read"
+    NP, PS, Hkv, Dk = k_pool.shape
+    assert Dk == D and Hq % Hkv == 0, (q.shape, k_pool.shape)
+    pages = block_table.shape[1]
+    G = Hq // Hkv
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, Hq, D),
+                         lambda b, j, bt, qp, cp: (b, 0, 0, 0)),
+            pl.BlockSpec((1, PS, Hkv, D),
+                         lambda b, j, bt, qp, cp: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, PS, Hkv, D),
+                         lambda b, j, bt, qp, cp: (bt[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Hq, D),
+                               lambda b, j, bt, qp, cp: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, G), jnp.float32),           # running max
+            pltpu.VMEM((Hkv, G), jnp.float32),           # running sum
+            pltpu.VMEM((Hkv, G, D), jnp.float32),        # output acc
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, pages=pages, page_size=PS,
+                          window=int(window), scale=float(scale)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1, Hq, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), q_pos.astype(jnp.int32),
+      cache_pos.astype(jnp.int32), q, k_pool, v_pool)

@@ -65,6 +65,49 @@ def lowrank_binary_matmul_ref(x, qv, qu_t, s1, s2):
     return packed_matmul_ref(t, qu_t, s_n=s1)     # (..., d_out)
 
 
+def paged_attention_ref(q, k_pool, v_pool, block_table, q_pos, cache_pos,
+                        window=0, scale=1.0):
+    """Gather-attention decode oracle over a paged KV pool (the
+    pure-jax twin of :mod:`repro.kernels.paged_attention`).
+
+    q: (B, 1, Hq, D) single-token queries (GQA: Hq = Hkv * G);
+    k_pool / v_pool: (n_pages, page_size, Hkv, D) page pools;
+    block_table: (B, pages) int32 per-slot page ids, ordered by logical
+    page (unmapped tail entries point at the null page 0);
+    q_pos: (B,) absolute query positions; cache_pos: (B,) cache write
+    offsets — equal to q_pos for a linear cache, or q_pos wrapped
+    modulo the virtual ring (pages * page_size) for a sliding-window
+    ring pool. Returns (B, 1, Hq, D).
+
+    Each slot's gathered pages form a virtual rectangle whose row index
+    is the row's cache position, so validity is the standard ring
+    reconstruction: row r last held absolute position
+    ``q - ((cache_pos - r) mod rows)``; negative means never written,
+    and `window` (when nonzero) masks positions past the sliding
+    window. Masked scores hit exact softmax underflow, so the result is
+    bit-identical to attention over the rectangular cache."""
+    B, S, Hq, D = q.shape
+    assert S == 1, "paged attention is a single-token decode read"
+    k = jnp.take(k_pool, block_table, axis=0).reshape(
+        B, -1, *k_pool.shape[2:])                       # (B, V, Hkv, D)
+    v = jnp.take(v_pool, block_table, axis=0).reshape(
+        B, -1, *v_pool.shape[2:])
+    rows = k.shape[1]
+    r = jnp.arange(rows)
+    abs_pos = q_pos[:, None] - (cache_pos[:, None] - r[None, :]) % rows
+    m = abs_pos >= 0                                    # (B, V)
+    if window:
+        m = m & (abs_pos > q_pos[:, None] - window)
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    s = jnp.where(m[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return o.reshape(B, 1, Hq, D)
+
+
 def lowrank_binary_matmul_fused_ref(x, qv, qu_t, s1, s2, rmask=None):
     """Oracle for the *fused* kernel: the whole chain runs with an f32
     intermediate (the fused kernel keeps t in a VMEM f32 scratch, so it

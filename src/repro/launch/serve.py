@@ -41,6 +41,15 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--rect", action="store_true",
+                    help="serve on the legacy rectangular KV pool "
+                         "instead of the paged pool (the identity "
+                         "oracle; see docs/serving.md)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="KV rows per page of the paged pool")
+    ap.add_argument("--kv-pool-pages", type=int, default=0,
+                    help="total pool pages; 0 = full capacity, smaller "
+                         "overcommits (admission queues on free pages)")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree: serve over a "
                          "(data=1, model=N) mesh (needs >= N devices; "
@@ -66,7 +75,10 @@ def main():
             print("[serve] quantized random-init teacher (demo)")
 
     cfg = model.cfg
-    scfg = api.ServeConfig(max_new_tokens=args.max_new)
+    scfg = api.ServeConfig(max_new_tokens=args.max_new,
+                           paged=not args.rect,
+                           page_size=args.page_size,
+                           kv_pool_pages=args.kv_pool_pages or None)
     mesh = None
     if args.tp > 1:
         from repro.launch.mesh import make_serving_mesh
@@ -98,6 +110,15 @@ def main():
     print(f"[serve] decode steps {eng.stats['decode_steps']}, wasted "
           f"slot-steps {eng.stats['wasted_slot_steps']}, prefill "
           f"compilations {eng.stats['prefill_traces']}")
+    if eng.paged:
+        print(f"[serve] paged KV pool: {eng.kv.n_pages} pages x "
+              f"{eng.kv.page_size} rows ({eng.kv_cache_bytes()/2**20:.2f} "
+              f"MiB), peak {eng.kv.peak_used_pages} pages in use, "
+              f"{eng.stats['page_waits']} page waits, "
+              f"{eng.stats['preemptions']} preemptions")
+    else:
+        print(f"[serve] rectangular KV pool: "
+              f"{eng.kv_cache_bytes()/2**20:.2f} MiB")
     print(f"[serve] sample output for request 0: {done[0].output[:16]}")
 
 

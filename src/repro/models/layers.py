@@ -415,6 +415,30 @@ def _cache_write(buf, new, cache_pos):
         buf, new, (0, cache_pos) + (0,) * (buf.ndim - 2))
 
 
+def paged_cache_write(pool, new, block_table, row):
+    """Single-token write into a paged KV pool (serve.paging): `new`
+    (B, 1, ...) lands in row `row[b]` of slot b's virtual rectangle —
+    page ``block_table[b, row // page_size]``, offset ``row %
+    page_size``. Inactive slots' block tables are all-zero, so their
+    masked writes hit the null page (trash) instead of a neighbour.
+    pool: (n_pages, page_size, ...); block_table: (B, pages); row: (B,).
+    """
+    ps = pool.shape[1]
+    page = jnp.take_along_axis(block_table, (row // ps)[:, None],
+                               axis=1)[:, 0]
+    return pool.at[page, row % ps].set(new[:, 0].astype(pool.dtype))
+
+
+def gather_pages(pool, block_table):
+    """Gather a slot's pages into its virtual rectangle:
+    (n_pages, page_size, ...) x (B, pages) -> (B, pages*page_size, ...).
+    Virtual row index == (ring-wrapped) cache position, so the plain
+    decode mask applies; rows from unmapped null-page entries sit past
+    every valid position and mask out."""
+    g = jnp.take(pool, block_table, axis=0)
+    return g.reshape(block_table.shape[0], -1, *pool.shape[2:])
+
+
 def _cache_valid(k_pos, cache_pos, S):
     """Rows of the cache holding real entries: (Smax,) for scalar
     cache_pos, (B,1,Smax) for per-slot (B,) cache_pos."""
@@ -446,13 +470,21 @@ def _decode_mask(q_pos, cache_pos, n_rows, window):
     return m
 
 
-def attention(p, cfg, x, positions, cache=None, cache_pos=None):
+def attention(p, cfg, x, positions, cache=None, cache_pos=None,
+              block_table=None):
     """GQA attention. Returns (out, new_cache).
 
     cache: None (training) or dict(k=(B,Smax,Hkv,D), v=...) being filled.
     cache_pos: write offset for decode — scalar, or (B,) per-slot vector
     (with positions (B,S)) for slot-scheduled continuous batching.
     positions: (S,) absolute, or (B,S) per-slot.
+    block_table: (B, pages) int32 — the cache is a paged pool
+    (k/v: (n_pages, page_size, Hkv, D), see serve.paging) and this is a
+    single-token decode: writes go through :func:`paged_cache_write`
+    and the read walks the block table (``kernels.ops.paged_attention``
+    — Pallas gather kernel on TPU, gather + rectangle oracle elsewhere).
+    For the hybrid sliding-window ring, `cache_pos` arrives pre-wrapped
+    modulo the virtual ring (pages * page_size).
     """
     flash_threshold = cfg.flash_threshold
     B, S, _ = x.shape
@@ -497,6 +529,14 @@ def attention(p, cfg, x, positions, cache=None, cache_pos=None):
             o = sdpa(q, k, v, _mask(positions, positions, window), scale)
         o = constrain(o, "dp", None, "tp", None)
         new_cache = None
+    elif block_table is not None:
+        # paged decode (S == 1, per-slot positions): page-mapped write,
+        # block-table-walking gather attention.
+        ck = paged_cache_write(cache["k"], k, block_table, cache_pos)
+        cv = paged_cache_write(cache["v"], v, block_table, cache_pos)
+        new_cache = {"k": ck, "v": cv}
+        o = kops.paged_attention(q, ck, cv, block_table, positions[:, 0],
+                                 cache_pos, window=window, scale=scale)
     else:
         ck = _cache_write(cache["k"], k, cache_pos)
         cv = _cache_write(cache["v"], v, cache_pos)
@@ -550,9 +590,16 @@ def init_mla(key, cfg, dtype=jnp.bfloat16):
     }
 
 
-def mla_attention(p, cfg, x, positions, cache=None, cache_pos=None):
+def mla_attention(p, cfg, x, positions, cache=None, cache_pos=None,
+                  block_table=None):
     """MLA. Cache stores the *compressed* c_kv + shared rope key — the
-    paper-relevant serving trick (cache is kv_lora_rank + rope_dim wide)."""
+    paper-relevant serving trick (cache is kv_lora_rank + rope_dim wide).
+
+    block_table: the cache is a paged pool (serve.paging) and this is a
+    single-token decode — writes are page-mapped and the read gathers
+    the slot's pages before the usual absorbed-latent scoring (pure-jax
+    gather; the Pallas gather kernel covers the GQA path only, the MLA
+    latent math stays in XLA — see docs/kernels.md)."""
     B, S, _ = x.shape
     H = cfg.n_heads
     dn, dr, dv, dc = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
@@ -565,7 +612,16 @@ def mla_attention(p, cfg, x, positions, cache=None, cache_pos=None):
                         cfg.rope_theta)                                 # (B,S,1,dr)
 
     scale = 1.0 / math.sqrt(dn + dr)
-    if cache is not None:
+    if cache is not None and block_table is not None:
+        ckv_pool = paged_cache_write(cache["c_kv"], c_kv, block_table,
+                                     cache_pos)
+        kr_pool = paged_cache_write(cache["k_rope"], k_rope, block_table,
+                                    cache_pos)
+        new_cache = {"c_kv": ckv_pool, "k_rope": kr_pool}
+        c_kv = gather_pages(ckv_pool, block_table)        # (B, V, dc)
+        k_rope = gather_pages(kr_pool, block_table)       # (B, V, 1, dr)
+        msk = _decode_mask(positions, cache_pos, c_kv.shape[1], 0)
+    elif cache is not None:
         c_kv = _cache_write(cache["c_kv"], c_kv, cache_pos)
         k_rope = _cache_write(cache["k_rope"], k_rope, cache_pos)
         new_cache = {"c_kv": c_kv, "k_rope": k_rope}

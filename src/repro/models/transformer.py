@@ -117,12 +117,15 @@ def init_params(key, cfg: ModelConfig) -> Params:
 # ===========================================================================
 
 
-def _apply_attn_block(p, cfg, x, positions, cache=None, cache_pos=None):
+def _apply_attn_block(p, cfg, x, positions, cache=None, cache_pos=None,
+                      block_table=None):
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     if cfg.is_mla:
-        a, new_cache = L.mla_attention(p["attn"], cfg, h, positions, cache, cache_pos)
+        a, new_cache = L.mla_attention(p["attn"], cfg, h, positions, cache,
+                                       cache_pos, block_table)
     else:
-        a, new_cache = L.attention(p["attn"], cfg, h, positions, cache, cache_pos)
+        a, new_cache = L.attention(p["attn"], cfg, h, positions, cache,
+                                   cache_pos, block_table)
     x = x + a
     h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
     if "moe" in p:
@@ -389,13 +392,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     raise ValueError(fam)
 
 
-def _cached_forward(params, cfg, tokens, cache, pos, image_embeds=None):
+def _cached_forward(params, cfg, tokens, cache, pos, image_embeds=None,
+                    block_tables=None):
     """Shared implementation for prefill (S>=1) and decode (S==1).
 
     pos: absolute position of tokens[:, 0] — a scalar shared by the
     batch, or a (B,) vector of per-slot positions (continuous-batching
     decode, S == 1 only): each batch row then gets its own RoPE phase,
     cache write offset and causal mask.
+    block_tables: the cache's attention leaves are paged pools
+    (serve.paging) and this is a single-token decode — a dict with a
+    ``"linear"`` (B, pages) table for ordinary caches and/or a
+    ``"ring"`` table for the hybrid shared-attention ring.
     Returns (hidden, new_cache)."""
     x = embed_tokens(params, cfg, tokens)
     S = x.shape[1]
@@ -405,13 +413,17 @@ def _cached_forward(params, cfg, tokens, cache, pos, image_embeds=None):
     else:
         positions = pos + jnp.arange(S)                       # (S,)
     fam = cfg.family
+    if S != 1 or not block_tables:                 # paged is decode-only
+        block_tables = None
+    bt_lin = block_tables.get("linear") if block_tables else None
 
     if fam in ("dense", "audio", "moe"):
         new_cache = dict(cache)
         if fam == "moe" and cfg.first_k_dense:
             def dbody(h, inp):
                 lp, lc = inp
-                h, nc = _apply_attn_block(lp, cfg, h, positions, lc, pos)
+                h, nc = _apply_attn_block(lp, cfg, h, positions, lc, pos,
+                                          bt_lin)
                 return h, nc
             x, ncache = jax.lax.scan(dbody, x, (params["dense_layers"],
                                                 cache["dense_layers"]))
@@ -419,7 +431,7 @@ def _cached_forward(params, cfg, tokens, cache, pos, image_embeds=None):
 
         def body(h, inp):
             lp, lc = inp
-            h, nc = _apply_attn_block(lp, cfg, h, positions, lc, pos)
+            h, nc = _apply_attn_block(lp, cfg, h, positions, lc, pos, bt_lin)
             return h, nc
         x, ncache = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
         new_cache["layers"] = ncache
@@ -445,6 +457,13 @@ def _cached_forward(params, cfg, tokens, cache, pos, image_embeds=None):
         shared = params["shared_attn"]
         win = cache["window"]
         n_apps = cfg.n_layers // cfg.attn_every
+        bt_ring = block_tables.get("ring") if block_tables else None
+        if bt_ring is not None:
+            # paged ring: writes wrap modulo the *virtual* ring size
+            # (mapped pages x page_size >= win) so the decode mask's
+            # row->position reconstruction matches the write wrap.
+            ps = jax.tree.leaves(cache["shared_attn"])[0].shape[2]
+            ring_rows = bt_ring.shape[1] * ps
 
         def body(carry, inp):
             h, attn_caches = carry
@@ -462,8 +481,14 @@ def _cached_forward(params, cfg, tokens, cache, pos, image_embeds=None):
                 lc_a = jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(
                     a, app, 0, keepdims=False), caches)
                 # window the cache write position
-                wpos = jnp.minimum(pos, win - S) if S > 1 else pos % jnp.maximum(win, 1)
-                hh2, nc = _apply_attn_block(shared, cfg, hh, positions, lc_a, wpos)
+                if bt_ring is not None:
+                    wpos = pos % ring_rows
+                elif S > 1:
+                    wpos = jnp.minimum(pos, win - S)
+                else:
+                    wpos = pos % jnp.maximum(win, 1)
+                hh2, nc = _apply_attn_block(shared, cfg, hh, positions,
+                                            lc_a, wpos, bt_ring)
                 caches = jax.tree.map(
                     lambda a, n: jax.lax.dynamic_update_index_in_dim(
                         a, n.astype(a.dtype), app, 0), caches, nc)
@@ -493,7 +518,8 @@ def _cached_forward(params, cfg, tokens, cache, pos, image_embeds=None):
 
             def sbody(hh, sinp):
                 lp, lc = sinp
-                hh, nc = _apply_attn_block(lp, cfg, hh, positions, lc, pos)
+                hh, nc = _apply_attn_block(lp, cfg, hh, positions, lc, pos,
+                                           bt_lin)
                 return hh, nc
             h, nsc = jax.lax.scan(sbody, h, (selfs, scache))
             h = _apply_cross_block(crossp, cfg, h, (ckv["k"], ckv["v"]))
@@ -551,11 +577,13 @@ def prefill(params, cfg, tokens, cache, image_embeds=None, last_idx=None):
     return logits_fn(params, cfg, h), cache
 
 
-def decode_step(params, cfg, token, cache, pos):
+def decode_step(params, cfg, token, cache, pos, block_tables=None):
     """One decode step. token: (B, 1[, K]); pos: absolute position —
     scalar (lockstep batch) or (B,) per-slot vector (continuous
-    batching)."""
-    h, cache = _cached_forward(params, cfg, token, cache, pos)
+    batching). block_tables: per-slot page tables when `cache` is a
+    paged pool (serve.paging; requires per-slot (B,) pos)."""
+    h, cache = _cached_forward(params, cfg, token, cache, pos,
+                               block_tables=block_tables)
     return logits_fn(params, cfg, h), cache
 
 

@@ -207,15 +207,19 @@ def place_on_mesh(params, cfg: ModelConfig, mesh, policy=None):
                         shardings)
 
 
-def place_cache_on_mesh(cache, cfg: ModelConfig, mesh, policy=None):
+def place_cache_on_mesh(cache, cfg: ModelConfig, mesh, policy=None,
+                        paged: bool = False):
     """Place a pooled KV / SSM cache per ``sharding.rules.cache_pspecs``
     (kv-heads — or the sequence dim — on ``model``; slot/batch dim on
-    the data axes when divisible)."""
+    the data axes when divisible). ``paged=True`` for a page-pool cache
+    (serve.paging): the pool shards its kv-head dim only, with the
+    replicated fallback when non-divisible."""
     from repro.sharding import rules
     cache = jax.tree.map(jnp.asarray, cache)   # e.g. the hybrid ring's
     # python-int `window` leaf, which cache_pspecs sizes by .shape
     cspecs = rules.cache_pspecs(cfg, cache, mesh,
-                                policy if policy is not None else rules.SERVE)
+                                policy if policy is not None else rules.SERVE,
+                                paged=paged)
     shardings = rules.to_shardings(mesh, cspecs)
     return jax.tree.map(lambda a, s: jax.device_put(a, s), cache, shardings)
 

@@ -1,21 +1,25 @@
 """Serving stack: slot-scheduled continuous batching (docs/serving.md).
 
 :class:`InferenceEngine` is the serving surface — a fixed pool of
-decode slots over one persistent cache, per-slot positions / budgets /
-EOS, mid-flight admission with power-of-two prefill buckets, optional
+decode slots over one persistent cache (a paged KV pool by default:
+fixed-size pages + per-slot block tables, ``repro.serve.paging``),
+per-slot positions / budgets / EOS, mid-flight admission with
+power-of-two prefill buckets, page-aware overcommit admission, optional
 tensor-parallel execution over a mesh. :class:`SlotScheduler` holds the
 host-side bookkeeping; :class:`BatchServer` is the deprecated
 wave-admission shim. Enter through ``api.NanoQuantModel.engine()``.
 """
+from repro.serve.scheduler import (  # noqa: F401
+    Request, SlotScheduler, bucket_length)
+from repro.serve.paging import PagedKVState  # noqa: F401
 from repro.serve.engine import (  # noqa: F401
     InferenceEngine, RequestHandle, ServeConfig, make_prefill_step,
     make_serve_step, make_slot_prefill_step, sample_token)
-from repro.serve.scheduler import (  # noqa: F401
-    Request, SlotScheduler, bucket_length)
 from repro.serve.batcher import BatchServer  # noqa: F401
 
 __all__ = [
     "InferenceEngine", "RequestHandle", "ServeConfig", "Request",
-    "SlotScheduler", "BatchServer", "bucket_length", "sample_token",
-    "make_prefill_step", "make_serve_step", "make_slot_prefill_step",
+    "SlotScheduler", "BatchServer", "PagedKVState", "bucket_length",
+    "sample_token", "make_prefill_step", "make_serve_step",
+    "make_slot_prefill_step",
 ]

@@ -21,23 +21,35 @@ from repro.serve.scheduler import Request  # noqa: F401  (re-export)
 
 
 class BatchServer:
-    """Deprecated wave-scheduled facade over :class:`InferenceEngine`."""
+    """Deprecated wave-scheduled facade over :class:`InferenceEngine`.
+
+    Cache-layout agnostic: it drives whatever layout the engine was
+    built with — the default paged KV pool (``ServeConfig.paged``,
+    including overcommitted pools whose preemptions requeue work
+    mid-wave) or the legacy rectangle (``paged=False``). Extra engine
+    kwargs (``mesh=``, ``sharding_policy=``) pass straight through.
+    """
 
     def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig,
-                 max_batch: int = 8, max_len: int = 512, seed: int = 0):
+                 max_batch: int = 8, max_len: int = 512, seed: int = 0,
+                 **engine_kwargs):
         warnings.warn(
             "BatchServer is deprecated; use InferenceEngine "
             "(NanoQuantModel.engine()) for slot-scheduled continuous "
             "batching", DeprecationWarning, stacklevel=2)
         self.engine = InferenceEngine(params, cfg, scfg,
                                       max_batch=max_batch, max_len=max_len,
-                                      seed=seed, admission="wave")
+                                      seed=seed, admission="wave",
+                                      **engine_kwargs)
         self.params, self.cfg, self.scfg = params, cfg, scfg
         self.max_batch, self.max_len = max_batch, max_len
 
     @property
     def queue(self) -> List[Request]:
-        return [h.request for h in self.engine.scheduler.pending]
+        # pending holds fresh handles and (paged overcommit) preempted
+        # resume records; both lead back to their Request
+        return [h.request if hasattr(h, "request") else h.handle.request
+                for h in self.engine.scheduler.pending]
 
     @property
     def done(self) -> Dict[int, Request]:

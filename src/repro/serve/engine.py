@@ -33,6 +33,7 @@ import numpy as np
 from repro.kernels import ops as kops
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serve import paging
 from repro.serve.scheduler import (Request, SlotScheduler, bucket_length,
                                    cache_insert_slot, cache_select_active)
 
@@ -43,6 +44,22 @@ class ServeConfig:
     top_k: int = 32
     max_new_tokens: int = 64
     greedy: bool = False
+    # --- paged KV cache (docs/serving.md §Paged KV cache) ---
+    # paged=True (default) backs the engine's persistent cache with a
+    # page pool + per-slot block tables (serve.paging); paged=False
+    # keeps the rectangular max_batch x max_len pool (the oracle layout,
+    # kept for one release). Families with no pageable KV (pure SSM)
+    # silently stay rectangular.
+    paged: bool = True
+    page_size: int = 64                    # KV rows per page (clamped to
+    #                                        max_len for tiny servers)
+    # total pool pages; None = full capacity (max_batch worst-case slots
+    # + the null page — a drop-in for the rectangle). Smaller values
+    # OVERCOMMIT: admission gates on free pages, decode reserves lazily,
+    # and the engine preempts the youngest slot if the pool runs dry.
+    kv_pool_pages: Optional[int] = None
+    page_watermark: int = 0                # extra free pages required
+    #                                        to admit (beyond the prompt)
 
 
 def sample_token(logits: jnp.ndarray, key, scfg: ServeConfig) -> jnp.ndarray:
@@ -192,6 +209,22 @@ class _SlotTask:
     toks: List[Any] = dataclasses.field(default_factory=list)
 
 
+@dataclasses.dataclass
+class _Resume:
+    """A preempted request re-queued for admission (paged engine, pool
+    exhausted mid-decode): re-prefills prompt + already-emitted tokens
+    and continues with the remaining budget. Greedy decoding makes the
+    recompute token-exact; already-emitted tokens are never re-emitted."""
+    handle: RequestHandle
+    prompt: np.ndarray                 # original prompt + emitted tokens
+    budget: int                        # new tokens still allowed
+    emitted: List[Any] = dataclasses.field(default_factory=list)
+
+    @property
+    def uid(self) -> int:
+        return self.handle.uid
+
+
 class InferenceEngine:
     """Slot-scheduled, continuously-batched serving engine.
 
@@ -207,6 +240,18 @@ class InferenceEngine:
     `admission="wave"` reproduces the legacy drain-then-refill
     `BatchServer` schedule for comparison; greedy outputs are identical
     per request under either policy.
+
+    The persistent cache is a **paged KV pool** by default
+    (`ServeConfig.paged`, serve.paging): fixed-size pages + per-slot
+    block tables instead of a `max_batch x max_len` rectangle. Pages
+    are reserved at admission for the prompt, lazily per decode step as
+    a slot crosses a page boundary, and freed on completion. With
+    `kv_pool_pages` below full capacity the pool *overcommits* total
+    sequence capacity: admission gates on free pages (FIFO, queueing
+    instead of crashing when exhausted) and a dry pool preempts the
+    youngest slot (token-exact re-prefill under greedy). Greedy outputs
+    are token-identical to the rectangular engine
+    (`ServeConfig(paged=False)`, the oracle layout).
 
     `mesh` (optional) turns the engine tensor-parallel: packed U/s1 and
     V/s2 are placed per `sharding.rules` (Megatron col/row pairing —
@@ -260,11 +305,27 @@ class InferenceEngine:
         self.max_batch, self.max_len = max_batch, max_len
         self.key = jax.random.PRNGKey(seed)
         self.scheduler = SlotScheduler(max_batch, admission)
-        self.cache = T.init_cache(cfg, max_batch, max_len)
+        # paged KV pool (serve.paging) unless disabled or the family has
+        # no pageable cache (pure SSM state is O(1)/slot either way)
+        self.kv: Optional[paging.PagedKVState] = None
+        kinds = paging.cache_page_kinds(cfg, max_len) if self.scfg.paged \
+            else set()
+        if kinds:
+            self.kv = paging.PagedKVState(
+                cfg, max_batch, max_len, self.scfg.page_size,
+                self.scfg.kv_pool_pages, self.scfg.page_watermark,
+                kinds=kinds)
+        self.paged = self.kv is not None
+        if self.paged:
+            self.cache = paging.init_paged_cache(
+                cfg, max_batch, max_len, self.kv.n_pages, self.kv.page_size)
+        else:
+            self.cache = T.init_cache(cfg, max_batch, max_len)
         if mesh is not None:
             from repro.quant.surgery import place_cache_on_mesh
             self.cache = place_cache_on_mesh(self.cache, cfg, mesh,
-                                             self._shard_policy)
+                                             self._shard_policy,
+                                             paged=self.paged)
         self.pos = np.zeros((max_batch,), np.int32)
         self.active = np.zeros((max_batch,), bool)
         tok_shape = ((max_batch, 1, cfg.n_codebooks)
@@ -294,14 +355,23 @@ class InferenceEngine:
         # return the next one, so XLA can update it in place instead of
         # materializing a second full KV pool per token (the decode loop
         # is memory-bound — this is the dominant non-weight traffic).
-        self._insert = jax.jit(cache_insert_slot, donate_argnums=(0,))
+        # Same discipline for the paged pool: the page scatters and
+        # block-table-walking decode writes update the donated buffers.
+        if self.paged:
+            self._insert = jax.jit(paging.paged_insert_slot,
+                                   donate_argnums=(0,))
+        else:
+            self._insert = jax.jit(cache_insert_slot, donate_argnums=(0,))
+        select_active = (paging.paged_select_active if self.paged
+                         else cache_select_active)
 
-        def decode_fn(params, tokens, cache, pos, active, key):
+        def decode_fn(params, tokens, cache, pos, active, key, tables):
             self.stats["decode_traces"] += 1
             with self._trace_scope():
                 logits, new_cache = T.decode_step(params, cfg, tokens,
-                                                  cache, pos)
-                new_cache = cache_select_active(new_cache, cache, active)
+                                                  cache, pos,
+                                                  block_tables=tables)
+                new_cache = select_active(new_cache, cache, active)
                 tok = sample_token(logits, key, self.scfg)
             if cfg.family == "audio":
                 tok = tok[:, None, :]
@@ -348,6 +418,13 @@ class InferenceEngine:
                 f"request {req.uid}: prompt length {n} >= max_len "
                 f"{self.max_len} leaves no room to generate — raise "
                 f"max_len or truncate the prompt before submitting")
+        if self.paged:
+            need = self.kv.pages_for_prompt(n)
+            if need + self.kv.watermark > self.kv.n_pages - 1:
+                raise ValueError(
+                    f"request {req.uid}: prompt needs {need} pages but "
+                    f"the pool holds {self.kv.n_pages - 1} (watermark "
+                    f"{self.kv.watermark}) — it could never be admitted")
         old = self.handles.get(req.uid)
         if old is not None:
             if not old.done:
@@ -375,15 +452,39 @@ class InferenceEngine:
         the engine inconsistent (the exception still propagates)."""
         finished = []
         self._callbacks = []
-        for slot, handle in self.scheduler.admit_batch():
+        gate = None
+        if self.paged:
+            promised = [0]     # pages owed to earlier admissions in this
+            #                    batch (kv.admit runs after admit_batch)
+
+            def gate(item):
+                need = self.kv.pages_for_prompt(self._item_prompt_len(item))
+                # the watermark holds back slack for *fresh* work only:
+                # a preempted _Resume was already admitted once and its
+                # grown prompt (<= one slot's worst case, which always
+                # fits) may legitimately exceed what submit() validated
+                # — gating it on the watermark could livelock the queue.
+                wm = 0 if isinstance(item, _Resume) else self.kv.watermark
+                ok = self.kv.free_pages - promised[0] - need >= wm
+                if ok:
+                    promised[0] += need
+                else:
+                    self.stats["page_waits"] += 1
+                return ok
+        for slot, handle in self.scheduler.admit_batch(gate):
             fin = self._admit(slot, handle)
             if fin is not None:
                 finished.append(fin)
+        self.stats["peak_active"] = max(self.stats["peak_active"],
+                                        int(self.active.sum()))
+        if self.paged and self.active.any():
+            self._ensure_decode_pages()
         if self.active.any():
+            tables = self.kv.device_tables() if self.paged else {}
             self.key, k = jax.random.split(self.key)
             tok, self.cache = self._decode(
                 self.params, jnp.asarray(self.tokens), self.cache,
-                jnp.asarray(self.pos), jnp.asarray(self.active), k)
+                jnp.asarray(self.pos), jnp.asarray(self.active), k, tables)
             tok = np.array(tok)        # writable copy: slots mutate it
             self.tokens = tok
             self.stats["decode_steps"] += 1
@@ -417,8 +518,14 @@ class InferenceEngine:
     def reset_stats(self) -> None:
         for k in ("steps", "decode_steps", "wasted_slot_steps",
                   "tokens_emitted", "admissions", "prefill_traces",
-                  "decode_traces"):
+                  "decode_traces", "preemptions", "page_waits",
+                  "peak_active"):
             self.stats[k] = 0
+
+    def kv_cache_bytes(self) -> int:
+        """Bytes held by the persistent attention-cache leaves — the
+        paged pool's footprint vs the rectangle's (paging.kv_cache_bytes)."""
+        return paging.kv_cache_bytes(self.cache)
 
     def _forget(self, uid: int) -> None:
         for d in (self.handles, self.done, self.slot_of,
@@ -434,11 +541,26 @@ class InferenceEngine:
 
     # ---- internals --------------------------------------------------------
 
-    def _admit(self, slot: int, handle: RequestHandle) -> Optional[Request]:
-        """Prefill `handle`'s prompt into `slot` and emit its first
-        token. Returns the request if it finished immediately."""
+    @staticmethod
+    def _item_prompt_len(item) -> int:
+        """Prompt rows an admission unit will prefill (resumes prefill
+        prompt + already-emitted tokens)."""
+        if isinstance(item, _Resume):
+            return item.prompt.shape[0]
+        return np.asarray(item.request.prompt).shape[0]
+
+    def _admit(self, slot: int, item) -> Optional[Request]:
+        """Prefill `item`'s prompt into `slot` and emit its next token.
+        `item` is a fresh RequestHandle or a preempted _Resume. Returns
+        the request if it finished immediately."""
+        if isinstance(item, _Resume):
+            handle, prompt = item.handle, item.prompt
+            budget_cap, prior = item.budget, item.emitted
+        else:
+            handle, prior = item, []
+            prompt = np.asarray(handle.request.prompt, np.int32)
+            budget_cap = handle.request.max_new_tokens
         req = handle.request
-        prompt = np.asarray(req.prompt, np.int32)
         n = prompt.shape[0]
         if self.cfg.is_ssm_layer_stack:
             # right-padding would leak pad tokens into the recurrent
@@ -451,15 +573,21 @@ class InferenceEngine:
         padded[0, :n] = prompt
         logits, single = self._prefill(self.params, jnp.asarray(padded),
                                        jnp.asarray(n - 1, jnp.int32))
-        self.cache = self._insert(self.cache, single,
-                                  jnp.asarray(slot, jnp.int32))
+        if self.paged:
+            ids = self.kv.admit(slot, n)           # gated by admit_batch
+            self.cache = self._insert(
+                self.cache, single, jnp.asarray(slot, jnp.int32),
+                {k: jnp.asarray(v) for k, v in ids.items()})
+        else:
+            self.cache = self._insert(self.cache, single,
+                                      jnp.asarray(slot, jnp.int32))
         self.key, k = jax.random.split(self.key)
         tok = sample_token(logits, k, self.scfg)       # (1,1) or (1,K)
         if self.cfg.family == "audio":
             tok = tok[:, None, :]                      # (1,1,K)
         tok = np.asarray(tok)
-        task = _SlotTask(handle, budget=min(req.max_new_tokens,
-                                            self.max_len - n))
+        task = _SlotTask(handle, budget=min(budget_cap, self.max_len - n),
+                         toks=list(prior))
         self._tasks[slot] = task
         self.pos[slot] = n
         self.slot_of[req.uid] = slot
@@ -470,6 +598,44 @@ class InferenceEngine:
             self.active[slot] = True
             self.tokens[slot] = tok[0]
         return fin
+
+    def _ensure_decode_pages(self) -> None:
+        """Lazy page reservation before a decode step: every active slot
+        must have the page its next cache write lands in. If the pool
+        runs dry, the *youngest-admitted* active slot is preempted —
+        requeued at the queue front as a _Resume (re-prefill prompt +
+        emitted, token-exact under greedy) — until the write fits. The
+        youngest may be the needy slot itself (it then self-preempts
+        rather than evicting an older neighbour), so the oldest slot
+        always survives; and one slot's worst case fits the pool by
+        construction (PagedKVState rejects smaller pools), so a lone
+        survivor always progresses."""
+        for slot in np.nonzero(self.active)[0]:
+            while self.active[slot] and \
+                    not self.kv.ensure(int(slot), int(self.pos[slot])):
+                self._preempt(self._youngest_active())
+
+    def _youngest_active(self) -> int:
+        return int(max(np.nonzero(self.active)[0], key=lambda s: (
+            self.admission_step.get(self._tasks[s].handle.uid, -1), s)))
+
+    def _preempt(self, slot: int) -> None:
+        """Evict `slot` mid-decode: free its pages and requeue the rest
+        of its generation as a _Resume. Its handle keeps streaming —
+        emitted tokens are never replayed."""
+        task = self._tasks[slot]
+        emitted = np.asarray(task.toks, np.int32)
+        prompt = np.concatenate(
+            [np.asarray(task.handle.request.prompt, np.int32), emitted],
+            axis=0)
+        self.active[slot] = False
+        self._tasks[slot] = None
+        self.slot_of.pop(task.handle.uid, None)   # queued, not placed
+        self.kv.release(slot)
+        self.scheduler.release(slot)
+        self.scheduler.requeue(_Resume(task.handle, prompt, task.budget,
+                                       list(task.toks)))
+        self.stats["preemptions"] += 1
 
     def _emit(self, slot: int, token) -> Optional[Request]:
         """Record one emitted token for `slot`; finish the slot on EOS
@@ -499,5 +665,11 @@ class InferenceEngine:
         task.handle.finish_t = time.monotonic()
         self.active[slot] = False
         self._tasks[slot] = None
+        if self.paged:
+            # free-on-completion: the slot's pages return to the pool
+            # and its block-table rows zero out, so a reused uid (or the
+            # next occupant) can neither leak pages nor read a stale
+            # mapping (clear_finished() only reclaims host bookkeeping).
+            self.kv.release(slot)
         self.scheduler.release(slot)
         return req

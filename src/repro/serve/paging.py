@@ -1,0 +1,304 @@
+"""Paged KV cache: a global pool of fixed-size KV pages + per-slot
+block tables (docs/serving.md §Paged KV cache).
+
+The rectangular pooled cache reserves ``max_batch x max_len`` rows per
+attention leaf no matter what each slot actually holds; once the
+weights are sub-1-bit (the paper's 25.8x compression) that rectangle
+*is* the serving-memory bottleneck. Here the persistent cache becomes
+one pool of ``n_pages`` pages of ``page_size`` rows, and each slot maps
+only the pages for tokens it has actually written:
+
+- :class:`PagedKVState` — host-side free-list allocator + per-slot
+  block tables. Pages are reserved at admission for the prompt
+  (``admit``), lazily one page at a time as decode crosses a page
+  boundary (``ensure``), and freed when the slot completes or is
+  preempted (``release``). Page 0 is the *null page*: unmapped block-
+  table entries point at it, so inactive slots' masked decode writes
+  land in trash instead of corrupting a neighbour.
+- :func:`init_paged_cache` — the device pool. Attention leaves swap
+  their ``(batch, rows)`` dims for ``(n_pages, page_size)``; state
+  leaves with no sequence extent (SSM / conv states, the VLM image KV)
+  stay slot-indexed rectangles.
+- :func:`paged_insert_slot` / :func:`paged_select_active` — the paged
+  twins of ``scheduler.cache_insert_slot`` / ``cache_select_active``,
+  used by the engine's jitted (cache-donating) insert and decode steps.
+
+Two page kinds exist: ``"linear"`` (ordinary caches — page ``j`` of a
+slot holds absolute rows ``[j*page_size, (j+1)*page_size)``) and
+``"ring"`` (the hybrid family's shared-attention sliding-window ring —
+fully mapped at admission, writes wrap modulo the slot's virtual ring
+``ring_pages * page_size``). Because block tables are ordered by
+logical page, a slot's gathered pages form a virtual rectangle whose
+row index equals the row's (possibly ring-wrapped) cache position — so
+the decode read is exactly the rectangular decode mask over the gather
+(`kernels.ref.paged_attention_ref`, Pallas gather kernel in
+`kernels.paged_attention`).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.util import _path_str
+from repro.models import transformer as T
+from repro.serve.scheduler import _batch_axis
+
+# leaf name -> offset of the sequence dim from the right; the batch dim
+# (rectangular) / page dim (paged) sits directly left of it. Covers the
+# plain GQA cache, MLA's compressed cache, and any leading layer-stack
+# dims (the VLM (groups, per-1) stack included).
+_SEQ_OFF = {"k": 3, "v": 3, "c_kv": 2, "k_rope": 3}
+
+
+def page_kind(path: str) -> Optional[str]:
+    """'linear' | 'ring' | None for a cache-leaf path. The VLM image KV
+    (`cross_kv`) has no sequence growth and stays rectangular."""
+    parts = path.split("/")
+    if parts[-1] not in _SEQ_OFF or "cross_kv" in parts:
+        return None
+    return "ring" if "shared_attn" in parts else "linear"
+
+
+def cache_page_kinds(cfg, max_len: int) -> Set[str]:
+    """Which page kinds `cfg`'s cache contains (empty set => nothing to
+    page, e.g. pure-SSM families; the engine then stays rectangular)."""
+    tree = jax.eval_shape(lambda: T.init_cache(cfg, 1, max_len))
+    kinds = set()
+    for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        k = page_kind(_path_str(kp))
+        if k:
+            kinds.add(k)
+    return kinds
+
+
+def init_paged_cache(cfg, batch: int, max_len: int, n_pages: int,
+                     page_size: int):
+    """Pool-shaped cache: every pageable leaf becomes
+    ``(*stack, n_pages, page_size, *tail)``; everything else keeps the
+    rectangular ``init_cache`` layout (slot-indexed state).
+
+    The rectangular layout is only ever inspected abstractly
+    (``eval_shape``) — allocating it for real would spike init memory
+    to rectangle + pool, defeating an overcommitted pool on exactly the
+    deployments it exists for."""
+    rect = jax.eval_shape(lambda: T.init_cache(cfg, batch, max_len))
+
+    def conv(kp, leaf):
+        path = _path_str(kp)
+        name = path.rsplit("/", 1)[-1]
+        if page_kind(path) is None:
+            if name == "window":   # value leaf: the hybrid ring length
+                return min(max_len, cfg.sliding_window or max_len)
+            return jnp.zeros(leaf.shape, leaf.dtype)
+        ax = len(leaf.shape) - _SEQ_OFF[name]
+        s = leaf.shape
+        return jnp.zeros(s[:ax - 1] + (n_pages, page_size) + s[ax + 1:],
+                         leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(conv, rect)
+
+
+def kv_cache_bytes(cache) -> int:
+    """Bytes held by the attention-cache leaves (k/v/c_kv/k_rope) —
+    the quantity paging shrinks; SSM state is O(1)/slot either way."""
+    total = 0
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        if _path_str(kp).rsplit("/", 1)[-1] in _SEQ_OFF:
+            total += leaf.size * jnp.dtype(leaf.dtype).itemsize
+    return int(total)
+
+
+def paged_insert_slot(cache, single, slot, tables):
+    """Insert a freshly prefilled batch-1 *rectangular* cache into slot
+    `slot` of the paged pool. `tables`: ``{kind: (pages_kind,) int32}``
+    page-id vector for this slot, unmapped tail entries 0 (null page).
+
+    Pageable leaves scatter page-granular row blocks of the rectangle
+    into the slot's pages (rows past the rectangle pad with zeros; rows
+    in unmapped tail pages all land on the null page, which is trash by
+    design). Rectangular leaves (SSM state, image KV, metadata) keep
+    the batch-dim scatter of ``scheduler.cache_insert_slot``.
+    """
+    def ins(kp, pool, s):
+        path = _path_str(kp)
+        kind = page_kind(path)
+        if kind is None:
+            if jnp.ndim(pool) < 2:
+                return pool
+            start = [0] * jnp.ndim(pool)
+            start[_batch_axis(kp)] = slot
+            return jax.lax.dynamic_update_slice(pool, s.astype(pool.dtype),
+                                                tuple(start))
+        ids = tables[kind]
+        np_ax = jnp.ndim(pool) - _SEQ_OFF[path.rsplit("/", 1)[-1]] - 1
+        ps = pool.shape[np_ax + 1]
+        x = jax.lax.squeeze(s, (np_ax,))          # drop the batch=1 dim
+        rows = x.shape[np_ax]
+        pad = [(0, 0)] * x.ndim
+        pad[np_ax] = (0, ids.shape[0] * ps - rows)
+        x = jnp.pad(x, pad)
+        x = x.reshape(x.shape[:np_ax] + (ids.shape[0], ps)
+                      + x.shape[np_ax + 1:])
+        idx = (slice(None),) * np_ax + (ids,)
+        return pool.at[idx].set(x.astype(pool.dtype))
+
+    return jax.tree_util.tree_map_with_path(ins, cache, single)
+
+
+def paged_select_active(new, old, active):
+    """Per-slot active select for a paged cache: pool leaves pass
+    through untouched — paged decode writes are slot-isolated by
+    construction (inactive slots map the null page) — while rectangular
+    leaves keep the batch-dim select of
+    ``scheduler.cache_select_active``."""
+    def sel(kp, n, o):
+        if page_kind(_path_str(kp)) is not None or jnp.ndim(n) < 2:
+            return n
+        shape = [1] * jnp.ndim(n)
+        shape[_batch_axis(kp)] = -1
+        return jnp.where(active.reshape(shape), n, o)
+
+    return jax.tree_util.tree_map_with_path(sel, new, old)
+
+
+class PagedKVState:
+    """Host-side page allocator + per-slot block tables.
+
+    Pages [1, n_pages) are allocatable; page 0 is the null page. The
+    default pool (``n_pages=None``) holds full capacity — one worst-case
+    slot footprint per slot, no overcommit, so the paged engine is a
+    drop-in for the rectangular one. Pass a smaller ``n_pages`` (e.g.
+    via ``ServeConfig.kv_pool_pages``) to overcommit: admission then
+    gates on free pages (``can_admit``, FIFO head-of-line), decode
+    reserves lazily (``ensure``) and the engine preempts the youngest
+    slot if the pool runs truly dry.
+    """
+
+    def __init__(self, cfg, max_batch: int, max_len: int, page_size: int,
+                 n_pages: Optional[int] = None, watermark: int = 0,
+                 kinds: Optional[Set[str]] = None):
+        if kinds is None:
+            kinds = cache_page_kinds(cfg, max_len)
+        if not kinds:
+            raise ValueError(f"family {cfg.family!r} has no pageable KV "
+                             f"cache")
+        ps = max(1, min(int(page_size), max_len))
+        self.page_size = ps
+        self.has_linear = "linear" in kinds
+        self.has_ring = "ring" in kinds
+        self.lin_pages = -(-max_len // ps) if self.has_linear else 0
+        win = min(max_len, cfg.sliding_window or max_len)
+        self.ring_pages = -(-win // ps) if self.has_ring else 0
+        per_slot = self.lin_pages + self.ring_pages
+        if n_pages is None:
+            n_pages = max_batch * per_slot + 1
+        if n_pages < per_slot + 1:
+            raise ValueError(
+                f"kv_pool_pages={n_pages} cannot hold one slot's worst "
+                f"case ({per_slot} pages + the null page); a lone "
+                f"request could never complete")
+        self.n_pages = int(n_pages)
+        self.watermark = int(watermark)
+        self.tables: Dict[str, np.ndarray] = {}
+        if self.has_linear:
+            self.tables["linear"] = np.zeros((max_batch, self.lin_pages),
+                                             np.int32)
+        if self.has_ring:
+            self.tables["ring"] = np.zeros((max_batch, self.ring_pages),
+                                           np.int32)
+        self._free = list(range(self.n_pages - 1, 0, -1))  # pop() ascending
+        self._slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
+        self._mapped = [0] * max_batch        # linear pages mapped per slot
+        self.peak_used_pages = 0
+        self._device_tables: Optional[Dict[str, jnp.ndarray]] = None
+
+    # ---- accounting -------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    def pages_for_prompt(self, n: int) -> int:
+        lin = -(-n // self.page_size) if self.has_linear else 0
+        return lin + self.ring_pages
+
+    def can_admit(self, n: int) -> bool:
+        return self.free_pages - self.pages_for_prompt(n) >= self.watermark
+
+    # ---- lifecycle --------------------------------------------------------
+
+    def _alloc(self, k: int) -> List[int]:
+        assert len(self._free) >= k, "allocator invariant violated"
+        out = [self._free.pop() for _ in range(k)]
+        self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
+        return out
+
+    def admit(self, slot: int, n: int) -> Dict[str, np.ndarray]:
+        """Reserve pages for an `n`-token prompt entering `slot`;
+        returns the per-kind page-id vectors for ``paged_insert_slot``
+        (== the slot's fresh block-table rows)."""
+        assert not self._slot_pages[slot], f"slot {slot} pages leaked"
+        self._device_tables = None
+        ids: Dict[str, np.ndarray] = {}
+        if self.has_linear:
+            k = -(-n // self.page_size)
+            pages = self._alloc(k)
+            self._slot_pages[slot].extend(pages)
+            self._mapped[slot] = k
+            row = self.tables["linear"][slot]
+            row[:] = 0
+            row[:k] = pages
+            ids["linear"] = row.copy()
+        if self.has_ring:
+            pages = self._alloc(self.ring_pages)
+            self._slot_pages[slot].extend(pages)
+            self.tables["ring"][slot] = pages
+            ids["ring"] = np.asarray(pages, np.int32)
+        return ids
+
+    def ensure(self, slot: int, row: int) -> bool:
+        """Lazy per-decode-step reservation: map the linear page that
+        will hold `row` (the next cache write). False => pool exhausted
+        (caller preempts). Ring pages are fully mapped at admission."""
+        if not self.has_linear:
+            return True
+        need = row // self.page_size + 1
+        mapped = self._mapped[slot]
+        if need <= mapped:
+            return True
+        assert need == mapped + 1, (need, mapped)
+        if not self._free:
+            return False
+        page = self._alloc(1)[0]
+        self._slot_pages[slot].append(page)
+        self.tables["linear"][slot, mapped] = page
+        self._mapped[slot] = need
+        self._device_tables = None
+        return True
+
+    def release(self, slot: int) -> None:
+        """Free the slot's pages and zero its block-table rows (a later
+        occupant can never read a stale mapping)."""
+        self._free.extend(reversed(self._slot_pages[slot]))
+        self._slot_pages[slot] = []
+        self._mapped[slot] = 0
+        for t in self.tables.values():
+            t[slot] = 0
+        self._device_tables = None
+
+    def device_tables(self) -> Dict[str, jnp.ndarray]:
+        """Block tables as device arrays for this decode step. Cached —
+        steady-state decode (no admission, boundary crossing or
+        release) reuses the uploaded copy instead of a per-token H2D
+        transfer in the hottest loop."""
+        if self._device_tables is None:
+            self._device_tables = {k: jnp.asarray(v)
+                                   for k, v in self.tables.items()}
+        return self._device_tables

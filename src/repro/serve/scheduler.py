@@ -111,6 +111,11 @@ class SlotScheduler:
     def submit(self, item) -> None:
         self.pending.append(item)
 
+    def requeue(self, item) -> None:
+        """Return a preempted item to the *front* of the queue (it was
+        admitted once already; FIFO order is preserved for the rest)."""
+        self.pending.appendleft(item)
+
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
@@ -118,9 +123,14 @@ class SlotScheduler:
     def n_active(self) -> int:
         return self.n_slots - len(self.free_slots())
 
-    def admit_batch(self) -> List[Tuple[int, object]]:
+    def admit_batch(self, gate=None) -> List[Tuple[int, object]]:
         """Pair pending requests with slots per the admission policy.
-        Marks the returned slots occupied."""
+        Marks the returned slots occupied.
+
+        gate: optional ``gate(item) -> bool`` resource check (the paged
+        engine's free-page watermark). Admission stops at the first
+        gated-out item — strict FIFO, so a big request at the head
+        waits for pages instead of being starved by later small ones."""
         free = self.free_slots()
         if not self.pending or not free:
             return []
@@ -130,6 +140,8 @@ class SlotScheduler:
         for slot in free:
             if not self.pending:
                 break
+            if gate is not None and not gate(self.pending[0]):
+                break                      # head-of-line: wait for pages
             item = self.pending.popleft()
             self.slots[slot] = getattr(item, "uid", -1)
             out.append((slot, item))

@@ -305,9 +305,18 @@ def batch_pspecs(cfg, batch, mesh: Mesh, grad_accum: int = 1):
 
 
 def cache_pspecs(cfg, cache, mesh: Mesh,
-                 policy: ShardingPolicy = DEFAULT):
+                 policy: ShardingPolicy = DEFAULT, paged: bool = False):
     """KV / SSM cache sharding: batch on DP axes; heads (or sequence) on
-    model. Cache leaves carry a leading layer-stack dim."""
+    model. Cache leaves carry a leading layer-stack dim.
+
+    paged: the attention leaves are page pools (serve.paging —
+    ``(L, n_pages, page_size, Hkv, hd)`` instead of a batch-indexed
+    rectangle). They shard the kv-head dim on ``model`` exactly like
+    the rectangular pool; there is no sequence-dim fallback (the page
+    dims must stay whole for block-table addressing), so non-divisible
+    head counts replicate — matching the replicated single-device
+    launch fallback of ``kernels.ops.paged_attention``. State leaves
+    (SSM / conv / image KV) stay batch-indexed and keep their specs."""
     dp = data_axes(mesh)
     tp = "model" if "model" in mesh.axis_names else None
 
@@ -319,6 +328,14 @@ def cache_pspecs(cfg, cache, mesh: Mesh,
         # (L, B, ...) — batch at dim 1
         def b_axis(i=1):
             return dp if dp and shape[i] % _axis_size(mesh, dp) == 0 else None
+
+        if paged and name in ("k", "v", "c_kv", "k_rope") \
+                and "cross_kv" not in path:
+            if name in ("k", "v"):        # (L[, G], NP, PS, Hkv, hd)
+                lead = len(shape) - 4
+                return P(*((None,) * lead), None, None,
+                         _fit(shape[-2], tp, mesh), None)
+            return P(*(None,) * len(shape))   # MLA pools: latent dims small
 
         if name in ("k", "v"):            # (L[, G], B, S, Hkv, hd)
             lead = len(shape) - 4            # layer-stack dims before batch

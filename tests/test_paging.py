@@ -1,0 +1,435 @@
+"""Paged KV cache: allocator invariants, paged-vs-rectangular greedy
+token identity (incl. page-boundary edge cases, the hybrid
+sliding-window ring and the MLA compressed cache), overcommit admission
+(queue, never crash), decode-time preemption, page-leak regression on
+uid reuse, the wave shim on a paged engine, and CPU-interpreter parity
+of the Pallas gather-attention kernel against the pure-jax oracle."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_multidevice
+
+from repro import configs
+from repro.kernels import ref
+from repro.kernels.paged_attention import paged_decode_attention
+from repro.models import transformer as T
+from repro.serve import (BatchServer, InferenceEngine, PagedKVState,
+                         Request, ServeConfig)
+from repro.serve.engine import generate
+from repro.serve.paging import (cache_page_kinds, init_paged_cache,
+                                kv_cache_bytes, page_kind)
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    # f32 so greedy argmax is identical across cache layouts
+    cfg = dataclasses.replace(configs.get_smoke("llama3.2-1b"),
+                              dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+            for n in lens]
+
+
+def _run(params, cfg, prompts, budgets, scfg, max_batch=2, max_len=32,
+         eos=None):
+    eng = InferenceEngine(params, cfg, scfg, max_batch=max_batch,
+                          max_len=max_len)
+    for uid, (p, b) in enumerate(zip(prompts, budgets)):
+        eng.submit(Request(uid, p, max_new_tokens=b,
+                           eos_id=eos.get(uid) if eos else None))
+    done = eng.run()
+    return {u: r.output for u, r in done.items()}, eng
+
+
+def _assert_paged_matches_rect(params, cfg, prompts, budgets, paged_scfg,
+                               **kw):
+    rect, _ = _run(params, cfg, prompts, budgets,
+                   ServeConfig(greedy=True, paged=False), **kw)
+    paged, eng = _run(params, cfg, prompts, budgets, paged_scfg, **kw)
+    assert eng.paged
+    for u in rect:
+        np.testing.assert_array_equal(rect[u], paged[u])
+    assert eng.kv.used_pages == 0, "drained engine must hold no pages"
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_invariants(served_model):
+    cfg, _ = served_model
+    kv = PagedKVState(cfg, max_batch=2, max_len=32, page_size=8,
+                      n_pages=9)
+    assert kv.free_pages == 8 and kv.lin_pages == 4
+    ids = kv.admit(0, 9)                       # 2 pages
+    assert list(ids) == ["linear"] and ids["linear"].shape == (4,)
+    assert (ids["linear"][:2] > 0).all() and (ids["linear"][2:] == 0).all()
+    assert 0 not in kv._slot_pages[0], "null page must never be handed out"
+    assert kv.ensure(0, 15) and kv.used_pages == 2      # row 15: page 1
+    assert kv.ensure(0, 16) and kv.used_pages == 3      # crosses into page 2
+    ids1 = kv.admit(1, 32)                     # 4 pages
+    assert kv.free_pages == 1
+    assert not kv.can_admit(9)                 # 2 pages > 1 free
+    assert set(ids1["linear"]).isdisjoint(set(kv.tables["linear"][0]) - {0})
+    kv.release(0)
+    assert (kv.tables["linear"][0] == 0).all()
+    assert kv.free_pages == 4 and kv.can_admit(9)
+    kv.release(1)
+    assert kv.used_pages == 0 and kv.peak_used_pages == 7
+
+
+def test_pool_must_fit_one_slot(served_model):
+    cfg, _ = served_model
+    with pytest.raises(ValueError, match="worst case"):
+        PagedKVState(cfg, max_batch=2, max_len=32, page_size=8, n_pages=4)
+
+
+def test_submit_rejects_unadmittable_watermark(served_model):
+    """A prompt that can never clear the admission watermark is rejected
+    at submit instead of stalling the queue forever."""
+    cfg, params = served_model
+    eng = InferenceEngine(params, cfg,
+                          ServeConfig(greedy=True, page_size=8,
+                                      kv_pool_pages=5, page_watermark=2),
+                          max_batch=2, max_len=32)
+    with pytest.raises(ValueError, match="never be admitted"):
+        eng.submit(Request(0, np.arange(1, 25, dtype=np.int32),
+                           max_new_tokens=2))
+    h = eng.submit(Request(1, np.arange(1, 9, dtype=np.int32),
+                           max_new_tokens=2))
+    assert len(h.result()) == 2
+
+
+def test_watermark_does_not_livelock_resumes(served_model):
+    """Regression: a preempted resume's grown prompt may need more
+    pages than submit() validated; the admission watermark must not
+    gate it (only fresh work), or the engine livelocks with the whole
+    pool free and nothing active."""
+    cfg, params = served_model
+    eng = InferenceEngine(params, cfg,
+                          ServeConfig(greedy=True, page_size=8,
+                                      kv_pool_pages=7, page_watermark=4),
+                          max_batch=2, max_len=48)
+    prompts = _prompts(cfg, [8, 8], seed=10)
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, max_new_tokens=20))
+    done = eng.run()
+    assert eng.stats["preemptions"] >= 1
+    for uid, p in enumerate(prompts):
+        gen, _ = generate(params, cfg, p[None],
+                          ServeConfig(max_new_tokens=20, greedy=True))
+        np.testing.assert_array_equal(done[uid].output, np.asarray(gen[0]))
+
+
+def test_page_kind_classification():
+    assert page_kind("layers/k") == "linear"
+    assert page_kind("self_layers/v") == "linear"
+    assert page_kind("layers/c_kv") == "linear"
+    assert page_kind("shared_attn/k") == "ring"
+    assert page_kind("cross_kv/k") is None
+    assert page_kind("layers/ssm") is None
+    hyb = configs.get_smoke("zamba2-1.2b")
+    assert cache_page_kinds(hyb, 32) == {"ring"}
+    assert cache_page_kinds(configs.get_smoke("mamba2-370m"), 32) == set()
+
+
+def test_pool_shapes_and_bytes(served_model):
+    cfg, _ = served_model
+    pool = init_paged_cache(cfg, 4, 32, n_pages=9, page_size=8)
+    k = pool["layers"]["k"]
+    assert k.shape[1:3] == (9, 8)
+    rect = T.init_cache(cfg, 4, 32)
+    assert kv_cache_bytes(pool) < kv_cache_bytes(rect)
+
+
+# ---------------------------------------------------------------------------
+# engine identity + page-boundary edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_paged_identity_and_boundaries(served_model):
+    """Prompt exactly k*page_size (first decode write opens a fresh
+    page), decode across page boundaries, and odd lengths — all
+    token-identical to the rectangular engine and the solo generate."""
+    cfg, params = served_model
+    lens = [8, 16, 5, 9, 12]                  # 8, 16: exactly k*page_size
+    budgets = [12, 10, 6, 9, 3]               # 12 from row 8: crosses 16
+    prompts = _prompts(cfg, lens)
+    eng = _assert_paged_matches_rect(
+        params, cfg, prompts, budgets,
+        ServeConfig(greedy=True, page_size=8))
+    for u, (p, b) in enumerate(zip(prompts, budgets)):
+        gen, _ = generate(params, cfg, p[None],
+                          ServeConfig(max_new_tokens=b, greedy=True))
+        np.testing.assert_array_equal(np.asarray(gen[0]),
+                                      eng.done[u].output)
+
+
+def test_paged_identity_default_page_size(served_model):
+    """The production default (page_size=64, clamped to max_len) is a
+    drop-in: no overcommit, no behavior change."""
+    cfg, params = served_model
+    prompts = _prompts(cfg, [5, 9, 12, 6], seed=2)
+    eng = _assert_paged_matches_rect(params, cfg, prompts, [6, 3, 8, 5],
+                                     ServeConfig(greedy=True))
+    assert eng.kv.page_size == 32 and eng.kv.lin_pages == 1
+    assert eng.stats["preemptions"] == 0 and eng.stats["page_waits"] == 0
+
+
+def test_paged_eos_and_streaming(served_model):
+    cfg, params = served_model
+    prompts = _prompts(cfg, [6, 8], seed=3)
+    ref_out, _ = _run(params, cfg, prompts, [8, 8],
+                      ServeConfig(greedy=True, paged=False))
+    eos = int(ref_out[0][2])
+    if eos in (int(ref_out[0][0]), int(ref_out[0][1])):
+        pytest.skip("greedy output repeats; eos would hit earlier")
+    paged_out, _ = _run(params, cfg, prompts, [8, 8],
+                        ServeConfig(greedy=True, page_size=8),
+                        eos={0: eos})
+    np.testing.assert_array_equal(paged_out[0], ref_out[0][:3])
+    np.testing.assert_array_equal(paged_out[1], ref_out[1])
+
+
+def test_hybrid_ring_wrap_in_paged_pool():
+    """Sliding-window ring (window < max_len so decode wraps the ring)
+    paged: token-identical to the rectangular ring."""
+    cfg = dataclasses.replace(configs.get_smoke("zamba2-1.2b"),
+                              dtype="float32", sliding_window=16)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(cfg, [5, 7], seed=4)
+    # pos reaches 5+26=31 >= virtual ring 16 -> wraps several times
+    eng = _assert_paged_matches_rect(
+        params, cfg, prompts, [26, 20],
+        ServeConfig(greedy=True, page_size=8))
+    assert eng.kv.has_ring and not eng.kv.has_linear
+    assert eng.kv.ring_pages == 2
+
+
+def test_mla_paged_identity():
+    cfg = dataclasses.replace(configs.get_smoke("deepseek-v2-lite-16b"),
+                              dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(cfg, [5, 9, 12], seed=5)
+    _assert_paged_matches_rect(params, cfg, prompts, [6, 4, 8],
+                               ServeConfig(greedy=True, page_size=8))
+
+
+def test_ssm_family_falls_back_rectangular():
+    cfg = dataclasses.replace(configs.get_smoke("mamba2-370m"),
+                              dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(params, cfg, ServeConfig(greedy=True),
+                          max_batch=2, max_len=16)
+    assert not eng.paged and eng.kv is None
+    eng.submit(Request(0, np.arange(1, 5, dtype=np.int32),
+                       max_new_tokens=3))
+    assert len(eng.run()[0].output) == 3
+
+
+# ---------------------------------------------------------------------------
+# overcommit: admission queueing, preemption, leak regression
+# ---------------------------------------------------------------------------
+
+
+def test_pool_exhaustion_queues_without_crash(served_model):
+    """A pool half the rectangle: admission gates on free pages (FIFO
+    head-of-line), everything still completes token-identically."""
+    cfg, params = served_model
+    lens = [6, 9, 5, 7, 11, 4]
+    budgets = [20, 18, 15, 12, 10, 16]
+    prompts = _prompts(cfg, lens, seed=6)
+    eng = _assert_paged_matches_rect(
+        params, cfg, prompts, budgets,
+        ServeConfig(greedy=True, page_size=4, kv_pool_pages=12),
+        max_batch=3)
+    assert eng.stats["page_waits"] > 0, "the pool never gated admission"
+    assert eng.kv.peak_used_pages <= eng.kv.n_pages - 1
+
+
+def test_decode_exhaustion_preempts_youngest(served_model):
+    """Two slots admitted cheap, then both grow: the pool runs dry
+    mid-decode, the youngest is preempted (requeued, re-prefilled) and
+    every output still matches the solo generate loop."""
+    cfg, params = served_model
+    prompts = _prompts(cfg, [4, 4], seed=7)
+    out, eng = _run(params, cfg, prompts, [24, 24],
+                    ServeConfig(greedy=True, page_size=4,
+                                kv_pool_pages=9), max_len=32)
+    assert eng.stats["preemptions"] >= 1
+    # youngest-first: the first-admitted request is never evicted (its
+    # admission step never moves), the younger one is re-admitted later
+    assert eng.admission_step[0] == 0
+    assert eng.admission_step[1] > 0
+    for u, p in enumerate(prompts):
+        gen, _ = generate(params, cfg, p[None],
+                          ServeConfig(max_new_tokens=24, greedy=True))
+        np.testing.assert_array_equal(out[u], np.asarray(gen[0]))
+    assert eng.kv.used_pages == 0
+
+
+def test_uid_reuse_cannot_leak_pages_or_read_stale_tables(served_model):
+    """Regression (satellite): completion frees the slot's pages and
+    zeroes its block-table rows; reusing the uid after clear_finished()
+    allocates fresh pages and reproduces the fresh-engine output."""
+    cfg, params = served_model
+    eng = InferenceEngine(params, cfg,
+                          ServeConfig(greedy=True, page_size=4),
+                          max_batch=1, max_len=32)
+    p = _prompts(cfg, [9], seed=8)[0]
+    first = eng.submit(Request(0, p, max_new_tokens=6)).result()
+    assert eng.kv.used_pages == 0, "completion must free pages"
+    assert all((t == 0).all() for t in eng.kv.tables.values()), \
+        "stale block-table rows survived completion"
+    eng.clear_finished()
+    assert not eng.done and eng.kv.used_pages == 0
+    again = eng.submit(Request(0, p, max_new_tokens=6)).result()
+    np.testing.assert_array_equal(first, again)
+    # prompt 9 rows + 6 generated = 15 rows -> never more than 4 pages
+    assert eng.kv.used_pages == 0 and eng.kv.peak_used_pages == 4
+
+
+def test_wave_shim_runs_on_paged_engine(served_model):
+    """Satellite: the deprecated BatchServer drives whichever cache
+    layout the engine was built with — paged (default) and rectangular
+    waves produce identical greedy outputs."""
+    cfg, params = served_model
+    prompts = _prompts(cfg, [4, 11, 7, 9], seed=9)
+    budgets = [5, 2, 7, 4]
+    outs = {}
+    for name, scfg in (("paged", ServeConfig(greedy=True, page_size=8)),
+                       ("rect", ServeConfig(greedy=True, paged=False))):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            srv = BatchServer(params, cfg, scfg, max_batch=2, max_len=32)
+        for uid, (p, b) in enumerate(zip(prompts, budgets)):
+            srv.submit(Request(uid, p, max_new_tokens=b))
+        outs[name] = srv.run()
+    assert srv.engine.paged is False
+    for uid in range(len(prompts)):
+        np.testing.assert_array_equal(outs["paged"][uid].output,
+                                      outs["rect"][uid].output)
+
+
+# ---------------------------------------------------------------------------
+# Pallas gather kernel: CPU-interpreter parity vs the pure-jax oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,D,NP,PS,pages,window,ring", [
+    (3, 4, 2, 16, 9, 8, 4, 0, False),        # GQA, linear
+    (2, 8, 8, 16, 17, 4, 6, 0, False),       # MHA, many small pages
+    (2, 4, 2, 16, 9, 8, 2, 6, True),         # sliding-window ring wrap
+    (1, 4, 4, 32, 5, 16, 3, 10, False),      # windowed linear
+])
+def test_paged_kernel_matches_ref(B, Hq, Hkv, D, NP, PS, pages, window,
+                                  ring):
+    rng = np.random.default_rng(B * 100 + pages)
+    kp = jnp.asarray(rng.standard_normal((NP, PS, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((NP, PS, Hkv, D)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, D)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, NP, size=(B, pages)), jnp.int32)
+    rows = pages * PS
+    q_pos = jnp.asarray(rng.integers(1, rows + 20, size=(B,)), jnp.int32)
+    cache_pos = q_pos % rows if ring else jnp.minimum(q_pos, rows - 1)
+    want = ref.paged_attention_ref(q, kp, vp, bt, q_pos, cache_pos,
+                                   window=window, scale=0.125)
+    got = paged_decode_attention(q, kp, vp, bt, q_pos, cache_pos,
+                                 window=window, scale=0.125,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_ref_matches_rectangular_sdpa():
+    """The gather oracle == attention over the equivalent rectangle."""
+    from repro.models import layers as L
+    rng = np.random.default_rng(3)
+    B, Hq, Hkv, D, PS, pages = 2, 4, 2, 8, 4, 3
+    rows = pages * PS
+    # build a rectangle, then scatter it into pages per a block table
+    k_rect = jnp.asarray(rng.standard_normal((B, rows, Hkv, D)), jnp.float32)
+    v_rect = jnp.asarray(rng.standard_normal((B, rows, Hkv, D)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, D)), jnp.float32)
+    NP = B * pages + 1
+    bt = np.zeros((B, pages), np.int32)
+    kp = np.zeros((NP, PS, Hkv, D), np.float32)
+    vp = np.zeros((NP, PS, Hkv, D), np.float32)
+    page = 1
+    for b in range(B):
+        for j in range(pages):
+            bt[b, j] = page
+            kp[page] = np.asarray(k_rect[b, j * PS:(j + 1) * PS])
+            vp[page] = np.asarray(v_rect[b, j * PS:(j + 1) * PS])
+            page += 1
+    q_pos = jnp.asarray([5, rows - 1], jnp.int32)
+    msk = L._decode_mask(q_pos[:, None], q_pos, rows, 0)
+    want = L.sdpa(q, k_rect, v_rect, msk, 0.3)
+    got = ref.paged_attention_ref(q, jnp.asarray(kp), jnp.asarray(vp),
+                                  jnp.asarray(bt), q_pos, q_pos,
+                                  window=0, scale=0.3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel paged engine (forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_paged_tp_engine_token_identity():
+    """Satellite: paged pool + 2-way tensor parallelism (pool kv-head
+    dim sharded per sharding.rules, cache_pspecs(paged=True)) is greedy
+    token-identical to the *rectangular unsharded* engine — mirroring
+    test_engine.py::test_sharded_engine_token_identity but crossing
+    both the layout and the mesh axis at once."""
+    out = run_multidevice("""
+        import dataclasses, jax, numpy as np
+        from repro.launch.mesh import make_serving_mesh
+        from repro.models import transformer as T
+        from repro.models.config import ModelConfig
+        from repro.serve.engine import InferenceEngine, ServeConfig
+        from repro.serve.scheduler import Request
+
+        cfg = ModelConfig(name="tiny", family="dense", n_layers=2,
+                          d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                          vocab_size=256, loss_chunk=0, remat=False,
+                          dtype="float32")
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        prompts = [np.arange(1, 7, dtype=np.int32),
+                   np.arange(3, 12, dtype=np.int32),
+                   np.arange(2, 10, dtype=np.int32)]
+        budgets = [6, 3, 5]
+
+        def run(scfg, mesh):
+            eng = InferenceEngine(params, cfg, scfg, max_batch=2,
+                                  max_len=32, mesh=mesh)
+            for uid, (p, b) in enumerate(zip(prompts, budgets)):
+                eng.submit(Request(uid, p, max_new_tokens=b))
+            return {u: r.output for u, r in eng.run().items()}, eng
+
+        ref, _ = run(ServeConfig(greedy=True, paged=False), None)
+        got, eng = run(ServeConfig(greedy=True, page_size=8),
+                       make_serving_mesh(2))
+        assert eng.paged and eng.mesh is not None
+        # the page pool really is kv-head-sharded on the model axis
+        # (trailing None may be trimmed from the spec)
+        spec = tuple(eng.cache["layers"]["k"].sharding.spec)
+        assert spec[:4] == (None, None, None, "model"), spec
+        for u in ref:
+            np.testing.assert_array_equal(ref[u], got[u])
+        print("paged TP token-identity OK")
+    """, devices=2)
+    assert "OK" in out
