@@ -20,12 +20,23 @@ peak KV-pool bytes <= 50%, and strictly higher admitted concurrency
 under the equal-byte budget; emits
 ``experiments/bench/BENCH_serve_paged.json``.
 
+The speculative section (``--spec`` runs it alone) races the
+non-speculative engine against the rank-truncated draft + batched
+verification subsystem (serve.speculative) on two quantized teachers:
+the TINY acceptance ladder over ``spec_rank_frac`` and the SMALL
+long-generation amortization race (>= 1.5x decode tok/s gate on the
+full run). Greedy token identity is asserted at every point, including
+a ``--tp N`` chain; emits ``experiments/bench/BENCH_serve_spec.json``
+(smoke: ``BENCH_serve_spec_smoke.json`` — never the full baseline).
+
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--tp N]
+        [--spec]
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import sys
 import time
 
@@ -83,10 +94,10 @@ def build_pressure_trace(rng, n_long, n_short, vocab):
 
 
 def drive(mode, params, cfg, trace, mesh=None, scfg=None,
-          max_batch=MAX_BATCH):
+          max_batch=MAX_BATCH, max_len=MAX_LEN):
     """Run one admission policy over the trace; returns a metrics row."""
     eng = InferenceEngine(params, cfg, scfg or ServeConfig(greedy=True),
-                          max_batch=max_batch, max_len=MAX_LEN,
+                          max_batch=max_batch, max_len=max_len,
                           admission=mode, mesh=mesh)
     # warm every prompt-length bucket + the decode step so the timed
     # region measures scheduling, not XLA compiles. Budget 2 (not 1):
@@ -94,11 +105,11 @@ def drive(mode, params, cfg, trace, mesh=None, scfg=None,
     # and would leave the decode step untraced. The warm prompt length
     # is clamped below max_len (submit rejects n >= max_len) but still
     # pads to the same bucket.
-    buckets = sorted({bucket_length(len(r.prompt), MAX_LEN)
+    buckets = sorted({bucket_length(len(r.prompt), max_len)
                       for _, r in trace})
     for i, b in enumerate(buckets):
         eng.submit(Request(-1 - i,
-                           np.zeros((min(b, MAX_LEN - 2),), np.int32),
+                           np.zeros((min(b, max_len - 2),), np.int32),
                            max_new_tokens=2))
     eng.run()
     assert eng.stats["decode_traces"], "warm-up must trace the decode step"
@@ -116,11 +127,16 @@ def drive(mode, params, cfg, trace, mesh=None, scfg=None,
 
     lats = np.asarray(sorted(h.latency for h in handles.values()))
     tokens = sum(len(eng.done[uid].output) for uid in handles)
-    return {
+    dts = eng.stats["decode_time_s"]
+    row = {
         "engine": mode if mesh is None else f"{mode}-tp{mesh.shape['model']}",
         "requests": len(handles),
         "tokens": tokens,
         "tok_per_s": tokens / dt,
+        # decode-loop throughput: tokens over wall time spent inside the
+        # decode/speculative tick only (excludes prefill + admission),
+        # the quantity speculative decoding accelerates
+        "decode_tok_s": tokens / dts if dts else 0.0,
         "mean_latency_s": float(lats.mean()),
         "p95_latency_s": float(np.percentile(lats, 95)),
         "decode_steps": eng.stats["decode_steps"],
@@ -128,8 +144,23 @@ def drive(mode, params, cfg, trace, mesh=None, scfg=None,
         "kv_bytes": eng.kv_cache_bytes(),
         "peak_active": eng.stats["peak_active"],
         "preemptions": eng.stats["preemptions"],
+        # recompute cost of preemption resume, in replayed token
+        # positions — the same unit as spec_rollback_tokens below, so
+        # rollback cost and preemption cost are directly comparable
+        "preempt_recompute_tokens": eng.stats["preempt_recompute_tokens"],
         "page_waits": eng.stats["page_waits"],
-    }, {uid: eng.done[uid].output for uid in handles}
+    }
+    if eng.spec is not None:
+        row.update({
+            "spec_rank_frac": eng.scfg.spec_rank_frac,
+            "spec_k": eng.scfg.spec_k,
+            "spec_k_final": eng.spec.k,
+            "accept_rate": eng.spec.acceptance_rate(),
+            "spec_cycles": eng.stats["spec_cycles"],
+            "spec_rollback_tokens": eng.stats["spec_rollback_tokens"],
+            "spec_rollback_pages": eng.stats["spec_rollback_pages"],
+        })
+    return row, {uid: eng.done[uid].output for uid in handles}
 
 
 def run_paged(smoke: bool = False):
@@ -183,6 +214,131 @@ def run_paged(smoke: bool = False):
     assert ratio <= 0.5, f"paged pool bytes ratio {ratio:.2f} > 0.5"
     assert by["paged-half"]["peak_active"] > by["rect-budget"]["peak_active"], \
         "overcommit must admit strictly more concurrency per KV byte"
+
+
+# the amortization race runs a SMALLER quantized model than TINY: the
+# speculative win at full rank is dispatch amortization (k+1 committed
+# tokens per device call), which only shows once per-call launch
+# overhead rivals the forward's compute — true for SMALL on CPU, not
+# for the d_model=256 TINY
+SMALL = dataclasses.replace(common.TINY, name="bench-small", d_model=64,
+                            d_ff=128)
+
+
+@functools.lru_cache(maxsize=2)
+def _quantized(cfg):
+    """NanoQuant-quantize a trained f32 bench teacher once per process
+    (the spec race needs *packed* params — rank truncation is defined
+    on the low-rank binary factors — and a trained teacher, so draft
+    acceptance measures the factorization's accuracy ladder, not argmax
+    coin flips on a random-init model's near-uniform logits)."""
+    from repro import api
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    _, params, _ = common.teacher(cfg=cfg)
+    qcfg = api.QuantConfig(admm_iters=10, t_pre=5, t_post=5, t_glob=5,
+                           rank_align=32)
+    model = api.NanoQuantModel.quantize(params, cfg, common.calib(cfg),
+                                        qcfg, verbose=False)
+    return model.params
+
+
+def _spec_race(label, cfg, smoke, points, dynamic=None, tp=1,
+               max_prompt=12, max_new=14, max_len=MAX_LEN):
+    """One model's speculative race: base engine + pinned-k spec points
+    (identity asserted at every point — the verifier is full-rank, so
+    outputs cannot depend on the draft). Returns (rows, best_speedup).
+
+    k is pinned per row (spec_k_min == spec_k): the dynamic-k
+    controller recompiles the fused cycle at every new k, which would
+    bill XLA compiles to the timed region; `dynamic` adds one
+    free-controller row with no throughput claim. Prompts are shorter
+    than the scheduler race's: headroom for the drafts (the controller
+    caps k at max_len-1-pos over active slots, and a cap change would
+    also recompile mid-race)."""
+    qparams = _quantized(cfg)
+    rng = np.random.default_rng(23)
+    trace = build_trace(rng, 10 if smoke else 24, cfg.vocab_size,
+                        max_prompt=max_prompt, max_new=max_new)
+    scfg = ServeConfig(greedy=True, page_size=PAGE_SIZE)
+    base_row, base_out = drive("continuous", qparams, cfg, trace,
+                               scfg=scfg, max_len=max_len)
+    base_row["engine"] = f"{label}-base"
+    rows = [base_row]
+
+    def race(engine, s, mesh=None):
+        row, out = drive("continuous", qparams, cfg, trace, scfg=s,
+                         mesh=mesh, max_len=max_len)
+        row["engine"] = engine
+        assert all(np.array_equal(base_out[u], out[u])
+                   for u in base_out), f"{engine} diverged from {label}-base"
+        rows.append(row)
+
+    for frac, k in points:
+        race(f"{label}-spec-r{frac}-k{k}",
+             dataclasses.replace(scfg, spec_rank_frac=frac, spec_k=k,
+                                 spec_k_min=k))
+    if dynamic is not None:
+        frac, k = dynamic
+        race(f"{label}-spec-dynamic-r{frac}",
+             dataclasses.replace(scfg, spec_rank_frac=frac, spec_k=k,
+                                 spec_k_min=1))
+    if tp > 1:
+        from repro.launch.mesh import make_serving_mesh
+        race(f"{label}-spec-r1.0-k4-tp{tp}",
+             dataclasses.replace(scfg, spec_rank_frac=1.0, spec_k=4,
+                                 spec_k_min=4), mesh=make_serving_mesh(tp))
+
+    for r in rows:
+        r["model"] = f"{label}(d={cfg.d_model})"
+    for r in rows[1:]:
+        print(f"  {r['engine']}: accept={r.get('accept_rate', 0.0):.2f} "
+              f"decode {r['decode_tok_s']:.1f} tok/s (base "
+              f"{base_row['decode_tok_s']:.1f}), rollback "
+              f"{r.get('spec_rollback_tokens', 0)} tokens / "
+              f"{r.get('spec_rollback_pages', 0)} pages")
+    pinned = rows[1:1 + len(points)]
+    return rows, max(r["decode_tok_s"] / base_row["decode_tok_s"]
+                     for r in pinned)
+
+
+def run_spec(smoke: bool = False, tp: int = 1):
+    """Self-speculative decoding races (serve.speculative), two models:
+
+    * **ladder** (TINY, d=256): acceptance rate vs rank fraction. The
+      binary factors share per-row/column scales, so every rank
+      component carries similar weight — truncation degrades the argmax
+      sharply, and the ladder documents that honestly.
+    * **amortization** (SMALL, d=64): the throughput claim, on a
+      long-generation trace (budgets up to 40 tokens amortize each
+      request's final partially-wasted cycle). At spec_rank_frac=1.0
+      the draft IS the full model (acceptance 1.0 by construction) and
+      each fused cycle commits k+1 tokens per device call; the full
+      run requires >= 1.5x decode tok/s vs the non-speculative engine
+      at some pinned (frac, k) point.
+
+    Greedy token identity is asserted at EVERY point of both races,
+    including a tensor-parallel chain when tp > 1."""
+    lrows, _ = _spec_race(
+        "tiny", dataclasses.replace(common.TINY, dtype="float32"), smoke,
+        points=([(0.5, 4)] if smoke else
+                [(0.33, 4), (0.5, 4), (0.75, 4), (1.0, 4)]),
+        dynamic=None if smoke else (0.75, 4),
+        tp=tp)
+    arows, best = _spec_race(
+        "small", dataclasses.replace(SMALL, dtype="float32"), smoke,
+        points=([(1.0, 4)] if smoke else [(1.0, 2), (1.0, 4), (1.0, 8)]),
+        max_prompt=8, max_new=24 if smoke else 40, max_len=64)
+    rows = lrows + arows
+    common.emit("BENCH_serve_spec_smoke" if smoke else "BENCH_serve_spec",
+                rows, keys=list(arows[1].keys()))
+    print(f"speculative decode best speedup (SMALL, pinned k): "
+          f"{best:.2f}x decode tok/s")
+    if best < 1.5:
+        # wall-clock gate: hard on the checked-in full run, warn in the
+        # CI smoke (loaded boxes skew the tiny trace)
+        msg = f"best speculative decode speedup {best:.2f}x < 1.5x"
+        assert smoke, msg
+        print(f"[serve_bench] WARNING: {msg}")
 
 
 def run(smoke: bool = False, tp: int = 1):
@@ -276,6 +432,7 @@ def run(smoke: bool = False, tp: int = 1):
         print(f"[serve_bench] WARNING: {msg}")
 
     run_paged(smoke=smoke)
+    run_spec(smoke=smoke, tp=tp)
 
 
 def main() -> int:
@@ -288,8 +445,14 @@ def main() -> int:
                          "identity (needs N devices; on CPU set "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N)")
+    ap.add_argument("--spec", action="store_true",
+                    help="run only the speculative-decode race "
+                         "(BENCH_serve_spec[_smoke].json)")
     args = ap.parse_args()
-    run(smoke=args.smoke, tp=args.tp)
+    if args.spec:
+        run_spec(smoke=args.smoke, tp=args.tp)
+    else:
+        run(smoke=args.smoke, tp=args.tp)
     return 0
 
 

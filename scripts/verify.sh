@@ -26,9 +26,12 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m repro.launch.serve --quantized-ckpt "$OUT" \
     --requests 2 --prompt-len 8 --max-new 4 --max-batch 2
   rm -rf "$OUT"
-  echo "== CPU smoke: serving scheduler (wave vs continuous) + sharded engine + paged KV =="
+  echo "== CPU smoke: serving scheduler (wave vs continuous) + sharded engine + paged KV + speculative decode =="
   # also gates the paged-vs-rectangular memory-pressure race (token
-  # identity, <=50% KV-pool bytes, higher admitted concurrency)
+  # identity, <=50% KV-pool bytes, higher admitted concurrency) and the
+  # speculative-decode race (greedy token identity at every
+  # (spec_rank_frac, k) point incl. the tp=2 chain; smoke writes
+  # BENCH_serve_spec_smoke.json, never the full-run baseline)
   XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
     python -m benchmarks.serve_bench --smoke --tp 2
   echo "== CPU smoke: kernel wall-clock (two-call vs fused) =="

@@ -132,7 +132,9 @@ class NanoQuantModel:
     def engine(self, scfg: Optional[ServeConfig] = None, max_batch: int = 8,
                max_len: int = 512, seed: int = 0,
                admission: str = "continuous", mesh=None,
-               sharding_policy=None) -> InferenceEngine:
+               sharding_policy=None,
+               spec_rank_frac: Optional[float] = None,
+               spec_k: Optional[int] = None) -> InferenceEngine:
         """The serving entry point: a slot-scheduled, continuously
         batched :class:`InferenceEngine` over this model
         (`submit(req) -> handle`, per-token streaming, `step()` /
@@ -144,9 +146,21 @@ class NanoQuantModel:
         per ``sharding.rules`` and the fused kernels launch through
         shard_map — greedy outputs stay token-identical to the
         unsharded engine in f32 (bf16 near-ties can flip under
-        partitioned-reduction reorder; see docs/serving.md)."""
+        partitioned-reduction reorder; see docs/serving.md).
+
+        `spec_rank_frac` / `spec_k` switch on self-speculative decoding
+        (serve.speculative): draft through a zero-copy rank-truncated
+        view of the packed params, verify in one batched full-rank
+        forward — greedy outputs stay token-identical. They override
+        the matching ``ServeConfig`` fields (requires greedy=True and
+        the paged cache)."""
+        scfg = scfg or ServeConfig()
+        if spec_rank_frac is not None:
+            scfg = dataclasses.replace(scfg, spec_rank_frac=spec_rank_frac)
+        if spec_k is not None:
+            scfg = dataclasses.replace(scfg, spec_k=spec_k)
         return InferenceEngine(self.params, self.cfg,
-                               scfg or ServeConfig(), max_batch=max_batch,
+                               scfg, max_batch=max_batch,
                                max_len=max_len, seed=seed,
                                admission=admission, mesh=mesh,
                                sharding_policy=sharding_policy)

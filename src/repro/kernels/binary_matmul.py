@@ -183,6 +183,7 @@ def _fused_kernel(x_ref, qv_ref, qu_ref, s2_ref, s1_ref, rm_ref, o_ref,
 def fused_lowrank_matmul_grouped(xg, qv_g, qu_g, s1_g, s2_g, rmask_g=None, *,
                                  x_shared: bool = False, bm: int = 128,
                                  bn: int = 128, bk: int = 512,
+                                 eff_rank: int | None = None,
                                  interpret: bool = False):
     """One fused pass over G grouped low-rank binary linears.
 
@@ -192,6 +193,13 @@ def fused_lowrank_matmul_grouped(xg, qv_g, qu_g, s1_g, s2_g, rmask_g=None, *,
     s1_g:    (G, N); s2_g: (G, K); rmask_g: (G, R) f32 zeroing rank
              columns past a group's true rank (merged groups pad every
              projection to the widest rank; None => all ranks real).
+    eff_rank: optional effective rank R' <= R (multiple of 32). The
+             launch then reads only the leading R' rank columns of the
+             FULL packed operands via BlockSpec sub-extents — the HBM
+             arrays are untouched (zero-copy rank truncation for the
+             speculative draft pass, see serve.speculative). Components
+             past R' are simply never streamed into VMEM, so the result
+             equals the full launch with a ``arange(R) < R'`` rmask.
 
     Returns (G, M, N) in xg.dtype. Stage-1 accumulates into a (bm, R)
     VMEM scratch; stage 2 consumes it in place — no HBM traffic for the
@@ -203,6 +211,14 @@ def fused_lowrank_matmul_grouped(xg, qv_g, qu_g, s1_g, s2_g, rmask_g=None, *,
     assert qv_g.shape[1] * 32 == K, (qv_g.shape, K)
     assert qu_g.shape[1] * 32 == R, (qu_g.shape, R)
     assert Gx == (1 if x_shared else G)
+    if eff_rank is not None:
+        if not (0 < eff_rank <= R and eff_rank % 32 == 0):
+            raise ValueError(
+                f"eff_rank must be a multiple of 32 in (0, {R}], "
+                f"got {eff_rank}")
+        R_eff = int(eff_rank)
+    else:
+        R_eff = R
     if rmask_g is None:
         rmask_g = jnp.ones((G, R), jnp.float32)
 
@@ -236,23 +252,28 @@ def fused_lowrank_matmul_grouped(xg, qv_g, qu_g, s1_g, s2_g, rmask_g=None, *,
     def _j(g, i, s):
         return jnp.maximum(s - n_k, 0)
 
+    # With eff_rank, the qv / qu_t / rmask blocks are SUB-EXTENTS of the
+    # full HBM operands: block index 0 on the rank axis selects the
+    # leading R_eff (or R_eff // 32 packed) entries; the trailing
+    # R - R_eff components never leave HBM.
     out = pl.pallas_call(
-        functools.partial(_fused_kernel, n_k=n_k, bk=bk, r=R),
+        functools.partial(_fused_kernel, n_k=n_k, bk=bk, r=R_eff),
         grid=(G, n_m, n_k + n_n),
         in_specs=[
             pl.BlockSpec((1, bm, bk),
                          (lambda g, i, s: (0, i, _k(g, i, s))) if x_shared
                          else (lambda g, i, s: (g, i, _k(g, i, s)))),
-            pl.BlockSpec((1, Kp // 32 // n_k, R),
+            pl.BlockSpec((1, Kp // 32 // n_k, R_eff),
                          lambda g, i, s: (g, _k(g, i, s), 0)),
-            pl.BlockSpec((1, R // 32, bn), lambda g, i, s: (g, 0, _j(g, i, s))),
+            pl.BlockSpec((1, R_eff // 32, bn),
+                         lambda g, i, s: (g, 0, _j(g, i, s))),
             pl.BlockSpec((1, 1, bk), lambda g, i, s: (g, 0, _k(g, i, s))),
             pl.BlockSpec((1, 1, bn), lambda g, i, s: (g, 0, _j(g, i, s))),
-            pl.BlockSpec((1, 1, R), lambda g, i, s: (g, 0, 0)),
+            pl.BlockSpec((1, 1, R_eff), lambda g, i, s: (g, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, s: (g, i, _j(g, i, s))),
         out_shape=jax.ShapeDtypeStruct((G, Mp, Np), xg.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, R), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, R_eff), jnp.float32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
@@ -261,12 +282,14 @@ def fused_lowrank_matmul_grouped(xg, qv_g, qu_g, s1_g, s2_g, rmask_g=None, *,
 
 
 def fused_lowrank_matmul(x, qv, qu_t, s1, s2, *, interpret=False,
-                         bm=128, bn=128, bk=512):
+                         bm=128, bn=128, bk=512, eff_rank=None):
     """Single-linear fused NanoQuant matmul: one pallas_call, the rank-r
-    intermediate lives only in VMEM. x: (..., d_in) -> (..., d_out)."""
+    intermediate lives only in VMEM. x: (..., d_in) -> (..., d_out).
+    ``eff_rank`` truncates the launch to the leading R' rank columns
+    without touching the packed operands (see the grouped form)."""
     shape = x.shape
     x2 = x.reshape(1, -1, shape[-1])
     y = fused_lowrank_matmul_grouped(
         x2, qv[None], qu_t[None], s1[None], s2[None], x_shared=True,
-        bm=bm, bn=bn, bk=bk, interpret=interpret)[0]
+        bm=bm, bn=bn, bk=bk, eff_rank=eff_rank, interpret=interpret)[0]
     return y.reshape(*shape[:-1], y.shape[-1])

@@ -47,6 +47,7 @@ from __future__ import annotations
 import contextlib
 import contextvars
 import dataclasses
+import functools
 import warnings
 from typing import Any, Optional, Sequence, Tuple, Union
 
@@ -176,19 +177,37 @@ def _match_packed_k(x, qv):
     return jnp.pad(x, pad)
 
 
-def _local_lowrank(x, qv, qu_t, s1, s2, p: KernelPolicy):
+def _slice_rank(qv, qu_t, eff_rank: int):
+    """In-trace rank truncation for the non-fused paths: keep the
+    leading ``eff_rank`` rank columns of packed V (last axis) and the
+    leading ``eff_rank // 32`` packed rows of Uᵀ. Pure slices — XLA
+    reads sub-extents of the stored operands, no repack (the fused
+    pallas launch does the same thing via BlockSpec sub-extents)."""
+    r = qv.shape[-1]
+    if not (0 < eff_rank <= r and eff_rank % 32 == 0):
+        raise ValueError(f"eff_rank must be a multiple of 32 in (0, {r}], "
+                         f"got {eff_rank}")
+    return qv[..., :eff_rank], qu_t[..., :eff_rank // 32, :]
+
+
+def _local_lowrank(x, qv, qu_t, s1, s2, p: KernelPolicy, eff_rank=None):
     """Single-device dispatch (x already matched to the packed K)."""
     if p.use_pallas():
         r = qv.shape[-1]
         M = x.size // x.shape[-1]
-        bm, bn, bk = p.block_sizes(M, x.shape[-1], qu_t.shape[-1], r,
-                                   x.dtype)
+        bm, bn, bk = p.block_sizes(M, x.shape[-1], qu_t.shape[-1],
+                                   eff_rank or r, x.dtype)
         interp = p.resolve_interpret()
         if p.fused and r <= binary_matmul.MAX_FUSED_RANK:
             return binary_matmul.fused_lowrank_matmul(
-                x, qv, qu_t, s1, s2, bm=bm, bn=bn, bk=bk, interpret=interp)
+                x, qv, qu_t, s1, s2, bm=bm, bn=bn, bk=bk,
+                eff_rank=eff_rank, interpret=interp)
+        if eff_rank is not None:
+            qv, qu_t = _slice_rank(qv, qu_t, eff_rank)
         return binary_matmul.lowrank_binary_matmul_twocall(
             x, qv, qu_t, s1, s2, bm=bm, bn=bn, bk=bk, interpret=interp)
+    if eff_rank is not None:
+        qv, qu_t = _slice_rank(qv, qu_t, eff_rank)
     return ref.lowrank_binary_matmul_ref(x, qv, qu_t, s1, s2)
 
 
@@ -209,7 +228,8 @@ def _shard_launch(p: KernelPolicy, local, in_specs, out_specs, *operands,
                             out_specs=out_specs)(*operands)
 
 
-def _tp_lowrank(x, qv, qu_t, s1, s2, p: KernelPolicy, role: str):
+def _tp_lowrank(x, qv, qu_t, s1, s2, p: KernelPolicy, role: str,
+                eff_rank=None):
     """shard_map launch over the policy mesh (Megatron pairing):
 
     - col: U/s1 arrive d_out-sharded, each device runs the whole fused
@@ -222,14 +242,18 @@ def _tp_lowrank(x, qv, qu_t, s1, s2, p: KernelPolicy, role: str):
     divisibility fallback of ``sharding.rules``)."""
     ax, n = p.tp_axis, p.tp_size()
     lead = (None,) * (x.ndim - 1)
+    # rank axes (qv last, qu_t leading packed) are never the sharded
+    # dims, so eff_rank truncation composes with either TP role.
+    local = functools.partial(_local_lowrank, eff_rank=eff_rank) \
+        if eff_rank is not None else _local_lowrank
     if role == "col" and qu_t.shape[-1] % n == 0:
         return _shard_launch(
-            p, _local_lowrank,
+            p, local,
             (P(*lead, None), P(None, None), P(None, ax), P(ax), P(None)),
             P(*lead, ax), x, qv, qu_t, s1, s2)
     if role == "row" and qv.shape[-2] % n == 0:
         return _shard_launch(
-            p, _local_lowrank,
+            p, local,
             (P(*lead, ax), P(ax, None), P(None, None), P(None), P(ax)),
             P(*lead, None), x, qv, qu_t, s1, s2, reduce_axis=ax)
     return None
@@ -237,25 +261,33 @@ def _tp_lowrank(x, qv, qu_t, s1, s2, p: KernelPolicy, role: str):
 
 def lowrank_binary_matmul(x, qv, qu_t, s1, s2,
                           policy: Optional[KernelPolicy] = None,
-                          tp: Optional[str] = None):
+                          tp: Optional[str] = None,
+                          eff_rank: Optional[int] = None):
     """y = s1 ⊙ ((x ⊙ s2) @ V±1) @ U±1ᵀ  — packed operands (paper Eq. 1).
 
     Dispatches per `policy` (explicit argument wins, else the active
     contextvar policy). `tp`: this linear's Megatron role ('col' |
     'row' | None, see ``sharding.rules.tp_role``) — only consulted when
     the policy carries a mesh, in which case the kernel is launched
-    through ``shard_map`` on the policy's tensor-parallel axis."""
+    through ``shard_map`` on the policy's tensor-parallel axis.
+    `eff_rank`: optional effective rank R' <= r (multiple of 32) — the
+    launch reads only the leading R' singular components of the packed
+    factors (BlockSpec sub-extents on the fused pallas path, in-trace
+    slices elsewhere; the stored operands are never repacked). Equals
+    zeroing the trailing r - R' components: the rank-truncated draft
+    forward of ``serve.speculative``."""
     p = policy if policy is not None else current_kernel_policy()
     x = _match_packed_k(x, qv)
     if p.tp_size() > 1 and tp in ("col", "row") and qv.ndim == 2:
-        y = _tp_lowrank(x, qv, qu_t, s1, s2, p, tp)
+        y = _tp_lowrank(x, qv, qu_t, s1, s2, p, tp, eff_rank=eff_rank)
         if y is not None:
             return y
-    return _local_lowrank(x, qv, qu_t, s1, s2, p)
+    return _local_lowrank(x, qv, qu_t, s1, s2, p, eff_rank=eff_rank)
 
 
 def lowrank_binary_matmul_merged(x, mp, dims: Sequence[int],
-                                 policy: Optional[KernelPolicy] = None):
+                                 policy: Optional[KernelPolicy] = None,
+                                 eff_rank: Optional[int] = None):
     """Grouped projections sharing one input (QKV / gate-up): ONE kernel
     launch instead of len(dims).
 
@@ -282,6 +314,8 @@ def lowrank_binary_matmul_merged(x, mp, dims: Sequence[int],
     if rmask is None:
         rmask = jnp.ones((mp["qv"].shape[0], R), jnp.float32)
     yg = None
+    local = functools.partial(_local_merged, eff_rank=eff_rank) \
+        if eff_rank is not None else _local_merged
     if p.tp_size() > 1 and mp["qv"].ndim == 3 \
             and mp["qu_t"].shape[-1] % p.tp_size() == 0:
         # merged groups are all column-parallel (QKV / gate-up): the
@@ -290,69 +324,82 @@ def lowrank_binary_matmul_merged(x, mp, dims: Sequence[int],
         # read the global (sharded) result.
         ax = p.tp_axis
         yg = _shard_launch(
-            p, _local_merged,
+            p, local,
             (P(None, None, None), P(None, None, None), P(None, None, ax),
              P(None, ax), P(None, None), P(None, None)),
             P(None, None, ax),
             x2, mp["qv"], mp["qu_t"], mp["s1"], mp["s2"], rmask)
     if yg is None:
-        yg = _local_merged(x2, mp["qv"], mp["qu_t"], mp["s1"], mp["s2"],
-                           rmask, p)
+        yg = local(x2, mp["qv"], mp["qu_t"], mp["s1"], mp["s2"], rmask, p)
     return [yg[i, :, :n].reshape(*shape[:-1], n)
             for i, n in enumerate(dims)]
 
 
-def _local_merged(x2, qv, qu_t, s1, s2, rmask, p: KernelPolicy):
+def _local_merged(x2, qv, qu_t, s1, s2, rmask, p: KernelPolicy,
+                  eff_rank=None):
     """Single-device grouped launch shared by the plain and shard_map
-    paths (x2: (1, M, K) shared input; operands carry the group axis)."""
+    paths (x2: (1, M, K) shared input; operands carry the group axis).
+    eff_rank truncates every group to its leading min(eff_rank, true
+    rank) components — the rmask already zeros past each group's true
+    rank, so truncation just caps the shared padded rank R."""
     R = qv.shape[-1]
     if p.use_pallas() and p.fused and R <= binary_matmul.MAX_FUSED_RANK:
         M = x2.shape[1]
-        bm, bn, bk = p.block_sizes(M, x2.shape[-1], qu_t.shape[-1], R,
-                                   x2.dtype)
+        bm, bn, bk = p.block_sizes(M, x2.shape[-1], qu_t.shape[-1],
+                                   eff_rank or R, x2.dtype)
         return binary_matmul.fused_lowrank_matmul_grouped(
             x2, qv, qu_t, s1, s2, rmask, x_shared=True,
-            bm=bm, bn=bn, bk=bk, interpret=p.resolve_interpret())
+            bm=bm, bn=bn, bk=bk, eff_rank=eff_rank,
+            interpret=p.resolve_interpret())
     return jax.vmap(
         lambda v, u, a, b, rm: ref.lowrank_binary_matmul_fused_ref(
-            x2[0], v, u, a, b, rm),
+            x2[0], v, u, a, b, rm, eff_rank=eff_rank),
     )(qv, qu_t, s1, s2, rmask)
 
 
 def lowrank_binary_matmul_expert(x, qv, qu_t, s1, s2,
-                                 policy: Optional[KernelPolicy] = None):
+                                 policy: Optional[KernelPolicy] = None,
+                                 eff_rank: Optional[int] = None):
     """Stacked-expert NanoQuant linear: x (E, C, d_in) with per-expert
     packed operands (E, ...). On the fused pallas path the expert axis
     becomes a kernel grid dimension (one launch for all experts) instead
-    of a host-level vmap of the kernel."""
+    of a host-level vmap of the kernel. eff_rank truncates every
+    expert's factors to the leading R' components (all experts share one
+    packed rank)."""
     p = policy if policy is not None else current_kernel_policy()
     x = _match_packed_k(x, qv)
+    local = functools.partial(_local_expert, eff_rank=eff_rank) \
+        if eff_rank is not None else _local_expert
     if p.tp_size() > 1 and qv.ndim == 3 and x.shape[0] % p.tp_size() == 0:
         # expert-parallel: the expert grid dim shards over the TP axis,
         # each device launching the fused grid over its local experts.
         ax = p.tp_axis
         return _shard_launch(
-            p, _local_expert,
+            p, local,
             (P(ax, None, None), P(ax, None, None), P(ax, None, None),
              P(ax, None), P(ax, None)),
             P(ax, None, None), x, qv, qu_t, s1, s2)
-    return _local_expert(x, qv, qu_t, s1, s2, p)
+    return local(x, qv, qu_t, s1, s2, p)
 
 
-def _local_expert(x, qv, qu_t, s1, s2, p: KernelPolicy):
+def _local_expert(x, qv, qu_t, s1, s2, p: KernelPolicy, eff_rank=None):
     r = qv.shape[-1]
     if p.use_pallas():
         interp = p.resolve_interpret()
         bm, bn, bk = p.block_sizes(x.shape[1], x.shape[-1],
-                                   qu_t.shape[-1], r, x.dtype)
+                                   qu_t.shape[-1], eff_rank or r, x.dtype)
         if p.fused and r <= binary_matmul.MAX_FUSED_RANK:
             return binary_matmul.fused_lowrank_matmul_grouped(
                 x, qv, qu_t, s1, s2, x_shared=False,
-                bm=bm, bn=bn, bk=bk, interpret=interp)
+                bm=bm, bn=bn, bk=bk, eff_rank=eff_rank, interpret=interp)
+        if eff_rank is not None:
+            qv, qu_t = _slice_rank(qv, qu_t, eff_rank)
         return jax.vmap(
             lambda xe, v, u, a, b: binary_matmul.lowrank_binary_matmul_twocall(
                 xe, v, u, a, b, bm=bm, bn=bn, bk=bk, interpret=interp)
         )(x, qv, qu_t, s1, s2)
+    if eff_rank is not None:
+        qv, qu_t = _slice_rank(qv, qu_t, eff_rank)
     return jax.vmap(ref.lowrank_binary_matmul_ref)(x, qv, qu_t, s1, s2)
 
 
@@ -361,7 +408,10 @@ def paged_attention(q, k_pool, v_pool, block_table, q_pos, cache_pos, *,
                     policy: Optional[KernelPolicy] = None):
     """Block-table decode attention over a paged KV pool (serve.paging).
 
-    q: (B, 1, Hq, D); k_pool / v_pool: (n_pages, page_size, Hkv, D);
+    q: (B, S, Hq, D) — S == 1 for normal decode, S > 1 for the
+    speculative multi-token verify forward (token j lives at position
+    q_pos + j / cache row cache_pos + j, all S rows already written);
+    k_pool / v_pool: (n_pages, page_size, Hkv, D);
     block_table: (B, pages) int32; q_pos / cache_pos: (B,) — see
     :func:`repro.kernels.ref.paged_attention_ref` for the full
     contract (linear caches pass cache_pos == q_pos; sliding-window
@@ -403,9 +453,20 @@ def _local_paged_attention(q, k_pool, v_pool, bt, q_pos, cache_pos,
                            window, scale, p: KernelPolicy):
     if p.use_pallas():
         from repro.kernels import paged_attention as pa
-        return pa.paged_decode_attention(
-            q, k_pool, v_pool, bt, q_pos, cache_pos, window=window,
-            scale=scale, interpret=p.resolve_interpret())
+        S = q.shape[1]
+        if S == 1:
+            return pa.paged_decode_attention(
+                q, k_pool, v_pool, bt, q_pos, cache_pos, window=window,
+                scale=scale, interpret=p.resolve_interpret())
+        # multi-token verify: all S rows are in the pool before any
+        # query reads, and the per-query position reconstruction masks
+        # later-written rows (see ref.paged_attention_ref), so S
+        # single-token kernel launches at shifted positions are exact.
+        outs = [pa.paged_decode_attention(
+            q[:, j:j + 1], k_pool, v_pool, bt, q_pos + j, cache_pos + j,
+            window=window, scale=scale, interpret=p.resolve_interpret())
+            for j in range(S)]
+        return jnp.concatenate(outs, axis=1)
     return ref.paged_attention_ref(q, k_pool, v_pool, bt, q_pos, cache_pos,
                                    window=window, scale=scale)
 

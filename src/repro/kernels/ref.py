@@ -70,45 +70,56 @@ def paged_attention_ref(q, k_pool, v_pool, block_table, q_pos, cache_pos,
     """Gather-attention decode oracle over a paged KV pool (the
     pure-jax twin of :mod:`repro.kernels.paged_attention`).
 
-    q: (B, 1, Hq, D) single-token queries (GQA: Hq = Hkv * G);
+    q: (B, S, Hq, D) queries (GQA: Hq = Hkv * G) — S == 1 for normal
+    decode, S > 1 for the speculative verify forward (token j at
+    absolute position q_pos + j, written at cache row cache_pos + j);
     k_pool / v_pool: (n_pages, page_size, Hkv, D) page pools;
     block_table: (B, pages) int32 per-slot page ids, ordered by logical
     page (unmapped tail entries point at the null page 0);
-    q_pos: (B,) absolute query positions; cache_pos: (B,) cache write
-    offsets — equal to q_pos for a linear cache, or q_pos wrapped
-    modulo the virtual ring (pages * page_size) for a sliding-window
-    ring pool. Returns (B, 1, Hq, D).
+    q_pos: (B,) absolute positions of the FIRST query; cache_pos: (B,)
+    cache write offsets of the first query — equal to q_pos for a
+    linear cache, or q_pos wrapped modulo the virtual ring
+    (pages * page_size) for a sliding-window ring pool (S == 1 only;
+    multi-token callers are linear-cache, see serve.speculative
+    gating). Returns (B, S, Hq, D).
 
     Each slot's gathered pages form a virtual rectangle whose row index
     is the row's cache position, so validity is the standard ring
-    reconstruction: row r last held absolute position
-    ``q - ((cache_pos - r) mod rows)``; negative means never written,
-    and `window` (when nonzero) masks positions past the sliding
-    window. Masked scores hit exact softmax underflow, so the result is
-    bit-identical to attention over the rectangular cache."""
+    reconstruction *per query*: for query j, row r last held absolute
+    position ``(q_pos + j) - ((cache_pos + j - r) mod rows)``; negative
+    means never written, and `window` (when nonzero) masks positions
+    past the sliding window. Rows written by LATER queries of the same
+    call (all S rows land in the pool before any query reads) come out
+    as ``<= q_pos + j - rows + (S - 1 - j) < 0`` whenever written
+    positions stay below ``rows`` — the linear-table invariant — so
+    causality between the S queries falls out of the same mask. Masked
+    scores hit exact softmax underflow, so the result is bit-identical
+    to attention over the rectangular cache."""
     B, S, Hq, D = q.shape
-    assert S == 1, "paged attention is a single-token decode read"
     k = jnp.take(k_pool, block_table, axis=0).reshape(
         B, -1, *k_pool.shape[2:])                       # (B, V, Hkv, D)
     v = jnp.take(v_pool, block_table, axis=0).reshape(
         B, -1, *v_pool.shape[2:])
     rows = k.shape[1]
     r = jnp.arange(rows)
-    abs_pos = q_pos[:, None] - (cache_pos[:, None] - r[None, :]) % rows
-    m = abs_pos >= 0                                    # (B, V)
+    qp = q_pos[:, None] + jnp.arange(S)[None, :]        # (B, S)
+    cp = cache_pos[:, None] + jnp.arange(S)[None, :]
+    abs_pos = qp[:, :, None] - (cp[:, :, None] - r[None, None, :]) % rows
+    m = abs_pos >= 0                                    # (B, S, V)
     if window:
-        m = m & (abs_pos > q_pos[:, None] - window)
+        m = m & (abs_pos > qp[:, :, None] - window)
     Hkv = k.shape[2]
     G = Hq // Hkv
-    qg = q.reshape(B, 1, Hkv, G, D)
+    qg = q.reshape(B, S, Hkv, G, D)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
-    s = jnp.where(m[:, None, None, None, :], s, -1e30)
+    s = jnp.where(m[:, None, None, :, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
-    return o.reshape(B, 1, Hq, D)
+    return o.reshape(B, S, Hq, D)
 
 
-def lowrank_binary_matmul_fused_ref(x, qv, qu_t, s1, s2, rmask=None):
+def lowrank_binary_matmul_fused_ref(x, qv, qu_t, s1, s2, rmask=None,
+                                    eff_rank=None):
     """Oracle for the *fused* kernel: the whole chain runs with an f32
     intermediate (the fused kernel keeps t in a VMEM f32 scratch, so it
     never rounds to the activation dtype between stages).
@@ -116,7 +127,21 @@ def lowrank_binary_matmul_fused_ref(x, qv, qu_t, s1, s2, rmask=None):
     rmask: optional (r,) f32 zeroing rank columns past the true rank —
     merged-projection calls pad every projection to the widest rank and
     mask the padding here.
+    eff_rank: optional R' <= r (multiple of 32) — only the leading R'
+    rank columns participate (in-trace slices; XLA reads sub-extents of
+    the packed operands, no repack), mirroring the Pallas launch's
+    BlockSpec sub-extents.
     """
+    if eff_rank is not None:
+        r_full = qv.shape[-1]
+        if not (0 < eff_rank <= r_full and eff_rank % 32 == 0):
+            raise ValueError(
+                f"eff_rank must be a multiple of 32 in (0, {r_full}], "
+                f"got {eff_rank}")
+        qv = qv[..., :eff_rank]
+        qu_t = qu_t[..., :eff_rank // 32, :]
+        if rmask is not None:
+            rmask = rmask[..., :eff_rank]
     v = unpack_signs(qv, jnp.float32)             # (d_in, r)
     u = unpack_signs(qu_t, jnp.float32)           # (r, d_out)
     xf = x.astype(jnp.float32) * s2.astype(jnp.float32)

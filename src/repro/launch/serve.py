@@ -55,6 +55,14 @@ def main():
                          "(data=1, model=N) mesh (needs >= N devices; "
                          "on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--spec-rank-frac", type=float, default=0.0,
+                    help="enable self-speculative decoding: draft "
+                         "through a rank-truncated view at this rank "
+                         "fraction, verify full-rank (forces greedy "
+                         "sampling; requires the paged pool, so "
+                         "incompatible with --rect)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens per speculative cycle")
     args = ap.parse_args()
 
     if args.quantized_ckpt and not args.fp:
@@ -75,10 +83,19 @@ def main():
             print("[serve] quantized random-init teacher (demo)")
 
     cfg = model.cfg
+    spec = args.spec_rank_frac or None
+    if spec and args.rect:
+        ap.error("--spec-rank-frac needs the paged KV pool; drop --rect")
     scfg = api.ServeConfig(max_new_tokens=args.max_new,
                            paged=not args.rect,
                            page_size=args.page_size,
-                           kv_pool_pages=args.kv_pool_pages or None)
+                           kv_pool_pages=args.kv_pool_pages or None,
+                           greedy=bool(spec),
+                           spec_rank_frac=spec,
+                           spec_k=args.spec_k)
+    if spec:
+        print(f"[serve] speculative decode: rank_frac={spec} "
+              f"k<={args.spec_k} (greedy sampling forced)")
     mesh = None
     if args.tp > 1:
         from repro.launch.mesh import make_serving_mesh
@@ -110,16 +127,33 @@ def main():
     print(f"[serve] decode steps {eng.stats['decode_steps']}, wasted "
           f"slot-steps {eng.stats['wasted_slot_steps']}, prefill "
           f"compilations {eng.stats['prefill_traces']}")
-    if eng.paged:
-        print(f"[serve] paged KV pool: {eng.kv.n_pages} pages x "
-              f"{eng.kv.page_size} rows ({eng.kv_cache_bytes()/2**20:.2f} "
-              f"MiB), peak {eng.kv.peak_used_pages} pages in use, "
-              f"{eng.stats['page_waits']} page waits, "
-              f"{eng.stats['preemptions']} preemptions")
-    else:
-        print(f"[serve] rectangular KV pool: "
-              f"{eng.kv_cache_bytes()/2**20:.2f} MiB")
+    _print_pool_stats(eng)
+    if eng.spec is not None:
+        st = eng.stats
+        print(f"[serve] speculative: {st['spec_cycles']} cycles, "
+              f"acceptance {eng.spec.acceptance_rate():.2f} "
+              f"({st['spec_accepted_tokens']}/{st['spec_draft_tokens']} "
+              f"draft tokens), {st['spec_rollback_tokens']} rolled "
+              f"back ({st['spec_rollback_pages']} pages trimmed), "
+              f"final k={eng.spec.k}")
     print(f"[serve] sample output for request 0: {done[0].output[:16]}")
+
+
+def _print_pool_stats(eng) -> None:
+    """KV-pool line for either cache layout. Keys off ``eng.kv`` — the
+    engine serves a rectangular layout both under ``--rect`` and for
+    families with no pageable cache (pure SSM state), and neither has a
+    ``PagedKVState`` to report on."""
+    if eng.kv is None:
+        print(f"[serve] rectangular layout (paging disabled): "
+              f"max_batch x max_len KV rectangle, "
+              f"{eng.kv_cache_bytes()/2**20:.2f} MiB")
+        return
+    print(f"[serve] paged KV pool: {eng.kv.n_pages} pages x "
+          f"{eng.kv.page_size} rows ({eng.kv_cache_bytes()/2**20:.2f} "
+          f"MiB), peak {eng.kv.peak_used_pages} pages in use, "
+          f"{eng.stats['page_waits']} page waits, "
+          f"{eng.stats['preemptions']} preemptions")
 
 
 if __name__ == "__main__":

@@ -219,8 +219,13 @@ def dense(p: dict, x: jnp.ndarray, name: Optional[str] = None) -> jnp.ndarray:
     """FP / STE-latent / packed-binary linear. x: (..., d_in) -> (..., d_out)."""
     _tap_pre(name, x)
     if "qu_t" in p:      # packed low-rank binary path (paper Eq. 1)
+        # "eff_rank" is a static EffRank marker added by
+        # quant.surgery.rank_truncated_view (speculative draft views);
+        # the kernel then reads only the leading r' rank columns.
+        er = p.get("eff_rank")
         y = kops.lowrank_binary_matmul(x, p["qv"], p["qu_t"], p["s1"],
-                                       p["s2"], tp=tp_role(name))
+                                       p["s2"], tp=tp_role(name),
+                                       eff_rank=int(er) if er else None)
     elif "lu" in p:      # continuous latents with STE (refinement phase)
         y = _ste_matmul(p, x)
     else:
@@ -240,7 +245,9 @@ def dense_merged(mp: dict, x: jnp.ndarray, names, dims):
     like the equivalent per-projection :func:`dense` calls."""
     for nm in names:
         _tap_pre(nm, x)
-    ys = kops.lowrank_binary_matmul_merged(x, mp, dims)
+    er = mp.get("eff_rank")
+    ys = kops.lowrank_binary_matmul_merged(x, mp, dims,
+                                           eff_rank=int(er) if er else None)
     out = []
     for i, (nm, n) in enumerate(zip(names, dims)):
         y = _tap_post(nm, ys[i])
@@ -261,8 +268,10 @@ def dense_expert(p: dict, x: jnp.ndarray, name: Optional[str] = None) -> jnp.nda
         # expert axis becomes a kernel grid dimension on the fused
         # pallas path (one launch for all experts); ref falls back to a
         # per-expert vmap of the two-stage oracle.
+        er = p.get("eff_rank")
         y = kops.lowrank_binary_matmul_expert(x, p["qv"], p["qu_t"],
-                                              p["s1"], p["s2"])
+                                              p["s1"], p["s2"],
+                                              eff_rank=int(er) if er else None)
     elif "lu" in p:
         y = jax.vmap(_ste_matmul)(
             {"lu": p["lu"], "lv": p["lv"], "s1": p["s1"], "s2": p["s2"]}, x)
@@ -416,17 +425,22 @@ def _cache_write(buf, new, cache_pos):
 
 
 def paged_cache_write(pool, new, block_table, row):
-    """Single-token write into a paged KV pool (serve.paging): `new`
-    (B, 1, ...) lands in row `row[b]` of slot b's virtual rectangle —
-    page ``block_table[b, row // page_size]``, offset ``row %
-    page_size``. Inactive slots' block tables are all-zero, so their
-    masked writes hit the null page (trash) instead of a neighbour.
+    """Write S tokens into a paged KV pool (serve.paging): token j of
+    `new` (B, S, ...) lands in row ``row[b] + j`` of slot b's virtual
+    rectangle — page ``block_table[b, r // page_size]``, offset ``r %
+    page_size`` (rows wrap modulo the virtual rectangle, a no-op for
+    linear tables where written rows never reach the table width).
+    S == 1 is the normal decode write; S > 1 is the speculative verify
+    forward re-writing the draft rows exactly. Inactive slots' block
+    tables are all-zero, so their masked writes hit the null page
+    (trash) instead of a neighbour.
     pool: (n_pages, page_size, ...); block_table: (B, pages); row: (B,).
     """
     ps = pool.shape[1]
-    page = jnp.take_along_axis(block_table, (row // ps)[:, None],
-                               axis=1)[:, 0]
-    return pool.at[page, row % ps].set(new[:, 0].astype(pool.dtype))
+    S = new.shape[1]
+    rows = (row[:, None] + jnp.arange(S)) % (block_table.shape[1] * ps)
+    page = jnp.take_along_axis(block_table, rows // ps, axis=1)   # (B, S)
+    return pool.at[page, rows % ps].set(new.astype(pool.dtype))
 
 
 def gather_pages(pool, block_table):
@@ -448,21 +462,30 @@ def _cache_valid(k_pos, cache_pos, S):
 
 
 def _decode_mask(q_pos, cache_pos, n_rows, window):
-    """Single-token decode mask over a cache buffer that may be a ring
-    (hybrid sliding window: cache_pos == q_pos % window, so absolute
-    positions and row indices diverge after the first wrap). Row r last
-    held the key of absolute position ``q - ((cache_pos - r) mod
-    n_rows)``; a negative value means the row was never written.
-    Causality is implicit (row positions never exceed q). For a linear
-    cache (cache_pos == q_pos) this reduces to the plain causal+window
-    mask. q_pos: (S,) or per-slot (B,S) with S == 1; cache_pos scalar
-    or (B,). Returns (S, n_rows) or (B, S, n_rows)."""
+    """Decode mask over a cache buffer that may be a ring (hybrid
+    sliding window: cache_pos == q_pos % window, so absolute positions
+    and row indices diverge after the first wrap). ``cache_pos`` is the
+    write offset of the FIRST query; query j writes at ``cache_pos + j``
+    and row r last held the key of absolute position
+    ``(q + j) - ((cache_pos + j - r) mod n_rows)``; a negative value
+    means the row was never written. Causality is implicit (row
+    positions never exceed the query's own position — rows written by
+    later queries of a multi-token call reconstruct as negative while
+    written positions stay below n_rows, the linear-cache invariant of
+    the speculative verify forward). For a linear cache
+    (cache_pos == q_pos) this reduces to the plain causal+window mask.
+    q_pos: (S,) or per-slot (B,S); cache_pos scalar or (B,).
+    Returns (S, n_rows) or (B, S, n_rows)."""
     r = jnp.arange(n_rows)
+    S = q_pos.shape[-1]
+    j = jnp.arange(S)
     if jnp.ndim(cache_pos):
-        delta = (cache_pos[:, None] - r[None, :]) % n_rows   # (B, n_rows)
-        abs_pos = q_pos[:, :, None] - delta[:, None, :]      # (B, S, rows)
+        cp = cache_pos[:, None] + j[None, :]                 # (B, S)
+        delta = (cp[:, :, None] - r[None, None, :]) % n_rows
+        abs_pos = q_pos[:, :, None] - delta                  # (B, S, rows)
     else:
-        delta = (cache_pos - r) % n_rows                     # (n_rows,)
+        cp = cache_pos + j                                   # (S,)
+        delta = (cp[:, None] - r[None, :]) % n_rows          # (S, rows)
         abs_pos = q_pos[..., :, None] - delta
     m = abs_pos >= 0
     if window:
@@ -480,7 +503,9 @@ def attention(p, cfg, x, positions, cache=None, cache_pos=None,
     positions: (S,) absolute, or (B,S) per-slot.
     block_table: (B, pages) int32 — the cache is a paged pool
     (k/v: (n_pages, page_size, Hkv, D), see serve.paging) and this is a
-    single-token decode: writes go through :func:`paged_cache_write`
+    decode over per-slot rows (S == 1 normally; S > 1 for the
+    speculative verify forward, token j at row cache_pos + j): writes
+    go through :func:`paged_cache_write`
     and the read walks the block table (``kernels.ops.paged_attention``
     — Pallas gather kernel on TPU, gather + rectangle oracle elsewhere).
     For the hybrid sliding-window ring, `cache_pos` arrives pre-wrapped
@@ -530,8 +555,9 @@ def attention(p, cfg, x, positions, cache=None, cache_pos=None,
         o = constrain(o, "dp", None, "tp", None)
         new_cache = None
     elif block_table is not None:
-        # paged decode (S == 1, per-slot positions): page-mapped write,
-        # block-table-walking gather attention.
+        # paged decode (per-slot positions; S tokens land at rows
+        # cache_pos..cache_pos+S-1): page-mapped write, block-table-
+        # walking gather attention.
         ck = paged_cache_write(cache["k"], k, block_table, cache_pos)
         cv = paged_cache_write(cache["v"], v, block_table, cache_pos)
         new_cache = {"k": ck, "v": cv}

@@ -401,9 +401,15 @@ def _cached_forward(params, cfg, tokens, cache, pos, image_embeds=None,
     decode, S == 1 only): each batch row then gets its own RoPE phase,
     cache write offset and causal mask.
     block_tables: the cache's attention leaves are paged pools
-    (serve.paging) and this is a single-token decode — a dict with a
+    (serve.paging) and this is a paged decode — a dict with a
     ``"linear"`` (B, pages) table for ordinary caches and/or a
-    ``"ring"`` table for the hybrid shared-attention ring.
+    ``"ring"`` table for the hybrid shared-attention ring. S == 1 is
+    the normal decode; S > 1 (speculative verify, token j at row
+    pos + j) is supported for linear-only tables — a ring table wraps
+    its write position per token, which the shared first-row wrap
+    below does not model, so multi-token calls drop the tables and
+    would read a rectangular cache instead (the speculative engine
+    gates ring/hybrid out before ever getting here).
     Returns (hidden, new_cache)."""
     x = embed_tokens(params, cfg, tokens)
     S = x.shape[1]
@@ -413,8 +419,9 @@ def _cached_forward(params, cfg, tokens, cache, pos, image_embeds=None,
     else:
         positions = pos + jnp.arange(S)                       # (S,)
     fam = cfg.family
-    if S != 1 or not block_tables:                 # paged is decode-only
-        block_tables = None
+    if not block_tables or (S != 1 and set(block_tables) != {"linear"}):
+        block_tables = None                        # paged decode only
+
     bt_lin = block_tables.get("linear") if block_tables else None
 
     if fam in ("dense", "audio", "moe"):
@@ -578,10 +585,13 @@ def prefill(params, cfg, tokens, cache, image_embeds=None, last_idx=None):
 
 
 def decode_step(params, cfg, token, cache, pos, block_tables=None):
-    """One decode step. token: (B, 1[, K]); pos: absolute position —
+    """One decode step. token: (B, S[, K]) with S == 1 normally, or
+    S > 1 for the speculative multi-token verify forward (logits come
+    back for every position); pos: absolute position of token[:, 0] —
     scalar (lockstep batch) or (B,) per-slot vector (continuous
     batching). block_tables: per-slot page tables when `cache` is a
-    paged pool (serve.paging; requires per-slot (B,) pos)."""
+    paged pool (serve.paging; requires per-slot (B,) pos; S > 1 needs
+    linear tables only, see :func:`_cached_forward`)."""
     h, cache = _cached_forward(params, cfg, token, cache, pos,
                                block_tables=block_tables)
     return logits_fn(params, cfg, h), cache

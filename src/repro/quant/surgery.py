@@ -190,6 +190,98 @@ def merge_projection_groups(params):
     return walk(params) if isinstance(params, dict) else params
 
 
+# ---------------------------------------------------------------------------
+# rank-truncated draft views (serve.speculative)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+class EffRank:
+    """Static effective-rank marker placed inside a packed linear dict
+    by :func:`rank_truncated_view`. Flattens to ZERO leaves with the
+    rank in the treedef's aux data, so under ``jit`` it stays a Python
+    int (usable as a static slice extent / Pallas block size) instead
+    of becoming a tracer. Hash/eq by value: two views at the same
+    fraction share one jit cache entry."""
+
+    def __init__(self, r: int):
+        self.r = int(r)
+
+    def tree_flatten(self):
+        return (), self.r
+
+    @classmethod
+    def tree_unflatten(cls, aux, _children):
+        return cls(aux)
+
+    def __int__(self):
+        return self.r
+
+    def __eq__(self, other):
+        return isinstance(other, EffRank) and other.r == self.r
+
+    def __hash__(self):
+        return hash(("EffRank", self.r))
+
+    def __repr__(self):
+        return f"EffRank({self.r})"
+
+
+def truncated_rank(r: int, rank_frac: float, align: int = 32) -> int:
+    """r' = frac·r rounded down to `align`, clamped to [align, r] (the
+    packed rank axis is consumed in 32-row bit-words, so r' must stay
+    a multiple of 32)."""
+    return min(int(r), max(align, int(int(r) * rank_frac) // align * align))
+
+
+def rank_truncated_view(params, rank_frac: float, align: int = 32):
+    """Zero-copy draft view of a packed parameter tree: every packed
+    linear dict gains a static ``eff_rank`` = :func:`truncated_rank` of
+    its own rank; **every array leaf is the original object** (asserted
+    by buffer identity in tests — nothing is sliced, repacked or even
+    copied). The model layers thread ``eff_rank`` into the kernel
+    launch, which reads only the leading r' rank columns of qv / r'//32
+    packed rows of qu_t (BlockSpec sub-extents on the fused Pallas
+    path, in-trace slices on the ref path) — so the truncated forward
+    is *exactly* the full model with the trailing r − r' components
+    zeroed, at zero extra storage.
+
+    Applies uniformly to plain packed dicts, merged projection groups
+    (``wqkv`` / ``wgu`` — truncation on the padded common rank; each
+    member projection effectively min(r_p, r')) and stacked expert
+    grids (rank is the last qv axis regardless of leading dims). Dicts
+    whose rank already satisfies r' == r are returned as the *same*
+    dict object. FP leaves (embeddings, norms, head, routers) are
+    shared untouched — the draft differs from the verifier only inside
+    the quantized linears."""
+    if not (0.0 < rank_frac <= 1.0):
+        raise ValueError(f"rank_frac must be in (0, 1], got {rank_frac}")
+
+    def walk(d):
+        out = {}
+        changed = False
+        for k, v in d.items():
+            if isinstance(v, dict) and "qu_t" in v and "qv" in v:
+                r = int(v["qv"].shape[-1])
+                rp = truncated_rank(r, rank_frac, align)
+                if rp == r:
+                    out[k] = v
+                else:
+                    nv = dict(v)
+                    nv["eff_rank"] = EffRank(rp)
+                    out[k] = nv
+                    changed = True
+            elif isinstance(v, dict):
+                nv = walk(v)
+                changed = changed or (nv is not v)
+                out[k] = nv
+            else:
+                out[k] = v
+        return out if changed else d
+
+    return walk(params) if isinstance(params, dict) else params
+
+
 def place_on_mesh(params, cfg: ModelConfig, mesh, policy=None):
     """Place a (quantized or FP) parameter tree onto a serving mesh per
     ``sharding.rules``: packed U/s1 d_out-sharded on ``model`` for

@@ -16,10 +16,11 @@ from repro.serve.engine import (  # noqa: F401
     InferenceEngine, RequestHandle, ServeConfig, make_prefill_step,
     make_serve_step, make_slot_prefill_step, sample_token)
 from repro.serve.batcher import BatchServer  # noqa: F401
+from repro.serve.speculative import SpecDecodeController  # noqa: F401
 
 __all__ = [
     "InferenceEngine", "RequestHandle", "ServeConfig", "Request",
-    "SlotScheduler", "BatchServer", "PagedKVState", "bucket_length",
-    "sample_token", "make_prefill_step", "make_serve_step",
-    "make_slot_prefill_step",
+    "SlotScheduler", "BatchServer", "PagedKVState",
+    "SpecDecodeController", "bucket_length", "sample_token",
+    "make_prefill_step", "make_serve_step", "make_slot_prefill_step",
 ]

@@ -60,6 +60,16 @@ class ServeConfig:
     kv_pool_pages: Optional[int] = None
     page_watermark: int = 0                # extra free pages required
     #                                        to admit (beyond the prompt)
+    # --- self-speculative decoding (docs/serving.md §Speculative) ---
+    # spec_rank_frac enables the rank-truncated draft: each engine tick
+    # drafts up to spec_k tokens through a zero-copy rank-r' view of the
+    # packed params (quant.surgery.rank_truncated_view) and verifies
+    # them in ONE batched full-rank forward. Greedy outputs stay
+    # token-identical to the plain engine. Requires greedy=True and the
+    # paged linear-table cache (serve.speculative validates).
+    spec_rank_frac: Optional[float] = None  # draft rank fraction (0, 1]
+    spec_k: int = 4                         # max draft tokens per cycle
+    spec_k_min: int = 1                     # dynamic-k controller floor
 
 
 def sample_token(logits: jnp.ndarray, key, scfg: ServeConfig) -> jnp.ndarray:
@@ -379,6 +389,11 @@ class InferenceEngine:
             return jnp.where(keep, tok, 0), new_cache
         self._decode = jax.jit(decode_fn, donate_argnums=(2,))
 
+        self.spec = None
+        if self.scfg.spec_rank_frac is not None:
+            from repro.serve.speculative import SpecDecodeController
+            self.spec = SpecDecodeController(self)
+
     @contextlib.contextmanager
     def _trace_scope(self):
         """Tracing context for the jitted steps. With a mesh, scopes in
@@ -477,26 +492,13 @@ class InferenceEngine:
                 finished.append(fin)
         self.stats["peak_active"] = max(self.stats["peak_active"],
                                         int(self.active.sum()))
-        if self.paged and self.active.any():
-            self._ensure_decode_pages()
         if self.active.any():
-            tables = self.kv.device_tables() if self.paged else {}
-            self.key, k = jax.random.split(self.key)
-            tok, self.cache = self._decode(
-                self.params, jnp.asarray(self.tokens), self.cache,
-                jnp.asarray(self.pos), jnp.asarray(self.active), k, tables)
-            tok = np.array(tok)        # writable copy: slots mutate it
-            self.tokens = tok
-            self.stats["decode_steps"] += 1
-            self.stats["wasted_slot_steps"] += int(
-                self.max_batch - self.active.sum())
-            for slot in range(self.max_batch):
-                if not self.active[slot]:
-                    continue
-                self.pos[slot] += 1
-                fin = self._emit(slot, tok[slot][0])
-                if fin is not None:
-                    finished.append(fin)
+            t0 = time.monotonic()
+            if self.spec is not None:
+                self.spec.tick(finished)
+            else:
+                self._decode_tick(finished)
+            self.stats["decode_time_s"] += time.monotonic() - t0
         self.stats["steps"] += 1
         callbacks, self._callbacks = self._callbacks, []
         err = None
@@ -515,12 +517,45 @@ class InferenceEngine:
             self.step()
         return dict(self.done)
 
+    def _decode_tick(self, finished: List[Request]) -> None:
+        """One fused single-token decode across the pool: reserve the
+        next cache row per active slot (possibly preempting), run the
+        jitted decode, commit positions and emit. Shared by the plain
+        step and the speculative controller's k<1 fallback."""
+        if self.paged:
+            self._ensure_decode_pages()
+        if not self.active.any():          # everything self-preempted
+            return
+        tables = self.kv.device_tables() if self.paged else {}
+        self.key, k = jax.random.split(self.key)
+        tok, self.cache = self._decode(
+            self.params, jnp.asarray(self.tokens), self.cache,
+            jnp.asarray(self.pos), jnp.asarray(self.active), k, tables)
+        tok = np.array(tok)        # writable copy: slots mutate it
+        self.tokens = tok
+        self.stats["decode_steps"] += 1
+        self.stats["wasted_slot_steps"] += int(
+            self.max_batch - self.active.sum())
+        for slot in range(self.max_batch):
+            if not self.active[slot]:
+                continue
+            self.pos[slot] += 1
+            fin = self._emit(slot, tok[slot][0])
+            if fin is not None:
+                finished.append(fin)
+
     def reset_stats(self) -> None:
         for k in ("steps", "decode_steps", "wasted_slot_steps",
                   "tokens_emitted", "admissions", "prefill_traces",
                   "decode_traces", "preemptions", "page_waits",
-                  "peak_active"):
+                  "peak_active", "preempt_recompute_tokens",
+                  "spec_cycles", "spec_draft_tokens",
+                  "spec_accepted_tokens", "spec_rollback_tokens",
+                  "spec_rollback_pages"):
             self.stats[k] = 0
+        # host wall-clock spent in the decode/spec device step + commit
+        # (benchmarks divide tokens_emitted by this for decode tok/s)
+        self.stats["decode_time_s"] = 0.0
 
     def kv_cache_bytes(self) -> int:
         """Bytes held by the persistent attention-cache leaves — the
@@ -562,6 +597,12 @@ class InferenceEngine:
             budget_cap = handle.request.max_new_tokens
         req = handle.request
         n = prompt.shape[0]
+        if isinstance(item, _Resume):
+            # every row of the resume prefill is recomputed work (the
+            # original prefill + decode already produced them once) —
+            # same unit as spec_rollback_tokens, so preemption cost and
+            # speculative rollback cost are directly comparable.
+            self.stats["preempt_recompute_tokens"] += int(n)
         if self.cfg.is_ssm_layer_stack:
             # right-padding would leak pad tokens into the recurrent
             # SSM/conv state, so SSM-stack families prefill at the exact

@@ -267,21 +267,57 @@ class PagedKVState:
         """Lazy per-decode-step reservation: map the linear page that
         will hold `row` (the next cache write). False => pool exhausted
         (caller preempts). Ring pages are fully mapped at admission."""
+        return self.reserve_rows(slot, row + 1)
+
+    def reserve_rows(self, slot: int, n_rows: int) -> bool:
+        """Map linear pages so rows ``[0, n_rows)`` of `slot` are
+        writable. Unlike the one-page-per-step :meth:`ensure`, this may
+        map several pages at once — the speculative decode cycle writes
+        up to k+1 rows (k drafts + the verify row) before the next host
+        sync. False => pool exhausted with the reservation *partially*
+        applied; the caller preempts somebody and retries (already-
+        mapped pages stay mapped, so retrying is idempotent)."""
         if not self.has_linear:
             return True
-        need = row // self.page_size + 1
-        mapped = self._mapped[slot]
-        if need <= mapped:
-            return True
-        assert need == mapped + 1, (need, mapped)
-        if not self._free:
-            return False
-        page = self._alloc(1)[0]
-        self._slot_pages[slot].append(page)
-        self.tables["linear"][slot, mapped] = page
-        self._mapped[slot] = need
-        self._device_tables = None
+        need = -(-n_rows // self.page_size)
+        while self._mapped[slot] < need:
+            if not self._free:
+                return False
+            page = self._alloc(1)[0]
+            self._slot_pages[slot].append(page)
+            self.tables["linear"][slot, self._mapped[slot]] = page
+            self._mapped[slot] += 1
+            self._device_tables = None
         return True
+
+    def trim(self, slot: int, n_rows: int) -> int:
+        """Rollback: unmap linear pages past the one holding row
+        ``n_rows - 1`` (the last *committed* cache write) and return
+        them to the free list. Returns the number of pages freed.
+
+        This is how rejected speculative drafts give their pages back:
+        the cycle reserves rows up to ``pos + k``, the verify forward
+        accepts ``a <= k`` tokens, and the pages covering only rejected
+        rows are trimmed. The rejected rows themselves need no device-
+        side cleanup — rows past the committed frontier reconstruct to
+        negative absolute positions in the decode mask and are never
+        read (see `kernels.ref.paged_attention_ref`)."""
+        if not self.has_linear:
+            return 0
+        keep = -(-n_rows // self.page_size)
+        mapped = self._mapped[slot]
+        if keep >= mapped:
+            return 0
+        row = self.tables["linear"][slot]
+        dropped = [int(p) for p in row[keep:mapped]]
+        row[keep:mapped] = 0
+        for p in dropped:
+            # by value: _slot_pages interleaves linear and ring pages
+            self._slot_pages[slot].remove(p)
+        self._free.extend(reversed(dropped))
+        self._mapped[slot] = keep
+        self._device_tables = None
+        return len(dropped)
 
     def release(self, slot: int) -> None:
         """Free the slot's pages and zero its block-table rows (a later
