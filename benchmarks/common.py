@@ -57,8 +57,10 @@ def eval_ppl(cfg, params, seed=9999):
     return eval_perplexity(T.loss_fn, params, cfg, evalb)
 
 
-def emit(table: str, rows: List[Dict], keys=None):
-    """Print CSV + persist JSON."""
+def emit(table: str, rows: List[Dict], keys=None, meta: Dict = None):
+    """Print CSV + persist JSON. With ``meta`` (run provenance: trace
+    seed, flags) the file is ``{"meta": ..., "rows": [...]}``; without,
+    the legacy bare row list — existing baselines stay readable."""
     if not rows:
         return
     keys = keys or list(rows[0].keys())
@@ -69,4 +71,5 @@ def emit(table: str, rows: List[Dict], keys=None):
                        else f"{r[k]:.4g}" for k in keys))
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(OUT_DIR, f"{table}.json"), "w") as f:
-        json.dump(rows, f, indent=1, default=str)
+        json.dump(rows if meta is None else {"meta": meta, "rows": rows},
+                  f, indent=1, default=str)

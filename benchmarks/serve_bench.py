@@ -29,8 +29,25 @@ full run). Greedy token identity is asserted at every point, including
 a ``--tp N`` chain; emits ``experiments/bench/BENCH_serve_spec.json``
 (smoke: ``BENCH_serve_spec_smoke.json`` — never the full baseline).
 
+The prefix section (``--prefix`` runs it alone) replays a shared-
+system-prompt mixed-length trace (with exact page-aligned duplicate
+prompts, so copy-on-write fires) on prefix-cache-on vs -off engines at
+the SAME overcommitted pool byte budget. Both engines are compile-
+warmed with token-shifted same-structure prompts, then the warmed
+index is dropped (``prefix.clear()``) so the timed region measures
+page sharing, not compile skips. Gates: greedy token identity at every
+point (including ``--tp N`` and a ``spec_rank_frac`` compose row),
+strictly higher admitted concurrency, and mean TTFT cut >= 2x (wall-
+clock: hard on the full run, warn-only under ``--smoke``); emits
+``experiments/bench/BENCH_serve_prefix[_smoke].json``.
+
+``--seed`` (default 7) derives every section's trace seed (run=seed,
+paged=seed+4, spec=seed+16, prefix=seed+30 — the defaults reproduce
+the historical 7/11/23 traces) and is recorded in each emitted BENCH
+json's ``meta`` block.
+
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--tp N]
-        [--spec]
+        [--spec] [--prefix] [--seed S]
 """
 from __future__ import annotations
 
@@ -163,7 +180,7 @@ def drive(mode, params, cfg, trace, mesh=None, scfg=None,
     return row, {uid: eng.done[uid].output for uid in handles}
 
 
-def run_paged(smoke: bool = False):
+def run_paged(smoke: bool = False, seed: int = 7):
     """Paged-vs-rectangular memory-pressure race (acceptance: token
     identity, <= 50% peak KV-pool bytes, strictly higher admitted
     concurrency at the same KV-byte budget)."""
@@ -172,7 +189,7 @@ def run_paged(smoke: bool = False):
     # gates all run f32 for the same reason).
     cfg = dataclasses.replace(common.TINY, dtype="float32")
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(11)
+    rng = np.random.default_rng(seed + 4)
     n_long, n_short = (2, 8) if smoke else (4, 24)
     trace = build_pressure_trace(rng, n_long, n_short, cfg.vocab_size)
 
@@ -197,7 +214,8 @@ def run_paged(smoke: bool = False):
     # the checked-in BENCH_serve_paged.json is the full-run CPU baseline;
     # the CI smoke gate must not overwrite it with its smaller trace
     common.emit("BENCH_serve_paged_smoke" if smoke else "BENCH_serve_paged",
-                rows)
+                rows, meta={"seed": seed + 4, "base_seed": seed,
+                            "smoke": smoke})
 
     by = {r["engine"]: r for r in rows}
     identical = all(np.array_equal(outs["rect-full"][u], outs["paged-half"][u])
@@ -243,7 +261,7 @@ def _quantized(cfg):
 
 
 def _spec_race(label, cfg, smoke, points, dynamic=None, tp=1,
-               max_prompt=12, max_new=14, max_len=MAX_LEN):
+               max_prompt=12, max_new=14, max_len=MAX_LEN, seed=7):
     """One model's speculative race: base engine + pinned-k spec points
     (identity asserted at every point — the verifier is full-rank, so
     outputs cannot depend on the draft). Returns (rows, best_speedup).
@@ -256,7 +274,7 @@ def _spec_race(label, cfg, smoke, points, dynamic=None, tp=1,
     caps k at max_len-1-pos over active slots, and a cap change would
     also recompile mid-race)."""
     qparams = _quantized(cfg)
-    rng = np.random.default_rng(23)
+    rng = np.random.default_rng(seed + 16)
     trace = build_trace(rng, 10 if smoke else 24, cfg.vocab_size,
                         max_prompt=max_prompt, max_new=max_new)
     scfg = ServeConfig(greedy=True, page_size=PAGE_SIZE)
@@ -301,7 +319,7 @@ def _spec_race(label, cfg, smoke, points, dynamic=None, tp=1,
                      for r in pinned)
 
 
-def run_spec(smoke: bool = False, tp: int = 1):
+def run_spec(smoke: bool = False, tp: int = 1, seed: int = 7):
     """Self-speculative decoding races (serve.speculative), two models:
 
     * **ladder** (TINY, d=256): acceptance rate vs rank fraction. The
@@ -323,14 +341,16 @@ def run_spec(smoke: bool = False, tp: int = 1):
         points=([(0.5, 4)] if smoke else
                 [(0.33, 4), (0.5, 4), (0.75, 4), (1.0, 4)]),
         dynamic=None if smoke else (0.75, 4),
-        tp=tp)
+        tp=tp, seed=seed)
     arows, best = _spec_race(
         "small", dataclasses.replace(SMALL, dtype="float32"), smoke,
         points=([(1.0, 4)] if smoke else [(1.0, 2), (1.0, 4), (1.0, 8)]),
-        max_prompt=8, max_new=24 if smoke else 40, max_len=64)
+        max_prompt=8, max_new=24 if smoke else 40, max_len=64, seed=seed)
     rows = lrows + arows
     common.emit("BENCH_serve_spec_smoke" if smoke else "BENCH_serve_spec",
-                rows, keys=list(arows[1].keys()))
+                rows, keys=list(arows[1].keys()),
+                meta={"seed": seed + 16, "base_seed": seed, "smoke": smoke,
+                      "tp": tp})
     print(f"speculative decode best speedup (SMALL, pinned k): "
           f"{best:.2f}x decode tok/s")
     if best < 1.5:
@@ -341,10 +361,178 @@ def run_spec(smoke: bool = False, tp: int = 1):
         print(f"[serve_bench] WARNING: {msg}")
 
 
-def run(smoke: bool = False, tp: int = 1):
+def build_shared_prefix_trace(rng, n_req, vocab, sys_len, max_extra,
+                              max_new):
+    """Shared-system-prompt mix: every request opens with the SAME
+    ``sys_len``-token system prompt (page-aligned: ``sys_len`` must be
+    a multiple of PAGE_SIZE) followed by a private mixed-length tail.
+    Every 4th request is an exact duplicate of the bare system prompt —
+    a full-cover, page-aligned prefix hit, the case that exercises the
+    admission-time copy-on-write path. Returns
+    ([(arrival_step, Request)], sys_prompt)."""
+    assert sys_len % PAGE_SIZE == 0
+    sys_prompt = rng.integers(0, vocab, size=(sys_len,)).astype(np.int32)
+    trace, step = [], 0
+    for uid in range(n_req):
+        step += int(rng.poisson(0.4))
+        if uid % 4 == 3:
+            prompt = sys_prompt.copy()
+        else:
+            extra = rng.integers(
+                0, vocab,
+                size=(int(rng.integers(1, max_extra + 1)),)).astype(np.int32)
+            prompt = np.concatenate([sys_prompt, extra])
+        trace.append((step, Request(uid, prompt,
+                                    max_new_tokens=int(
+                                        rng.integers(4, max_new + 1)))))
+    return trace, sys_prompt
+
+
+def drive_prefix(params, cfg, trace, scfg, mesh=None,
+                 max_batch=PAGED_BATCH, max_len=MAX_LEN):
+    """Prefix-race driver: like :func:`drive` but (a) compile-warms
+    with token-shifted clones of the trace prompts — same lengths, so
+    the same prefill buckets, suffix-prefill start offsets and the COW
+    page copy all trace — then drops the warmed index
+    (``prefix.clear()``), so the timed region measures page sharing,
+    never compile skips; (b) reports TTFT, the latency prefix caching
+    actually shrinks."""
+    eng = InferenceEngine(params, cfg, scfg, max_batch=max_batch,
+                          max_len=max_len, admission="continuous",
+                          mesh=mesh)
+    for i, (_, r) in enumerate(trace):
+        warm = (r.prompt + 1) % cfg.vocab_size
+        eng.submit(Request(-1 - i, warm.astype(np.int32),
+                           max_new_tokens=r.max_new_tokens))
+    eng.run()
+    if eng.prefix is not None:
+        assert eng.stats["prefix_hit_tokens"], \
+            "warm-up must exercise the shared-page admission path"
+        eng.prefix.clear()
+    eng.reset_stats()
+
+    handles = {}
+    i = 0
+    t0 = time.perf_counter()
+    while i < len(trace) or eng.in_flight:
+        while i < len(trace) and trace[i][0] <= eng.stats["steps"]:
+            handles[trace[i][1].uid] = eng.submit(trace[i][1])
+            i += 1
+        eng.step()
+    dt = time.perf_counter() - t0
+
+    ttfts = np.asarray(sorted(h.ttft for h in handles.values()))
+    tokens = sum(len(eng.done[uid].output) for uid in handles)
+    st = eng.stats
+    row = {
+        "engine": "prefix" if eng.prefix is not None else "noprefix",
+        "requests": len(handles),
+        "tokens": tokens,
+        "tok_per_s": tokens / dt,
+        "mean_ttft_s": float(ttfts.mean()),
+        "p95_ttft_s": float(np.percentile(ttfts, 95)),
+        "peak_active": st["peak_active"],
+        "preemptions": st["preemptions"],
+        "page_waits": st["page_waits"],
+        "kv_bytes": eng.kv_cache_bytes(),
+        "prefix_hit_tokens": st["prefix_hit_tokens"],
+        "prefix_lookup_tokens": st["prefix_lookup_tokens"],
+        "hit_rate": (st["prefix_hit_tokens"] / st["prefix_lookup_tokens"]
+                     if st["prefix_lookup_tokens"] else 0.0),
+        "shared_pages": st["shared_pages"],
+        "cow_copies": st["cow_copies"],
+        "evicted_pages": st["evicted_pages"],
+    }
+    if eng.spec is not None:
+        row["spec_rank_frac"] = eng.scfg.spec_rank_frac
+        row["accept_rate"] = eng.spec.acceptance_rate()
+    return row, {uid: eng.done[uid].output for uid in handles}
+
+
+def run_prefix(smoke: bool = False, tp: int = 1, seed: int = 7):
+    """Prefix-cache race: shared-system-prompt trace on prefix-on vs
+    prefix-off engines at the SAME overcommitted pool byte budget.
+
+    Acceptance: greedy token identity at every point (including the
+    ``--tp N`` chain and the speculative compose row), strictly higher
+    admitted concurrency with the prefix cache, and mean TTFT cut
+    >= 2x (wall-clock — hard on the full run, warn-only in the CI
+    smoke, where a loaded box skews the tiny trace)."""
+    # f32: the repo-wide identity-gate dtype (greedy argmax must not
+    # flip between the shared-page and private-page read paths).
+    cfg = dataclasses.replace(common.TINY, dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed + 30)
+    n_req = 10 if smoke else 32
+    sys_len = 16 if smoke else 24
+    trace, _ = build_shared_prefix_trace(
+        rng, n_req, cfg.vocab_size, sys_len=sys_len,
+        max_extra=8, max_new=8)
+
+    # overcommitted pool: a third of the full rectangle — tight enough
+    # that no-sharing admission queues on pages, the regime where
+    # shared pages buy concurrency (and so TTFT)
+    pool = PAGED_BATCH * (MAX_LEN // PAGE_SIZE) // 3
+    base = ServeConfig(greedy=True, page_size=PAGE_SIZE,
+                       kv_pool_pages=pool)
+    rows, outs = [], {}
+    for name, scfg in (
+            ("noprefix", dataclasses.replace(base, prefix_cache=False)),
+            ("prefix", base)):
+        row, outs[name] = drive_prefix(params, cfg, trace, scfg)
+        rows.append(row)
+    by = {r["engine"]: r for r in rows}
+
+    def gate_identity(name, out):
+        ok = all(np.array_equal(outs["noprefix"][u], out[u])
+                 for u in outs["noprefix"])
+        print(f"{name} greedy outputs identical to noprefix: {ok}")
+        assert ok, f"{name} engine diverged from the no-sharing oracle"
+
+    gate_identity("prefix", outs["prefix"])
+    if tp > 1:
+        from repro.launch.mesh import make_serving_mesh
+        row, out = drive_prefix(params, cfg, trace, base,
+                                mesh=make_serving_mesh(tp))
+        row["engine"] = f"prefix-tp{tp}"
+        rows.append(row)
+        gate_identity(row["engine"], out)
+    # compose: speculative decoding drafts into shared pages — the
+    # reserve path COWs them first, so identity must still hold
+    row, out = drive_prefix(
+        params, cfg, trace,
+        dataclasses.replace(base, spec_rank_frac=1.0, spec_k=4,
+                            spec_k_min=4))
+    row["engine"] = "prefix-spec-r1.0-k4"
+    rows.append(row)
+    gate_identity(row["engine"], out)
+
+    common.emit(
+        "BENCH_serve_prefix_smoke" if smoke else "BENCH_serve_prefix",
+        rows, meta={"seed": seed + 30, "base_seed": seed, "smoke": smoke,
+                    "tp": tp, "sys_len": sys_len, "pool_pages": pool})
+
+    p, np_ = by["prefix"], by["noprefix"]
+    speedup = np_["mean_ttft_s"] / p["mean_ttft_s"] \
+        if p["mean_ttft_s"] else float("inf")
+    print(f"prefix vs noprefix at {pool} pool pages: peak_active "
+          f"{p['peak_active']} vs {np_['peak_active']}, mean TTFT "
+          f"{p['mean_ttft_s']*1e3:.1f}ms vs {np_['mean_ttft_s']*1e3:.1f}ms "
+          f"({speedup:.2f}x), hit rate {p['hit_rate']:.2f}, "
+          f"{p['cow_copies']} COW copies, {p['evicted_pages']} evictions")
+    assert p["prefix_hit_tokens"] > 0, "trace produced no prefix hits"
+    assert p["peak_active"] > np_["peak_active"], \
+        "prefix cache must admit strictly more concurrency per KV byte"
+    if speedup < 2.0:
+        msg = f"mean TTFT cut {speedup:.2f}x < 2x"
+        assert smoke, msg
+        print(f"[serve_bench] WARNING: {msg}")
+
+
+def run(smoke: bool = False, tp: int = 1, seed: int = 7):
     cfg = common.TINY
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(7)
+    rng = np.random.default_rng(seed)
     n_req = 12 if smoke else 32
     max_new = 6 if smoke else 16
     trace = build_trace(rng, n_req, cfg.vocab_size, max_new=max_new)
@@ -405,7 +593,9 @@ def run(smoke: bool = False, tp: int = 1):
         assert rect_identical, "paged engine diverged from rectangular"
         assert row_tp["decode_steps"] == row_ref["decode_steps"], \
             "mesh must not change the schedule"
-    common.emit("serve_bench", rows)
+    common.emit("serve_bench", rows,
+                meta={"seed": seed, "base_seed": seed, "smoke": smoke,
+                      "tp": tp})
 
     identical = all(np.array_equal(outs["wave"][u], outs["continuous"][u])
                     for u in outs["wave"])
@@ -431,8 +621,8 @@ def run(smoke: bool = False, tp: int = 1):
         assert smoke, msg
         print(f"[serve_bench] WARNING: {msg}")
 
-    run_paged(smoke=smoke)
-    run_spec(smoke=smoke, tp=tp)
+    run_paged(smoke=smoke, seed=seed)
+    run_spec(smoke=smoke, tp=tp, seed=seed)
 
 
 def main() -> int:
@@ -448,11 +638,20 @@ def main() -> int:
     ap.add_argument("--spec", action="store_true",
                     help="run only the speculative-decode race "
                          "(BENCH_serve_spec[_smoke].json)")
+    ap.add_argument("--prefix", action="store_true",
+                    help="run only the prefix-cache race "
+                         "(BENCH_serve_prefix[_smoke].json)")
+    ap.add_argument("--seed", type=int, default=7,
+                    help="base trace seed; each section derives its own "
+                         "offset from it and records it in the emitted "
+                         "BENCH json metadata")
     args = ap.parse_args()
     if args.spec:
-        run_spec(smoke=args.smoke, tp=args.tp)
+        run_spec(smoke=args.smoke, tp=args.tp, seed=args.seed)
+    elif args.prefix:
+        run_prefix(smoke=args.smoke, tp=args.tp, seed=args.seed)
     else:
-        run(smoke=args.smoke, tp=args.tp)
+        run(smoke=args.smoke, tp=args.tp, seed=args.seed)
     return 0
 
 

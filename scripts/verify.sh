@@ -34,6 +34,13 @@ if [[ "${1:-}" != "--fast" ]]; then
   # BENCH_serve_spec_smoke.json, never the full-run baseline)
   XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
     python -m benchmarks.serve_bench --smoke --tp 2
+  echo "== CPU smoke: prefix cache (shared pages + COW) race =="
+  # prefix-on vs prefix-off at the same overcommitted pool budget:
+  # greedy token identity (incl. tp=2 chain + speculative compose row),
+  # strictly higher admitted concurrency; writes
+  # BENCH_serve_prefix_smoke.json, never the full-run baseline
+  XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
+    python -m benchmarks.serve_bench --prefix --smoke --tp 2
   echo "== CPU smoke: kernel wall-clock (two-call vs fused) =="
   python -m benchmarks.kernel_bench --smoke
 fi

@@ -134,7 +134,8 @@ class NanoQuantModel:
                admission: str = "continuous", mesh=None,
                sharding_policy=None,
                spec_rank_frac: Optional[float] = None,
-               spec_k: Optional[int] = None) -> InferenceEngine:
+               spec_k: Optional[int] = None,
+               prefix_cache: Optional[bool] = None) -> InferenceEngine:
         """The serving entry point: a slot-scheduled, continuously
         batched :class:`InferenceEngine` over this model
         (`submit(req) -> handle`, per-token streaming, `step()` /
@@ -153,12 +154,18 @@ class NanoQuantModel:
         view of the packed params, verify in one batched full-rank
         forward — greedy outputs stay token-identical. They override
         the matching ``ServeConfig`` fields (requires greedy=True and
-        the paged cache)."""
+        the paged cache).
+
+        `prefix_cache` overrides ``ServeConfig.prefix_cache`` (shared
+        prompt-prefix KV pages with copy-on-write; on by default for
+        paged linear-table families — see docs/serving.md)."""
         scfg = scfg or ServeConfig()
         if spec_rank_frac is not None:
             scfg = dataclasses.replace(scfg, spec_rank_frac=spec_rank_frac)
         if spec_k is not None:
             scfg = dataclasses.replace(scfg, spec_k=spec_k)
+        if prefix_cache is not None:
+            scfg = dataclasses.replace(scfg, prefix_cache=prefix_cache)
         return InferenceEngine(self.params, self.cfg,
                                scfg, max_batch=max_batch,
                                max_len=max_len, seed=seed,

@@ -63,6 +63,14 @@ def main():
                          "incompatible with --rect)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="max draft tokens per speculative cycle")
+    ap.add_argument("--no-prefix", action="store_true",
+                    help="disable the prefix cache (shared prompt-"
+                         "prefix KV pages; on by default for paged "
+                         "linear-table families)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared system-prompt "
+                         "tokens to every request (demo of prefix-"
+                         "cache page sharing)")
     args = ap.parse_args()
 
     if args.quantized_ckpt and not args.fp:
@@ -92,7 +100,8 @@ def main():
                            kv_pool_pages=args.kv_pool_pages or None,
                            greedy=bool(spec),
                            spec_rank_frac=spec,
-                           spec_k=args.spec_k)
+                           spec_k=args.spec_k,
+                           prefix_cache=not args.no_prefix)
     if spec:
         print(f"[serve] speculative decode: rank_frac={spec} "
               f"k<={args.spec_k} (greedy sampling forced)")
@@ -103,17 +112,27 @@ def main():
         print(f"[serve] tensor-parallel over {args.tp} devices "
               f"(mesh axes {mesh.axis_names}, shape {dict(mesh.shape)})")
     eng = model.engine(scfg, max_batch=args.max_batch,
-                       max_len=args.prompt_len + args.max_new,
+                       max_len=(args.shared_prefix + args.prompt_len
+                                + args.max_new),
                        admission=args.engine, mesh=mesh)
     rng = np.random.default_rng(0)
     shape = ((args.prompt_len, cfg.n_codebooks)
              if cfg.family == "audio" else (args.prompt_len,))
+    sys_prompt = None
+    if args.shared_prefix:
+        if cfg.family == "audio":
+            ap.error("--shared-prefix does not support audio prompts")
+        sys_prompt = rng.integers(0, cfg.vocab_size,
+                                  size=args.shared_prefix).astype(np.int32)
     t0 = time.time()
     handles = []
     for uid in range(args.requests):
-        handles.append(eng.submit(api.Request(uid, rng.integers(
-            0, cfg.vocab_size, size=shape).astype(np.int32),
-            max_new_tokens=args.max_new)))
+        prompt = rng.integers(
+            0, cfg.vocab_size, size=shape).astype(np.int32)
+        if sys_prompt is not None:
+            prompt = np.concatenate([sys_prompt, prompt])
+        handles.append(eng.submit(api.Request(
+            uid, prompt, max_new_tokens=args.max_new)))
     done = eng.run()
     dt = time.time() - t0
     n_tok = sum(len(r.output) for r in done.values())
@@ -154,6 +173,16 @@ def _print_pool_stats(eng) -> None:
           f"MiB), peak {eng.kv.peak_used_pages} pages in use, "
           f"{eng.stats['page_waits']} page waits, "
           f"{eng.stats['preemptions']} preemptions")
+    if eng.prefix is not None:
+        st = eng.stats
+        rate = (st["prefix_hit_tokens"] / st["prefix_lookup_tokens"]
+                if st["prefix_lookup_tokens"] else 0.0)
+        print(f"[serve] prefix cache: hit rate {rate:.2f} "
+              f"({st['prefix_hit_tokens']}/{st['prefix_lookup_tokens']} "
+              f"prompt tokens served from shared pages), peak "
+              f"{st['shared_pages']} shared pages, "
+              f"{st['cow_copies']} COW copies, "
+              f"{st['evicted_pages']} cached pages evicted")
 
 
 if __name__ == "__main__":

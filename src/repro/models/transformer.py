@@ -569,14 +569,27 @@ def _mamba_prefill(p, cfg, x, state):
     return L.dense(p["out_proj"], y), new_state
 
 
-def prefill(params, cfg, tokens, cache, image_embeds=None, last_idx=None):
+def prefill(params, cfg, tokens, cache, image_embeds=None, last_idx=None,
+            start_pos=None, block_tables=None):
     """Process the prompt; returns (last-token logits, filled cache).
 
     last_idx: position of the final *real* prompt token. Defaults to the
     last column; pass it when `tokens` is right-padded to a compile
     bucket — causality makes the logits at last_idx (and the cache rows
-    up to it) identical to an unpadded prefill."""
-    h, cache = _cached_forward(params, cfg, tokens, cache, 0, image_embeds)
+    up to it) identical to an unpadded prefill.
+
+    start_pos / block_tables: the **suffix prefill** path (prefix-cached
+    serving, serve.prefix): `cache` is the paged pool, rows
+    ``[0, start_pos)`` of the slot already hold the shared prefix KV,
+    and `tokens` is only the uncached suffix. Token j writes cache row
+    ``start_pos + j`` through the slot's linear block table and attends
+    to every earlier row — the same mechanics as the speculative
+    multi-token verify (`decode_step` with S > 1), just admission-sized.
+    `start_pos` follows decode_step's pos contract ((B,) vector for
+    per-slot offsets); linear-only tables, like any S > 1 paged call."""
+    h, cache = _cached_forward(params, cfg, tokens, cache,
+                               0 if start_pos is None else start_pos,
+                               image_embeds, block_tables=block_tables)
     if last_idx is None:
         h = h[:, -1:]
     else:

@@ -4,14 +4,17 @@
 decode slots over one persistent cache (a paged KV pool by default:
 fixed-size pages + per-slot block tables, ``repro.serve.paging``),
 per-slot positions / budgets / EOS, mid-flight admission with
-power-of-two prefill buckets, page-aware overcommit admission, optional
+power-of-two prefill buckets, page-aware overcommit admission, shared
+prompt-prefix KV pages (:class:`PrefixCache`, ``repro.serve.prefix``:
+refcounted copy-on-write sharing + LRU eviction), optional
 tensor-parallel execution over a mesh. :class:`SlotScheduler` holds the
 host-side bookkeeping; :class:`BatchServer` is the deprecated
 wave-admission shim. Enter through ``api.NanoQuantModel.engine()``.
 """
 from repro.serve.scheduler import (  # noqa: F401
-    Request, SlotScheduler, bucket_length)
+    Request, SlotScheduler, bucket_length, pick_preemption_victim)
 from repro.serve.paging import PagedKVState  # noqa: F401
+from repro.serve.prefix import PrefixCache  # noqa: F401
 from repro.serve.engine import (  # noqa: F401
     InferenceEngine, RequestHandle, ServeConfig, make_prefill_step,
     make_serve_step, make_slot_prefill_step, sample_token)
@@ -20,7 +23,8 @@ from repro.serve.speculative import SpecDecodeController  # noqa: F401
 
 __all__ = [
     "InferenceEngine", "RequestHandle", "ServeConfig", "Request",
-    "SlotScheduler", "BatchServer", "PagedKVState",
-    "SpecDecodeController", "bucket_length", "sample_token",
-    "make_prefill_step", "make_serve_step", "make_slot_prefill_step",
+    "SlotScheduler", "BatchServer", "PagedKVState", "PrefixCache",
+    "SpecDecodeController", "bucket_length", "pick_preemption_victim",
+    "sample_token", "make_prefill_step", "make_serve_step",
+    "make_slot_prefill_step",
 ]

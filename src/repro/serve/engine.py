@@ -35,7 +35,8 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serve import paging
 from repro.serve.scheduler import (Request, SlotScheduler, bucket_length,
-                                   cache_insert_slot, cache_select_active)
+                                   cache_insert_slot, cache_select_active,
+                                   pick_preemption_victim)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +61,16 @@ class ServeConfig:
     kv_pool_pages: Optional[int] = None
     page_watermark: int = 0                # extra free pages required
     #                                        to admit (beyond the prompt)
+    # --- prefix caching (docs/serving.md §Prefix caching) ---
+    # prefix_cache=True (default) shares prompt-prefix KV pages across
+    # requests through a chained-hash index (serve.prefix): admission
+    # maps the longest cached prefix read-only and prefills only the
+    # suffix; writes into shared pages copy-on-write; cached pages are
+    # evicted LRU at refcount zero under pool pressure. Greedy outputs
+    # stay token-identical to the no-sharing engine. Requires the paged
+    # linear-only-table cache and a token-determined KV (ring/hybrid,
+    # SSM and VLM families silently serve unshared).
+    prefix_cache: bool = True
     # --- self-speculative decoding (docs/serving.md §Speculative) ---
     # spec_rank_frac enables the rank-truncated draft: each engine tick
     # drafts up to spec_k tokens through a zero-copy rank-r' view of the
@@ -177,9 +188,12 @@ class RequestHandle:
         self.tokens: List[Any] = []
         self.done = False
         self.submit_t = time.monotonic()
+        self.first_token_t: Optional[float] = None
         self.finish_t: Optional[float] = None
 
     def _append(self, token) -> None:
+        if self.first_token_t is None:
+            self.first_token_t = time.monotonic()
         self.tokens.append(token)
 
     def result(self) -> np.ndarray:
@@ -209,6 +223,16 @@ class RequestHandle:
         if self.finish_t is None:
             return None
         return self.finish_t - self.submit_t
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token: submission -> first emitted token (the
+        admission-queue wait plus the prefill). What prefix caching
+        shrinks — both directly (suffix-only prefill) and through
+        admission headroom (shared pages are nearly free to admit)."""
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
 
 
 @dataclasses.dataclass
@@ -354,6 +378,17 @@ class InferenceEngine:
         self.stats: Dict[str, int] = {}
         self.reset_stats()
 
+        # prefix cache (serve.prefix): share prompt-prefix KV pages
+        # across requests. Linear-only table families with token-
+        # determined KV; the VLM's cache depends on image embeddings the
+        # index cannot key, so it serves unshared.
+        self.prefix = None
+        if self.paged and self.scfg.prefix_cache \
+                and set(self.kv.tables) == {"linear"} \
+                and cfg.family != "vlm":
+            from repro.serve.prefix import PrefixCache
+            self.prefix = PrefixCache(self.kv, self.stats)
+
         slot_prefill = make_slot_prefill_step(cfg, max_len)
 
         def prefill_fn(params, tokens, last_idx):
@@ -361,6 +396,20 @@ class InferenceEngine:
             with self._trace_scope():
                 return slot_prefill(params, tokens, last_idx)
         self._prefill = jax.jit(prefill_fn)
+
+        # suffix prefill (prefix-cache hits): run only the uncached
+        # tail of a prompt directly against the donated pool, writing
+        # rows [start, start+S) through the slot's linear block table —
+        # the admission-sized sibling of the speculative S>1 verify.
+        def suffix_fn(params, tokens, start, last_idx, cache, table):
+            self.stats["prefill_traces"] += 1
+            with self._trace_scope():
+                return T.prefill(params, cfg, tokens, cache,
+                                 last_idx=last_idx, start_pos=start,
+                                 block_tables={"linear": table})
+        self._suffix_prefill = jax.jit(suffix_fn, donate_argnums=(4,))
+        # copy-on-write page duplication (one compile, traced page ids)
+        self._copy_page = jax.jit(paging.copy_page, donate_argnums=(0,))
         # donate the pooled cache: insert/decode consume the old pool and
         # return the next one, so XLA can update it in place instead of
         # materializing a second full KV pool per token (the decode loop
@@ -473,14 +522,33 @@ class InferenceEngine:
             #                    batch (kv.admit runs after admit_batch)
 
             def gate(item):
-                need = self.kv.pages_for_prompt(self._item_prompt_len(item))
+                n = self._item_prompt_len(item)
+                need = self.kv.pages_for_prompt(n)
+                if self.prefix is not None:
+                    # a matched prefix is nearly free admission: shared
+                    # pages only bump refcounts. A full-cover match
+                    # still pays one page — the tail is copy-on-written
+                    # so the re-emitted last row has a private home.
+                    p, pages, keys = self.prefix.match(
+                        self._item_prompt(item))
+                    need += (1 if p == n else 0) - len(pages)
+                    # pin the matched chain BEFORE the availability
+                    # check: available_pages must not count the pages
+                    # this item is about to share as evictable slack,
+                    # and a later admission's reclaim in this batch
+                    # must not evict them before kv.admit refs them
+                    # (_admit re-matches; protection guarantees the
+                    # fresh match finds at least this chain)
+                    self.prefix.protect(keys)
                 # the watermark holds back slack for *fresh* work only:
                 # a preempted _Resume was already admitted once and its
                 # grown prompt (<= one slot's worst case, which always
                 # fits) may legitimately exceed what submit() validated
                 # — gating it on the watermark could livelock the queue.
                 wm = 0 if isinstance(item, _Resume) else self.kv.watermark
-                ok = self.kv.free_pages - promised[0] - need >= wm
+                # available_pages counts evictable cached pages too —
+                # reclaim frees them on demand during kv.admit
+                ok = self.kv.available_pages - promised[0] - need >= wm
                 if ok:
                     promised[0] += need
                 else:
@@ -490,6 +558,8 @@ class InferenceEngine:
             fin = self._admit(slot, handle)
             if fin is not None:
                 finished.append(fin)
+        if self.prefix is not None:
+            self.prefix.unprotect_all()
         self.stats["peak_active"] = max(self.stats["peak_active"],
                                         int(self.active.sum()))
         if self.active.any():
@@ -551,7 +621,14 @@ class InferenceEngine:
                   "peak_active", "preempt_recompute_tokens",
                   "spec_cycles", "spec_draft_tokens",
                   "spec_accepted_tokens", "spec_rollback_tokens",
-                  "spec_rollback_pages"):
+                  "spec_rollback_pages",
+                  # prefix cache (docs/serving.md §Prefix caching):
+                  # hit/lookup tokens give the hit rate; shared_pages is
+                  # the peak pages mapped by >1 slot; cow_copies counts
+                  # copy-on-write page duplications; evicted_pages
+                  # counts LRU index evictions under pool pressure.
+                  "prefix_hit_tokens", "prefix_lookup_tokens",
+                  "shared_pages", "cow_copies", "evicted_pages"):
             self.stats[k] = 0
         # host wall-clock spent in the decode/spec device step + commit
         # (benchmarks divide tokens_emitted by this for decode tok/s)
@@ -577,12 +654,20 @@ class InferenceEngine:
     # ---- internals --------------------------------------------------------
 
     @staticmethod
+    def _item_prompt(item) -> np.ndarray:
+        """Tokens an admission unit will prefill (resumes prefill
+        prompt + already-emitted tokens — so a resume's own previously
+        registered chunks match, which is exactly the preemption
+        recompute the prefix index refunds)."""
+        if isinstance(item, _Resume):
+            return item.prompt
+        return np.asarray(item.request.prompt, np.int32)
+
+    @staticmethod
     def _item_prompt_len(item) -> int:
         """Prompt rows an admission unit will prefill (resumes prefill
         prompt + already-emitted tokens)."""
-        if isinstance(item, _Resume):
-            return item.prompt.shape[0]
-        return np.asarray(item.request.prompt).shape[0]
+        return InferenceEngine._item_prompt(item).shape[0]
 
     def _admit(self, slot: int, item) -> Optional[Request]:
         """Prefill `item`'s prompt into `slot` and emit its next token.
@@ -603,25 +688,46 @@ class InferenceEngine:
             # same unit as spec_rollback_tokens, so preemption cost and
             # speculative rollback cost are directly comparable.
             self.stats["preempt_recompute_tokens"] += int(n)
-        if self.cfg.is_ssm_layer_stack:
-            # right-padding would leak pad tokens into the recurrent
-            # SSM/conv state, so SSM-stack families prefill at the exact
-            # prompt length (one compile per distinct length).
-            bucket = n
+        hit = (0, [])
+        if self.prefix is not None:
+            # match fresh (not the gate's estimate): an earlier _admit
+            # in this same batch may have registered chunks this prompt
+            # can now share. Gate-matched entries are protected, so the
+            # fresh match only ever covers MORE than the gate promised
+            # pages for — and kv.admit refs the pages immediately, with
+            # no reclaim possible in between (same host thread).
+            p, pages, _ = self.prefix.match(prompt)
+            hit = (p, pages)
+            self.stats["prefix_lookup_tokens"] += int(n)
+            self.stats["prefix_hit_tokens"] += int(p)
+        if hit[0] > 0:
+            logits = self._admit_shared(slot, prompt, n, *hit)
         else:
-            bucket = bucket_length(n, self.max_len)
-        padded = np.zeros((1, bucket) + prompt.shape[1:], np.int32)
-        padded[0, :n] = prompt
-        logits, single = self._prefill(self.params, jnp.asarray(padded),
-                                       jnp.asarray(n - 1, jnp.int32))
-        if self.paged:
-            ids = self.kv.admit(slot, n)           # gated by admit_batch
-            self.cache = self._insert(
-                self.cache, single, jnp.asarray(slot, jnp.int32),
-                {k: jnp.asarray(v) for k, v in ids.items()})
-        else:
-            self.cache = self._insert(self.cache, single,
-                                      jnp.asarray(slot, jnp.int32))
+            if self.cfg.is_ssm_layer_stack:
+                # right-padding would leak pad tokens into the recurrent
+                # SSM/conv state, so SSM-stack families prefill at the
+                # exact prompt length (one compile per distinct length).
+                bucket = n
+            else:
+                bucket = bucket_length(n, self.max_len)
+            padded = np.zeros((1, bucket) + prompt.shape[1:], np.int32)
+            padded[0, :n] = prompt
+            logits, single = self._prefill(self.params, jnp.asarray(padded),
+                                           jnp.asarray(n - 1, jnp.int32))
+            if self.paged:
+                ids = self.kv.admit(slot, n)       # gated by admit_batch
+                self.cache = self._insert(
+                    self.cache, single, jnp.asarray(slot, jnp.int32),
+                    {k: jnp.asarray(v) for k, v in ids.items()})
+            else:
+                self.cache = self._insert(self.cache, single,
+                                          jnp.asarray(slot, jnp.int32))
+        if self.prefix is not None:
+            # adopt this slot's full-chunk pages; chunks already indexed
+            # (including everything just mapped shared) are skipped
+            self.prefix.register(prompt, n, self.kv.tables["linear"][slot])
+            self.stats["shared_pages"] = max(self.stats["shared_pages"],
+                                             self.kv.shared_page_count)
         self.key, k = jax.random.split(self.key)
         tok = sample_token(logits, k, self.scfg)       # (1,1) or (1,K)
         if self.cfg.family == "audio":
@@ -640,25 +746,102 @@ class InferenceEngine:
             self.tokens[slot] = tok[0]
         return fin
 
+    def _admit_shared(self, slot: int, prompt: np.ndarray, n: int,
+                      p: int, pages: List[int]) -> jnp.ndarray:
+        """Prefix-hit admission: map the `p` matched tokens' pages
+        (`pages`) read-only into `slot` and prefill only the uncached
+        suffix directly into the pool (the start-offset prefill path).
+        A full-cover match (p == n) still re-emits from the last prompt
+        token, so its row is copy-on-written first and exactly one
+        token is re-prefilled. Returns the next-token logits."""
+        self.kv.admit(slot, n, shared=pages)
+        start = n - 1 if p == n else p
+        ok = self._cow_rows(slot, start, n)
+        assert ok, "admission COW starved: gate promised the page"
+        suffix = prompt[start:]
+        ps = self.kv.page_size
+        # clamp the compile bucket to the slot's row capacity: bucketed
+        # pad rows past it would wrap (paged_cache_write writes modulo
+        # table_width * page_size) and trash the shared prefix pages
+        bucket = min(bucket_length(suffix.shape[0], self.max_len),
+                     self.kv.lin_pages * ps - start)
+        padded = np.zeros((1, bucket) + prompt.shape[1:], np.int32)
+        padded[0, :suffix.shape[0]] = suffix
+        table = jnp.asarray(self.kv.tables["linear"][slot:slot + 1])
+        logits, self.cache = self._suffix_prefill(
+            self.params, jnp.asarray(padded),
+            jnp.asarray([start], jnp.int32),
+            jnp.asarray(suffix.shape[0] - 1, jnp.int32),
+            self.cache, table)
+        return logits
+
     def _ensure_decode_pages(self) -> None:
         """Lazy page reservation before a decode step: every active slot
-        must have the page its next cache write lands in. If the pool
-        runs dry, the *youngest-admitted* active slot is preempted —
-        requeued at the queue front as a _Resume (re-prefill prompt +
-        emitted, token-exact under greedy) — until the write fits. The
-        youngest may be the needy slot itself (it then self-preempts
-        rather than evicting an older neighbour), so the oldest slot
-        always survives; and one slot's worst case fits the pool by
-        construction (PagedKVState rejects smaller pools), so a lone
+        must have the page its next cache write lands in (privately —
+        a shared page is copy-on-written first). If the pool runs dry,
+        the cheapest-to-recompute active slot is preempted — requeued
+        at the queue front as a _Resume (re-prefill prompt + emitted,
+        token-exact under greedy) — until the write fits. The victim
+        may be the needy slot itself (it then self-preempts rather than
+        evicting a costlier neighbour); each preemption shrinks the
+        active set, one slot's worst case fits the pool by construction
+        (PagedKVState rejects smaller pools), and a preempted slot's
+        registered prefix pages stay evictable-on-demand — so a lone
         survivor always progresses."""
         for slot in np.nonzero(self.active)[0]:
-            while self.active[slot] and \
-                    not self.kv.ensure(int(slot), int(self.pos[slot])):
-                self._preempt(self._youngest_active())
+            while self.active[slot] and not self._reserve_decode_rows(
+                    int(slot), int(self.pos[slot]) + 1):
+                self._preempt(self._select_victim())
 
-    def _youngest_active(self) -> int:
-        return int(max(np.nonzero(self.active)[0], key=lambda s: (
-            self.admission_step.get(self._tasks[s].handle.uid, -1), s)))
+    def _reserve_decode_rows(self, slot: int, n_rows: int) -> bool:
+        """Make rows [pos, n_rows) of `slot` privately writable: map
+        their pages, then copy-on-write any the slot shares (with the
+        prefix index or another slot). False => pool dry even after
+        LRU eviction; the caller preempts and retries (both steps are
+        idempotent). Shared by the plain decode tick (n_rows = pos+1)
+        and the speculative cycle (pos+k+1)."""
+        if not self.kv.reserve_rows(slot, n_rows):
+            return False
+        return self._cow_rows(slot, int(self.pos[slot]), n_rows)
+
+    def _cow_rows(self, slot: int, row0: int, row1: int) -> bool:
+        """Copy-on-write every shared page covering upcoming writes to
+        rows [row0, row1) of `slot`. False => pool dry."""
+        while True:
+            idx = self.kv.next_shared_write_page(slot, row0, row1)
+            if idx is None:
+                return True
+            pair = self.kv.cow(slot, idx)
+            if pair is None:
+                return False
+            self.cache = self._copy_page(self.cache,
+                                         jnp.asarray(pair[0], jnp.int32),
+                                         jnp.asarray(pair[1], jnp.int32))
+            self.stats["cow_copies"] += 1
+
+    def _select_victim(self) -> int:
+        """Preemption victim = the active slot with the lowest
+        recompute cost: the tokens its resume would re-prefill that the
+        prefix index does NOT already cover (scheduler.
+        pick_preemption_victim; ties break youngest-first). Without a
+        prefix index nothing is covered, so cost is simply the resume
+        length."""
+        cands = []
+        for s in np.nonzero(self.active)[0]:
+            s = int(s)
+            task = self._tasks[s]
+            resume = np.concatenate(
+                [np.asarray(task.handle.request.prompt, np.int32),
+                 np.asarray(task.toks, np.int32).reshape(
+                     (len(task.toks),)
+                     + np.asarray(task.handle.request.prompt).shape[1:])],
+                axis=0)
+            cost = resume.shape[0]
+            if self.prefix is not None:
+                cost -= self.prefix.match_len(resume)
+            cands.append((s, cost,
+                          self.admission_step.get(task.handle.uid, -1)))
+        return pick_preemption_victim(cands)
 
     def _preempt(self, slot: int) -> None:
         """Evict `slot` mid-decode: free its pages and requeue the rest

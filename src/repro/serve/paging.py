@@ -36,7 +36,7 @@ the decode read is exactly the rectangular decode mask over the gather
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Set
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -148,6 +148,22 @@ def paged_insert_slot(cache, single, slot, tables):
     return jax.tree_util.tree_map_with_path(ins, cache, single)
 
 
+def copy_page(cache, src, dst):
+    """Device-side copy-on-write: duplicate page `src` into page `dst`
+    across every pageable leaf of the pool (rectangular leaves pass
+    through untouched). `src`/`dst` are traced scalars, so one jitted
+    compilation covers every COW in the engine's lifetime; the engine
+    donates the pool so XLA updates the `dst` page in place."""
+    def cp(kp, leaf):
+        path = _path_str(kp)
+        if page_kind(path) is None:
+            return leaf
+        ax = len(leaf.shape) - _SEQ_OFF[path.rsplit("/", 1)[-1]] - 1
+        row = jax.lax.dynamic_slice_in_dim(leaf, src, 1, axis=ax)
+        return jax.lax.dynamic_update_slice_in_dim(leaf, row, dst, axis=ax)
+    return jax.tree_util.tree_map_with_path(cp, cache)
+
+
 def paged_select_active(new, old, active):
     """Per-slot active select for a paged cache: pool leaves pass
     through untouched — paged decode writes are slot-isolated by
@@ -173,8 +189,20 @@ class PagedKVState:
     drop-in for the rectangular one. Pass a smaller ``n_pages`` (e.g.
     via ``ServeConfig.kv_pool_pages``) to overcommit: admission then
     gates on free pages (``can_admit``, FIFO head-of-line), decode
-    reserves lazily (``ensure``) and the engine preempts the youngest
-    slot if the pool runs truly dry.
+    reserves lazily (``ensure``) and the engine preempts a slot if the
+    pool runs truly dry (victim = lowest recompute cost, engine-side).
+
+    Pages are **refcounted** (docs/serving.md §Prefix caching): ``ref``
+    counts slot block-table mappings and ``cached`` marks pages held by
+    the prefix index (serve.prefix). ``admit`` can map already-filled
+    shared pages (``shared=``) read-only into a new slot, and a page
+    returns to the free list only when its last mapping drops *and* the
+    index no longer holds it — ``release`` (preemption/completion) and
+    ``trim`` (speculative rollback) only ever decrement, so a page with
+    live sharers is never zeroed or reused. Writes into a shared page go
+    through :meth:`cow` first (fresh private copy, table rewired). When
+    the free list runs short, ``reclaim_cb`` (wired to the prefix
+    index's LRU eviction) is invoked before allocation fails.
     """
 
     def __init__(self, cfg, max_batch: int, max_len: int, page_size: int,
@@ -212,6 +240,17 @@ class PagedKVState:
         self._free = list(range(self.n_pages - 1, 0, -1))  # pop() ascending
         self._slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
         self._mapped = [0] * max_batch        # linear pages mapped per slot
+        # per-page sharing state: ref = live slot mappings, cached = the
+        # prefix index holds the page (serve.prefix). free <=> ref == 0
+        # and not cached. Page 0 (null) is never ref'd or cached.
+        self.ref = np.zeros(self.n_pages, np.int32)
+        self.cached = np.zeros(self.n_pages, bool)
+        # wired by the engine when a prefix cache exists: reclaim_cb(k)
+        # evicts up to k refcount-zero cached pages (LRU) back to the
+        # free list; evictable_cb() counts how many such evictions are
+        # currently possible (for admission headroom).
+        self.reclaim_cb: Optional[Callable[[int], int]] = None
+        self.evictable_cb: Optional[Callable[[], int]] = None
         self.peak_used_pages = 0
         self._device_tables: Optional[Dict[str, jnp.ndarray]] = None
 
@@ -225,37 +264,90 @@ class PagedKVState:
     def used_pages(self) -> int:
         return (self.n_pages - 1) - len(self._free)
 
+    @property
+    def available_pages(self) -> int:
+        """Pages obtainable right now: free list + cached pages the
+        prefix index could evict on demand (refcount zero)."""
+        ev = self.evictable_cb() if self.evictable_cb is not None else 0
+        return len(self._free) + ev
+
+    @property
+    def shared_page_count(self) -> int:
+        """Pages currently mapped by more than one slot."""
+        return int((self.ref > 1).sum())
+
+    @property
+    def cached_page_count(self) -> int:
+        """Pages currently held by the prefix index."""
+        return int(self.cached.sum())
+
     def pages_for_prompt(self, n: int) -> int:
         lin = -(-n // self.page_size) if self.has_linear else 0
         return lin + self.ring_pages
 
     def can_admit(self, n: int) -> bool:
-        return self.free_pages - self.pages_for_prompt(n) >= self.watermark
+        return self.available_pages - self.pages_for_prompt(n) \
+            >= self.watermark
 
     # ---- lifecycle --------------------------------------------------------
 
+    def _ensure_free(self, k: int) -> bool:
+        """Grow the free list to >= k pages, evicting refcount-zero
+        cached pages through ``reclaim_cb`` if needed. False => the pool
+        is truly dry (every page is mapped or pinned by a live sharer)."""
+        if len(self._free) < k and self.reclaim_cb is not None:
+            self.reclaim_cb(k - len(self._free))
+        return len(self._free) >= k
+
     def _alloc(self, k: int) -> List[int]:
-        assert len(self._free) >= k, "allocator invariant violated"
+        assert self._ensure_free(k), "allocator invariant violated"
         out = [self._free.pop() for _ in range(k)]
+        for p in out:
+            assert self.ref[p] == 0 and not self.cached[p], \
+                f"page {p} on the free list with live sharers"
+            self.ref[p] = 1
         self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
         return out
 
-    def admit(self, slot: int, n: int) -> Dict[str, np.ndarray]:
+    def _unref(self, page: int) -> bool:
+        """Drop one slot mapping of `page`; returns True when the page
+        went back to the free list (last mapping, not index-held)."""
+        self.ref[page] -= 1
+        assert self.ref[page] >= 0, f"page {page} refcount underflow"
+        if self.ref[page] == 0 and not self.cached[page]:
+            self._free.append(page)
+            return True
+        return False
+
+    def admit(self, slot: int, n: int,
+              shared: Sequence[int] = ()) -> Dict[str, np.ndarray]:
         """Reserve pages for an `n`-token prompt entering `slot`;
         returns the per-kind page-id vectors for ``paged_insert_slot``
-        (== the slot's fresh block-table rows)."""
+        (== the slot's fresh block-table rows).
+
+        shared: already-filled page ids (from a prefix-index match)
+        mapped read-only as the slot's *leading* linear pages — their
+        refcounts bump (pinning them against eviction) and only the
+        remaining suffix pages are allocated fresh. Refs are taken
+        before any allocation, so a reclaim triggered by the suffix
+        allocation can never evict the pages being shared."""
         assert not self._slot_pages[slot], f"slot {slot} pages leaked"
         self._device_tables = None
         ids: Dict[str, np.ndarray] = {}
         if self.has_linear:
             k = -(-n // self.page_size)
-            pages = self._alloc(k)
+            assert len(shared) <= k, "shared prefix longer than prompt"
+            for p in shared:
+                self.ref[p] += 1
+            pages = list(shared) + self._alloc(k - len(shared))
             self._slot_pages[slot].extend(pages)
             self._mapped[slot] = k
             row = self.tables["linear"][slot]
             row[:] = 0
             row[:k] = pages
             ids["linear"] = row.copy()
+        else:
+            assert not shared, "shared pages require a linear table"
         if self.has_ring:
             pages = self._alloc(self.ring_pages)
             self._slot_pages[slot].extend(pages)
@@ -281,7 +373,7 @@ class PagedKVState:
             return True
         need = -(-n_rows // self.page_size)
         while self._mapped[slot] < need:
-            if not self._free:
+            if not self._ensure_free(1):
                 return False
             page = self._alloc(1)[0]
             self._slot_pages[slot].append(page)
@@ -301,7 +393,13 @@ class PagedKVState:
         rows are trimmed. The rejected rows themselves need no device-
         side cleanup — rows past the committed frontier reconstruct to
         negative absolute positions in the decode mask and are never
-        read (see `kernels.ref.paged_attention_ref`)."""
+        read (see `kernels.ref.paged_attention_ref`).
+
+        Refcount-aware: a trimmed page only reaches the free list when
+        this slot held its last mapping and the prefix index does not —
+        a shared or cached page merely loses this slot's reference, so
+        speculative rollback can never hand a sharer's live KV to the
+        allocator."""
         if not self.has_linear:
             return 0
         keep = -(-n_rows // self.page_size)
@@ -314,20 +412,78 @@ class PagedKVState:
         for p in dropped:
             # by value: _slot_pages interleaves linear and ring pages
             self._slot_pages[slot].remove(p)
-        self._free.extend(reversed(dropped))
+        for p in reversed(dropped):
+            self._unref(p)
         self._mapped[slot] = keep
         self._device_tables = None
         return len(dropped)
 
     def release(self, slot: int) -> None:
-        """Free the slot's pages and zero its block-table rows (a later
-        occupant can never read a stale mapping)."""
-        self._free.extend(reversed(self._slot_pages[slot]))
+        """Drop the slot's page mappings and zero its block-table rows
+        (a later occupant can never read a stale mapping). Pages with
+        other live sharers — or held by the prefix index — survive with
+        their refcount/cached state; only exclusive uncached pages
+        return to the free list."""
+        for p in reversed(self._slot_pages[slot]):
+            self._unref(p)
         self._slot_pages[slot] = []
         self._mapped[slot] = 0
         for t in self.tables.values():
             t[slot] = 0
         self._device_tables = None
+
+    # ---- prefix-cache sharing (serve.prefix) ------------------------------
+
+    def mark_cached(self, page: int) -> None:
+        """The prefix index now holds `page` (pins it against free-list
+        reuse even at refcount zero, until :meth:`uncache`)."""
+        assert page != 0 and self.ref[page] > 0, \
+            f"page {page} must be live when the index adopts it"
+        self.cached[page] = True
+
+    def uncache(self, page: int) -> bool:
+        """Prefix-index eviction: drop the index's hold on `page`;
+        returns True when that freed it (refcount was already zero)."""
+        assert self.cached[page], f"page {page} not index-held"
+        self.cached[page] = False
+        if self.ref[page] == 0:
+            self._free.append(page)
+            return True
+        return False
+
+    def next_shared_write_page(self, slot: int, row0: int,
+                               row1: int) -> Optional[int]:
+        """First logical linear page index covering rows [row0, row1)
+        that `slot` cannot write privately (shared with another slot or
+        held by the prefix index); None when the whole range is safe."""
+        if not self.has_linear or row0 >= row1:
+            return None
+        row = self.tables["linear"][slot]
+        for i in range(row0 // self.page_size,
+                       -(-row1 // self.page_size)):
+            p = int(row[i])
+            if p and (self.ref[p] > 1 or self.cached[p]):
+                return i
+        return None
+
+    def cow(self, slot: int, page_idx: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write logical linear page `page_idx` of `slot`: map a
+        fresh private page in its place and return ``(src, dst)`` page
+        ids for the device copy (:func:`copy_page`). The shared source
+        keeps its other references untouched. None => pool dry even
+        after reclaim (caller preempts and retries)."""
+        if not self._ensure_free(1):
+            return None
+        src = int(self.tables["linear"][slot, page_idx])
+        assert src != 0, f"slot {slot} page {page_idx} unmapped"
+        dst = self._alloc(1)[0]
+        self.tables["linear"][slot, page_idx] = dst
+        # swap in place: _slot_pages order is unordered bookkeeping
+        self._slot_pages[slot].remove(src)
+        self._slot_pages[slot].append(dst)
+        self._unref(src)
+        self._device_tables = None
+        return src, dst
 
     def device_tables(self) -> Dict[str, jnp.ndarray]:
         """Block tables as device arrays for this decode step. Cached —

@@ -1,0 +1,230 @@
+"""Prefix cache: hash-keyed shared KV pages over the paged pool
+(docs/serving.md §Prefix caching).
+
+Shared-system-prompt traffic re-prefills the same leading tokens into
+private pages on every admission — at sub-1-bit weights the KV pool is
+the serving-memory bottleneck, so that duplication is exactly the bytes
+worth deduplicating. This module is the index that makes prompt-prefix
+KV a shared, refcounted resource:
+
+- The unit of sharing is one **page-aligned token chunk** (`page_size`
+  tokens <-> one KV page). Chunk ``i`` of a prompt is keyed by a
+  **chained hash** over every chunk up to and including it, so a key
+  identifies the chunk *in its exact left context* — two prompts share
+  page ``i`` only if they agree on all ``(i+1) * page_size`` leading
+  tokens. Entries store the raw chunk tokens and compare them on every
+  lookup, so a hash collision (or a reused uid, or any other aliasing)
+  degrades to a miss, never to wrong KV.
+- :meth:`match` walks the chain for an incoming prompt and returns the
+  longest indexed prefix with its page ids; the engine maps those pages
+  read-only (``PagedKVState.admit(shared=...)``) and prefills only the
+  uncached suffix.
+- :meth:`register` adopts a freshly prefilled slot's full-chunk pages
+  into the index (``mark_cached``). Registered pages hold only rows
+  below the owner's committed frontier, so the owner's decode/spec
+  writes never land in them; the first write that *would* (a full-cover
+  admission re-emitting from the prompt tail) goes through the
+  allocator's copy-on-write instead.
+- Eviction is **LRU at refcount zero only**: :meth:`reclaim` — wired as
+  the allocator's ``reclaim_cb`` — walks least-recently-matched leaf
+  entries whose pages no slot maps and returns them to the free list.
+  Interior chain entries (children > 0) leave only after every indexed
+  extension has, so a surviving key always has its whole chain behind
+  it.
+
+The index holds token->page mappings, never KV values; everything
+device-side stays in the one paged pool. KV for a token sequence is a
+deterministic function of the tokens (greedy, text-only families), so
+serving through the index is token-identical to the no-sharing engine
+by construction — the bench asserts it at every point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.serve.paging import PagedKVState
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One indexed chunk: `key` = chained hash of chunks[0..i], `page`
+    = the pool page holding its KV rows. `tokens` (raw bytes) guards
+    against hash collisions; `children` counts indexed extensions (leaf
+    <=> 0); `tick` is the LRU clock (bumped on match/register)."""
+    key: int
+    parent: Optional[int]
+    tokens: bytes
+    page: int
+    children: int = 0
+    tick: int = 0
+
+
+def _chunk_key(parent: Optional[int], chunk: np.ndarray) -> Tuple[int, bytes]:
+    b = np.ascontiguousarray(chunk, np.int32).tobytes()
+    return hash((parent, b)), b
+
+
+class PrefixCache:
+    """Host-side prefix index over one :class:`PagedKVState`.
+
+    Built by the engine (paged, linear-only-table families); wires
+    itself in as the allocator's reclaim/evictable callbacks. `stats`
+    is the engine's counter dict — eviction bumps ``evicted_pages``."""
+
+    def __init__(self, kv: PagedKVState, stats: Optional[Dict] = None):
+        assert kv.has_linear and not kv.has_ring, \
+            "prefix caching requires a linear-only page table"
+        self.kv = kv
+        self.page_size = kv.page_size
+        self.stats = stats if stats is not None else {"evicted_pages": 0}
+        self.entries: Dict[int, _Entry] = {}
+        self._tick = 0
+        # keys pinned for the current admission batch: matched in the
+        # gate but not yet ref'd by kv.admit — reclaim must not evict
+        # them in between (engine clears after the batch commits).
+        self.protected: Set[int] = set()
+        kv.reclaim_cb = self.reclaim
+        kv.evictable_cb = self.evictable_count
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    # ---- lookup -----------------------------------------------------------
+
+    def match(self, tokens: np.ndarray, probe: bool = False
+              ) -> Tuple[int, List[int], List[int]]:
+        """Longest indexed prefix of `tokens` (full chunks only).
+        Returns ``(matched_tokens, page_ids, keys)``. Bumps the LRU
+        tick of every matched entry unless `probe` (victim costing
+        must not distort recency)."""
+        toks = np.asarray(tokens)
+        pages: List[int] = []
+        keys: List[int] = []
+        parent: Optional[int] = None
+        self._tick += 1
+        for i in range(toks.shape[0] // self.page_size):
+            chunk = toks[i * self.page_size:(i + 1) * self.page_size]
+            key, b = _chunk_key(parent, chunk)
+            e = self.entries.get(key)
+            if e is None or e.tokens != b:
+                break
+            if not probe:
+                e.tick = self._tick
+            pages.append(e.page)
+            keys.append(key)
+            parent = key
+        return len(pages) * self.page_size, pages, keys
+
+    def match_len(self, tokens: np.ndarray) -> int:
+        """Probe-only: indexed-prefix length in tokens (the part of a
+        re-prefill the index would cover — preemption victim costing)."""
+        return self.match(tokens, probe=True)[0]
+
+    # ---- registration -----------------------------------------------------
+
+    def register(self, tokens: np.ndarray, n: int,
+                 table_row: np.ndarray) -> int:
+        """Adopt the full-chunk pages of `tokens[:n]` (just prefilled
+        into a slot whose linear block-table row is `table_row`) into
+        the index. Chunks already indexed are skipped — the existing
+        entry's page is canonical (sequential host admissions: had it
+        existed at match time it would have been shared). Returns the
+        number of pages newly adopted."""
+        toks = np.asarray(tokens)
+        parent: Optional[int] = None
+        adopted = 0
+        self._tick += 1
+        for i in range(min(int(n), toks.shape[0]) // self.page_size):
+            chunk = toks[i * self.page_size:(i + 1) * self.page_size]
+            key, b = _chunk_key(parent, chunk)
+            e = self.entries.get(key)
+            if e is not None:
+                if e.tokens != b:      # hash collision: stop the chain
+                    break
+                e.tick = self._tick
+                parent = key
+                continue
+            page = int(table_row[i])
+            assert page != 0, "registering an unmapped page"
+            self.entries[key] = _Entry(key, parent, b, page,
+                                       tick=self._tick)
+            self.kv.mark_cached(page)
+            if parent is not None:
+                self.entries[parent].children += 1
+            adopted += 1
+            parent = key
+        return adopted
+
+    # ---- pinning (admission-batch window) ---------------------------------
+
+    def protect(self, keys: Sequence[int]) -> None:
+        self.protected.update(keys)
+
+    def unprotect_all(self) -> None:
+        self.protected.clear()
+
+    # ---- eviction ---------------------------------------------------------
+
+    def _evictable(self, e: _Entry) -> bool:
+        return (e.children == 0 and e.key not in self.protected
+                and self.kv.ref[e.page] == 0)
+
+    def evictable_count(self) -> int:
+        """How many pages :meth:`reclaim` could free right now —
+        counts transitively: evicting a leaf may expose its parent."""
+        # children-count simulation without touching the index
+        extra: Dict[int, int] = {}
+        out = 0
+        # LRU order is irrelevant for the count; walk leaves repeatedly
+        frontier = [e for e in self.entries.values() if self._evictable(e)]
+        seen: Set[int] = set()
+        while frontier:
+            nxt: List[_Entry] = []
+            for e in frontier:
+                if e.key in seen:
+                    continue
+                seen.add(e.key)
+                out += 1
+                if e.parent is not None:
+                    p = self.entries[e.parent]
+                    extra[p.key] = extra.get(p.key, 0) + 1
+                    if (p.children - extra[p.key] == 0
+                            and p.key not in self.protected
+                            and self.kv.ref[p.page] == 0):
+                        nxt.append(p)
+            frontier = nxt
+        return out
+
+    def reclaim(self, k: int) -> int:
+        """Evict least-recently-matched leaf entries with refcount-zero
+        pages until `k` pages are freed (or nothing is evictable);
+        wired as ``PagedKVState.reclaim_cb``. Returns pages freed."""
+        freed = 0
+        while freed < k:
+            cands = [e for e in self.entries.values() if self._evictable(e)]
+            if not cands:
+                break
+            e = min(cands, key=lambda c: c.tick)
+            del self.entries[e.key]
+            if e.parent is not None:
+                self.entries[e.parent].children -= 1
+            if self.kv.uncache(e.page):
+                freed += 1
+                self.stats["evicted_pages"] = \
+                    self.stats.get("evicted_pages", 0) + 1
+        return freed
+
+    def clear(self) -> int:
+        """Drop every entry (benchmark resets). All pages must be at
+        refcount zero — i.e. the engine is drained."""
+        total = 0
+        while True:
+            freed = self.reclaim(len(self.entries) + 1)
+            total += freed
+            if not freed:
+                break
+        assert not self.entries, "clear() with live sharers still mapped"
+        return total

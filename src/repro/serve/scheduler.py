@@ -53,6 +53,18 @@ def bucket_length(n: int, max_len: int, floor: int = 8) -> int:
     return max(min(b, max_len), n)
 
 
+def pick_preemption_victim(candidates: List[Tuple[int, int, int]]) -> int:
+    """Cost-aware preemption policy: given ``(slot, recompute_cost,
+    admission_step)`` triples for every active slot, pick the victim
+    whose eviction wastes the least work — the minimum recompute cost
+    (tokens its resume must re-prefill that the prefix index does not
+    already cover). Ties break youngest-first (largest admission step,
+    then slot), which degenerates to the pre-prefix-cache youngest-
+    first policy when every cost is equal."""
+    assert candidates, "no active slot to preempt"
+    return min(candidates, key=lambda t: (t[1], -t[2], -t[0]))[0]
+
+
 def _batch_axis(path) -> int:
     # VLM self-attn caches are stacked (groups, per-1, batch, ...);
     # every other cache leaf carries batch at axis 1.

@@ -188,12 +188,14 @@ class SpecDecodeController:
             eng._decode_tick(finished)
             return
         # reserve pages for rows [0, pos+k+1) per slot — the cycle
-        # writes k+1 rows before the next host sync. Dry pool preempts
-        # the youngest (identical policy to _ensure_decode_pages).
+        # writes k+1 rows before the next host sync — COWing any the
+        # slot shares (prefix cache) so draft writes never touch a
+        # sharer's KV. Dry pool preempts the cheapest-to-recompute slot
+        # (identical policy to _ensure_decode_pages).
         for s in np.nonzero(eng.active)[0]:
-            while eng.active[s] and not eng.kv.reserve_rows(
+            while eng.active[s] and not eng._reserve_decode_rows(
                     int(s), int(eng.pos[s]) + k + 1):
-                eng._preempt(eng._youngest_active())
+                eng._preempt(eng._select_victim())
         if not eng.active.any():
             return
         slots = np.nonzero(eng.active)[0]

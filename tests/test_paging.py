@@ -59,7 +59,11 @@ def _assert_paged_matches_rect(params, cfg, prompts, budgets, paged_scfg,
     assert eng.paged
     for u in rect:
         np.testing.assert_array_equal(rect[u], paged[u])
-    assert eng.kv.used_pages == 0, "drained engine must hold no pages"
+    # drained: no slot maps anything; only the prefix index (when
+    # enabled) may still hold refcount-zero cached pages
+    assert not eng.kv.ref.any(), "drained engine must hold no mappings"
+    assert eng.kv.used_pages == eng.kv.cached_page_count, \
+        "drained engine holds non-index pages"
     return eng
 
 
@@ -261,13 +265,18 @@ def test_pool_exhaustion_queues_without_crash(served_model):
 
 def test_decode_exhaustion_preempts_youngest(served_model):
     """Two slots admitted cheap, then both grow: the pool runs dry
-    mid-decode, the youngest is preempted (requeued, re-prefilled) and
-    every output still matches the solo generate loop."""
+    mid-decode, a victim is preempted (requeued, re-prefilled) and
+    every output still matches the solo generate loop. With equal
+    recompute costs (identical prompt lengths and lockstep positions,
+    prefix cache off) the cost-aware policy degenerates to
+    youngest-first — the tie-break scheduler.pick_preemption_victim
+    guarantees."""
     cfg, params = served_model
     prompts = _prompts(cfg, [4, 4], seed=7)
     out, eng = _run(params, cfg, prompts, [24, 24],
                     ServeConfig(greedy=True, page_size=4,
-                                kv_pool_pages=9), max_len=32)
+                                kv_pool_pages=9, prefix_cache=False),
+                    max_len=32)
     assert eng.stats["preemptions"] >= 1
     # youngest-first: the first-admitted request is never evicted (its
     # admission step never moves), the younger one is re-admitted later
@@ -286,7 +295,8 @@ def test_uid_reuse_cannot_leak_pages_or_read_stale_tables(served_model):
     allocates fresh pages and reproduces the fresh-engine output."""
     cfg, params = served_model
     eng = InferenceEngine(params, cfg,
-                          ServeConfig(greedy=True, page_size=4),
+                          ServeConfig(greedy=True, page_size=4,
+                                      prefix_cache=False),
                           max_batch=1, max_len=32)
     p = _prompts(cfg, [9], seed=8)[0]
     first = eng.submit(Request(0, p, max_new_tokens=6)).result()

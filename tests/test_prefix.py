@@ -1,0 +1,382 @@
+"""Prefix cache subsystem (serve.prefix + the allocator's sharing
+primitives): chained-chunk index semantics, refcount/COW/eviction
+allocator invariants, cost-aware preemption victim selection, scheduler
+fairness for requeued resumes, uid-reuse/eviction aliasing, and the
+engine-level greedy token-identity guarantees (shared prompts,
+full-cover duplicates, page-boundary off-by-ones, speculative rollback
+over shared pages)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.quant.surgery import abstract_quantized_params
+from repro.serve import (InferenceEngine, PagedKVState, PrefixCache,
+                         Request, ServeConfig, pick_preemption_victim)
+from repro.serve.scheduler import SlotScheduler
+
+PS = 8
+
+
+@pytest.fixture()
+def kv(tiny_dense_cfg):
+    return PagedKVState(tiny_dense_cfg, max_batch=3, max_len=48,
+                        page_size=PS, n_pages=20)
+
+
+def _toks(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, size=(n,)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# index semantics: chained chunk hashing, partial chunks, left context
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_index_match_register(kv):
+    pc = PrefixCache(kv)
+    prompt = _toks(20)                       # 2 full chunks + 4 tokens
+    row = kv.admit(0, 20)["linear"]
+    assert pc.register(prompt, 20, row) == 2
+    assert len(pc) == 2                      # the partial chunk is not indexed
+    p, pages, keys = pc.match(prompt)
+    assert p == 16 and pages == [int(row[0]), int(row[1])] and len(keys) == 2
+    # same first chunk, different second chunk: one-chunk match
+    other = prompt.copy()
+    other[12] = (other[12] + 1) % 256
+    assert pc.match(other)[0] == PS
+    # a chunk is keyed in its left context: the second chunk's tokens at
+    # the START of a prompt must not resolve the indexed entry
+    assert pc.match(prompt[PS:])[0] == 0
+    # sub-chunk prompts never match (full chunks only)
+    assert pc.match(prompt[:PS - 1])[0] == 0
+    # registering the same prompt again adopts nothing new
+    assert pc.register(prompt, 20, row) == 0
+
+
+def test_refcount_sharing_release_and_eviction(kv):
+    pc = PrefixCache(kv)
+    prompt = _toks(20, seed=1)
+    row0 = kv.admit(0, 20)["linear"]
+    pc.register(prompt, 20, row0)
+    shared = [int(row0[0]), int(row0[1])]
+    assert all(kv.ref[p] == 1 and kv.cached[p] for p in shared)
+    # second slot maps the indexed pages read-only: refs bump, only the
+    # suffix page is fresh
+    ids = kv.admit(1, 20, shared=shared)["linear"]
+    assert list(ids[:2]) == shared
+    assert all(kv.ref[p] == 2 for p in shared)
+    assert kv.shared_page_count == 2
+    # owner leaves: shared pages survive with the sharer's ref; its
+    # private partial-chunk page frees
+    free0 = kv.free_pages
+    kv.release(0)
+    assert all(kv.ref[p] == 1 for p in shared)
+    assert kv.free_pages == free0 + 1
+    # last sharer leaves: refcount zero, but index-held pages must NOT
+    # hit the free list — they are evictable-on-demand instead
+    kv.release(1)
+    assert all(kv.ref[p] == 0 and kv.cached[p] for p in shared)
+    assert kv.used_pages == kv.cached_page_count == 2
+    assert kv.available_pages == kv.free_pages + 2
+    # reclaim evicts leaf-first (the chain stays rooted), LRU order
+    assert pc.reclaim(1) == 1
+    assert len(pc) == 1 and kv.cached_page_count == 1
+    assert pc.reclaim(1) == 1
+    assert len(pc) == 0 and kv.used_pages == 0
+    assert pc.stats["evicted_pages"] == 2
+
+
+def test_protected_entries_are_not_evictable(kv):
+    pc = PrefixCache(kv)
+    prompt = _toks(16, seed=2)
+    row = kv.admit(0, 16)["linear"]
+    pc.register(prompt, 16, row)
+    kv.release(0)
+    _, _, keys = pc.match(prompt)
+    assert pc.evictable_count() == 2        # leaf + transitively its parent
+    pc.protect(keys)
+    assert pc.evictable_count() == 0
+    assert pc.reclaim(2) == 0 and len(pc) == 2
+    pc.unprotect_all()
+    assert pc.reclaim(2) == 2 and len(pc) == 0
+
+
+def test_interior_entry_outlives_indexed_extensions(kv):
+    pc = PrefixCache(kv)
+    prompt = _toks(24, seed=3)              # chain of 3 chunks
+    row = kv.admit(0, 24)["linear"]
+    pc.register(prompt, 24, row)
+    kv.release(0)
+    # only the chain tail is a leaf; one reclaim step must take it, not
+    # an interior entry (a surviving key keeps its whole chain behind it)
+    pc.reclaim(1)
+    assert pc.match(prompt)[0] == 16
+    pc.reclaim(1)
+    assert pc.match(prompt)[0] == PS
+
+
+def test_cow_rewires_writer_only(kv):
+    pc = PrefixCache(kv)
+    prompt = _toks(16, seed=4)
+    row0 = kv.admit(0, 16)["linear"]
+    pc.register(prompt, 16, row0)
+    shared = [int(row0[0]), int(row0[1])]
+    kv.admit(1, 16, shared=shared)
+    # slot 1's next write lands in row 15 -> logical page 1, shared
+    assert kv.next_shared_write_page(1, 15, 16) == 1
+    assert kv.next_shared_write_page(1, 0, 8) == 0
+    src, dst = kv.cow(1, 1)
+    assert src == shared[1] and dst not in shared
+    assert kv.tables["linear"][1][1] == dst
+    assert kv.tables["linear"][0][1] == src      # owner untouched
+    assert kv.ref[src] == 1 and kv.ref[dst] == 1
+    assert kv.next_shared_write_page(1, 15, 16) is None
+    # pool dry (all pages mapped or cached, nothing evictable): cow
+    # fails gracefully instead of handing out a live page
+    while kv.free_pages:
+        kv._alloc(1)
+    assert kv.cow(1, 0) is None
+
+
+def test_lru_eviction_order_and_probe_neutrality(kv):
+    pc = PrefixCache(kv)
+    a, b = _toks(PS, seed=5), _toks(PS, seed=6)
+    row0 = kv.admit(0, PS)["linear"]
+    pc.register(a, PS, row0)
+    row1 = kv.admit(1, PS)["linear"]
+    pc.register(b, PS, row1)
+    kv.release(0)
+    kv.release(1)
+    pc.match(a)                             # a is now most-recently used
+    pc.reclaim(1)
+    assert pc.match(a)[0] == PS and pc.match(b)[0] == 0
+    # match_len is a probe: costing preemption victims must not distort
+    # recency, so b2 (probed last) is still evicted before a
+    row1 = kv.admit(1, PS)["linear"]
+    b2 = _toks(PS, seed=7)
+    pc.register(b2, PS, row1)
+    kv.release(1)
+    pc.match(a)
+    assert pc.match_len(b2) == PS
+    pc.reclaim(1)
+    assert pc.match(a)[0] == PS and pc.match(b2)[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# cost-aware preemption
+# ---------------------------------------------------------------------------
+
+
+def test_pick_preemption_victim_policy():
+    # minimum recompute cost wins
+    assert pick_preemption_victim([(0, 30, 1), (1, 4, 0), (2, 12, 2)]) == 1
+    # equal costs degenerate to youngest-first (largest admission step)
+    assert pick_preemption_victim([(0, 8, 1), (1, 8, 5), (2, 8, 3)]) == 1
+    # full tie: highest slot
+    assert pick_preemption_victim([(0, 8, 2), (2, 8, 2)]) == 2
+    with pytest.raises(AssertionError):
+        pick_preemption_victim([])
+
+
+def test_engine_victim_prefers_cheap_recompute(tiny_dense_cfg, tiny_params):
+    """The slot whose resume the index already covers (page-aligned
+    prompt: only emitted tokens would re-prefill) is preempted before an
+    older slot with an uncovered tail — even though youngest-first would
+    pick the opposite."""
+    cfg, params = tiny_dense_cfg, tiny_params
+    eng = InferenceEngine(params, cfg,
+                          ServeConfig(greedy=True, page_size=PS),
+                          max_batch=2, max_len=48)
+    expensive = _toks(23, seed=8)     # 2 chunks indexed + 7-token tail
+    cheap = _toks(32, seed=9)         # fully indexed (page-aligned)
+    eng.submit(Request(0, expensive, max_new_tokens=8))
+    eng.step()                        # admit 0 (older)
+    eng.submit(Request(1, cheap, max_new_tokens=8))
+    eng.step()                        # admit 1 (younger)
+    assert eng.active.sum() == 2
+    assert eng._select_victim() == eng.slot_of[1]
+    # without the index every resume is fully recomputed, and the longer
+    # fully-covered prompt is now the EXPENSIVE one -> victim flips
+    eng.prefix = None
+    assert eng._select_victim() == eng.slot_of[0]
+
+
+# ---------------------------------------------------------------------------
+# scheduler fairness: requeued resumes stay at the head
+# ---------------------------------------------------------------------------
+
+
+def test_resume_keeps_front_of_queue_on_gate_reject():
+    sched = SlotScheduler(2)
+    fresh_a, fresh_b, resume = object(), object(), object()
+    sched.submit(fresh_a)
+    sched.submit(fresh_b)
+    sched.requeue(resume)
+    assert list(sched.pending) == [resume, fresh_a, fresh_b]
+    # head-of-line gating: a rejected resume blocks later fresh admits
+    # (no starvation by smaller requests) and stays at the front
+    assert sched.admit_batch(gate=lambda item: item is not resume) == []
+    assert list(sched.pending) == [resume, fresh_a, fresh_b]
+    out = sched.admit_batch(gate=lambda item: True)
+    assert [item for _, item in out] == [resume, fresh_a]
+
+
+# ---------------------------------------------------------------------------
+# engine-level token identity
+# ---------------------------------------------------------------------------
+
+
+def _serve(params, cfg, prompts, budgets, scfg, max_batch=3, max_len=48,
+           uids=None, eng=None):
+    eng = eng or InferenceEngine(params, cfg, scfg, max_batch=max_batch,
+                                 max_len=max_len)
+    for uid, (p, b) in zip(uids or range(len(prompts)),
+                           zip(prompts, budgets)):
+        eng.submit(Request(uid, p, max_new_tokens=b))
+    done = eng.run()
+    return {u: r.output for u, r in done.items()}, eng
+
+
+def _assert_prefix_matches_plain(params, cfg, prompts, budgets, scfg=None,
+                                 **kw):
+    scfg = scfg or ServeConfig(greedy=True, page_size=PS)
+    plain, _ = _serve(params, cfg, prompts, budgets,
+                      dataclasses.replace(scfg, prefix_cache=False), **kw)
+    shared, eng = _serve(params, cfg, prompts, budgets, scfg, **kw)
+    assert eng.prefix is not None
+    for u in plain:
+        np.testing.assert_array_equal(plain[u], shared[u])
+    assert not eng.kv.ref.any(), "drained engine must hold no mappings"
+    assert eng.kv.used_pages == eng.kv.cached_page_count
+    return eng
+
+
+def test_engine_shared_prompt_identity(tiny_dense_cfg, tiny_params):
+    cfg, params = tiny_dense_cfg, tiny_params
+    sys_p = _toks(16, seed=10)
+    prompts = [np.concatenate([sys_p, _toks(n, seed=20 + n)])
+               for n in (3, 7, 5, 11)]
+    eng = _assert_prefix_matches_plain(params, cfg, prompts, [6, 8, 5, 7])
+    assert eng.stats["prefix_hit_tokens"] > 0
+    assert eng.stats["shared_pages"] > 0
+
+
+def test_engine_full_cover_duplicate_cow_identity(tiny_dense_cfg,
+                                                  tiny_params):
+    """Exact page-aligned duplicates: a full-cover match re-emits from
+    the last prompt token, so the tail page is copy-on-written at
+    admission — and outputs still match the no-sharing engine."""
+    cfg, params = tiny_dense_cfg, tiny_params
+    prompt = _toks(16, seed=11)
+    eng = _assert_prefix_matches_plain(
+        params, cfg, [prompt, prompt.copy(), prompt.copy()], [6, 6, 6])
+    assert eng.stats["cow_copies"] >= 2
+    assert eng.stats["prefix_hit_tokens"] >= 32
+
+
+def test_engine_page_boundary_off_by_ones(tiny_dense_cfg, tiny_params):
+    """Prompt lengths straddling every page boundary around the shared
+    chunk: ps-1 (no full chunk), ps, ps+1, 2ps, 2ps+1."""
+    cfg, params = tiny_dense_cfg, tiny_params
+    base = _toks(2 * PS + 1, seed=12)
+    prompts = [base[:PS - 1], base[:PS], base[:PS + 1],
+               base[:2 * PS], base]
+    _assert_prefix_matches_plain(params, cfg, prompts, [5, 5, 5, 5, 5],
+                                 max_batch=2, max_len=32)
+
+
+def test_uid_reuse_after_eviction_cannot_alias(tiny_dense_cfg, tiny_params):
+    """A tiny pool forces index eviction mid-trace; the SAME engine then
+    re-serves reused uids with different prompts. The index keys on
+    token content (raw bytes compared on every lookup), so neither the
+    reused uids nor the recycled pages can resolve stale entries —
+    outputs must match a sharing-free engine exactly."""
+    cfg, params = tiny_dense_cfg, tiny_params
+    scfg = ServeConfig(greedy=True, page_size=PS, kv_pool_pages=10)
+    first = [np.concatenate([_toks(16, seed=13), _toks(4, seed=30 + i)])
+             for i in range(4)]
+    second = [np.concatenate([_toks(16, seed=14), _toks(4, seed=40 + i)])
+              for i in range(4)]
+    plain, _ = _serve(params, cfg, first + second, [6] * 8,
+                      dataclasses.replace(scfg, prefix_cache=False),
+                      max_batch=3, max_len=32)
+    out1, eng = _serve(params, cfg, first, [6] * 4, scfg,
+                       max_batch=3, max_len=32)
+    out2, _ = _serve(params, cfg, second, [6] * 4, scfg, eng=eng,
+                     uids=range(4))
+    for u in range(4):
+        np.testing.assert_array_equal(plain[u], out1[u])
+        np.testing.assert_array_equal(plain[4 + u], out2[u])
+    assert eng.stats["evicted_pages"] > 0, \
+        "pool never pressured the index — the test lost its premise"
+    assert not eng.kv.ref.any()
+
+
+def test_prefix_clear_requires_drained_and_empties(tiny_dense_cfg,
+                                                   tiny_params):
+    cfg, params = tiny_dense_cfg, tiny_params
+    prompt = _toks(16, seed=15)
+    _, eng = _serve(params, cfg, [prompt], [4],
+                    ServeConfig(greedy=True, page_size=PS))
+    assert eng.kv.cached_page_count == 2
+    assert eng.prefix.clear() == 2
+    assert len(eng.prefix) == 0 and eng.kv.used_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# speculative rollback over shared pages
+# ---------------------------------------------------------------------------
+
+
+def _random_packed(cfg, seed=0):
+    """Random packed params (unit scales) — the rank-truncated draft
+    genuinely disagrees with the verifier, so rollback fires (same
+    construction as test_speculative)."""
+    tpl = abstract_quantized_params(cfg, target_bpw=2.0)
+    rng = np.random.default_rng(seed)
+
+    def fill(path, s):
+        last = getattr(path[-1], "key", str(path[-1]))
+        if s.dtype == jnp.uint32:
+            return jnp.asarray(rng.integers(
+                0, 2**32, size=s.shape, dtype=np.uint64).astype(np.uint32))
+        if last in ("s1", "s2"):
+            return jnp.ones(s.shape, s.dtype)
+        return jnp.asarray(rng.normal(0, 0.05, s.shape).astype(s.dtype))
+
+    return jax.tree_util.tree_map_with_path(fill, tpl)
+
+
+def test_spec_rollback_on_shared_pages_is_safe(tiny_dense_cfg):
+    """Speculative drafts write past the committed frontier into pages a
+    prefix hit may share; the reserve path COWs them first and rollback
+    only unrefs — so cached pages survive rejected drafts intact, and a
+    second trace served through the warmed index stays token-identical
+    to the sharing-free engine."""
+    cfg = tiny_dense_cfg
+    params = _random_packed(cfg, seed=16)
+    sys_p = _toks(16, seed=17)
+    prompts = [sys_p.copy(),
+               np.concatenate([sys_p, _toks(5, seed=18)]),
+               np.concatenate([sys_p, _toks(9, seed=19)])]
+    budgets = [8, 10, 8]
+    scfg = ServeConfig(greedy=True, page_size=PS, spec_rank_frac=0.5,
+                       spec_k=4)
+    plain, _ = _serve(params, cfg, prompts, budgets,
+                      ServeConfig(greedy=True, page_size=PS,
+                                  prefix_cache=False))
+    out1, eng = _serve(params, cfg, prompts, budgets, scfg)
+    out2, _ = _serve(params, cfg, prompts, budgets, scfg, eng=eng,
+                     uids=[10, 11, 12])
+    for u in plain:
+        np.testing.assert_array_equal(plain[u], out1[u])
+        np.testing.assert_array_equal(plain[u], out2[10 + u])
+    assert eng.stats["spec_rollback_tokens"] > 0, \
+        "draft never rejected — rollback path untested"
+    assert eng.stats["prefix_hit_tokens"] > 0
+    assert not eng.kv.ref.any()
+    assert eng.kv.used_pages == eng.kv.cached_page_count

@@ -296,7 +296,7 @@ def test_spec_identity_fp_full_rank(tiny_dense_cfg, tiny_params):
     cfg, params = tiny_dense_cfg, tiny_params
     prompts = _prompts(cfg.vocab_size, [5, 9, 3])
     budgets = [12, 8, 14]
-    base = ServeConfig(greedy=True, page_size=8)
+    base = ServeConfig(greedy=True, page_size=8, prefix_cache=False)
     plain, _ = _serve(params, cfg, prompts, budgets, base)
     spec_cfg = dataclasses.replace(base, spec_rank_frac=1.0, spec_k=4)
     spec, eng = _serve(params, cfg, prompts, budgets, spec_cfg)
@@ -317,7 +317,7 @@ def test_spec_identity_truncated_draft_with_rollback(tiny_dense_cfg):
     params = _random_packed(cfg)
     prompts = _prompts(cfg.vocab_size, [6, 11, 4], seed=3)
     budgets = [10, 8, 12]
-    base = ServeConfig(greedy=True, page_size=8)
+    base = ServeConfig(greedy=True, page_size=8, prefix_cache=False)
     plain, _ = _serve(params, cfg, prompts, budgets, base)
     spec_cfg = dataclasses.replace(base, spec_rank_frac=0.5, spec_k=4)
     spec, eng = _serve(params, cfg, prompts, budgets, spec_cfg)
@@ -342,7 +342,7 @@ def test_spec_rollback_never_leaks_pages_uid_reuse(tiny_dense_cfg):
     prompts = _prompts(cfg.vocab_size, [8, 8, 8, 8], seed=9)
     budgets = [12, 12, 12, 12]
     scfg = ServeConfig(greedy=True, page_size=8, kv_pool_pages=10,
-                       spec_rank_frac=0.5, spec_k=4)
+                       prefix_cache=False, spec_rank_frac=0.5, spec_k=4)
     first, eng1 = _serve(params, cfg, prompts, budgets, scfg,
                          max_batch=3, max_len=32)
     assert eng1.kv.used_pages == 0, "drained engine must hold no pages"
