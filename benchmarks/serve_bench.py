@@ -41,13 +41,27 @@ strictly higher admitted concurrency, and mean TTFT cut >= 2x (wall-
 clock: hard on the full run, warn-only under ``--smoke``); emits
 ``experiments/bench/BENCH_serve_prefix[_smoke].json``.
 
+The chaos section (``--chaos`` runs it alone) replays the scheduler
+trace on a prefix+speculative engine under a seeded ``FaultPlan``
+covering every fault kind (cancel at a tick / mid-prefill /
+mid-spec-rollback, a deadline storm, a dry-pool borrow, a prefix
+eviction inside the admission gate, a forced-preemption storm, one
+injected decode-step device error, one poison request) with
+``ServeConfig(debug=True)`` auditing page accounting after every tick.
+Gates: every handle reaches a structured terminal status, surviving
+requests' greedy outputs are token-identical to the undisturbed
+engine, the fired log and outputs are bit-for-bit reproducible across
+two identically-seeded runs, zero pages leak at quiesce, and a
+drain -> snapshot -> restore -> complete leg is token-identical end to
+end; emits ``experiments/bench/BENCH_serve_chaos[_smoke].json``.
+
 ``--seed`` (default 7) derives every section's trace seed (run=seed,
-paged=seed+4, spec=seed+16, prefix=seed+30 — the defaults reproduce
-the historical 7/11/23 traces) and is recorded in each emitted BENCH
-json's ``meta`` block.
+paged=seed+4, spec=seed+16, prefix=seed+30, chaos=seed+44 — the
+defaults reproduce the historical 7/11/23 traces) and is recorded in
+each emitted BENCH json's ``meta`` block.
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--tp N]
-        [--spec] [--prefix] [--seed S]
+        [--spec] [--prefix] [--chaos] [--seed S]
 """
 from __future__ import annotations
 
@@ -62,7 +76,8 @@ import numpy as np
 
 from benchmarks import common
 from repro.models import transformer as T
-from repro.serve import InferenceEngine, Request, ServeConfig
+from repro.serve import (Fault, FaultPlan, InferenceEngine, Request,
+                         ServeConfig, recovery)
 from repro.serve.scheduler import bucket_length
 
 MAX_BATCH = 4
@@ -529,6 +544,206 @@ def run_prefix(smoke: bool = False, tp: int = 1, seed: int = 7):
         print(f"[serve_bench] WARNING: {msg}")
 
 
+def build_chaos_plan(trace):
+    """One FaultPlan covering every fault kind, targeted so each fault
+    is *guaranteed* to fire: mid-flight kinds (cancel_spec,
+    device_error) hit the longest-budget requests — the ones that
+    cannot complete before the fault arms — and queue-side kinds
+    (expire, cancel) arm at step 0, firing at the first tick boundary
+    after their target is submitted, before it can be admitted. The
+    plan is a pure function of the (seeded) trace, so two runs from the
+    same --seed replay bit-for-bit."""
+    by_budget = sorted(trace, key=lambda t: (-t[1].max_new_tokens,
+                                             t[1].uid))
+    u = [r.uid for _, r in by_budget[:8]]
+    return [
+        # cancellation landing inside the speculative verify/commit
+        # cycle: the longest request, mid-flight on its first cycle
+        Fault(step=0, kind="cancel_spec", uid=u[0]),
+        # one injected decode device error, attributed to u[1] if still
+        # active (else the engine attributes the youngest active slot)
+        Fault(step=4, kind="device_error", uid=u[1]),
+        # cancellation landing between prefill and slot activation
+        Fault(step=0, kind="cancel_prefill", uid=u[2]),
+        # poison request: NaN prefill logits, isolated to this handle
+        Fault(step=0, kind="poison_prefill", uid=u[3]),
+        # deadline storm: three requests forced past their deadline
+        Fault(step=0, kind="expire", uid=u[4]),
+        Fault(step=0, kind="expire", uid=u[5]),
+        Fault(step=0, kind="expire", uid=u[6]),
+        # client cancellation at a tick boundary
+        Fault(step=0, kind="cancel", uid=u[7]),
+        # dry the pool: borrow 3 pages for 2 steps mid-trace
+        Fault(step=2, kind="dry_pool", pages=3, hold=2),
+        # evict cached prefix pages between the gate's match and admit
+        Fault(step=3, kind="evict_prefix", pages=2),
+        # forced-preemption storm: two cost-ranked victims in one step
+        Fault(step=3, kind="preempt", pages=2),
+    ]
+
+
+def drive_chaos(params, cfg, trace, scfg, faults=None):
+    """Replay the trace with arrival gating (like :func:`drive`) on a
+    debug-audited engine, optionally under a FaultPlan; runs to
+    quiescence and returns (engine, {uid: handle})."""
+    eng = InferenceEngine(params, cfg, scfg, max_batch=MAX_BATCH,
+                          max_len=MAX_LEN, admission="continuous",
+                          faults=faults)
+    handles, i = {}, 0
+    # run past quiescence until the plan's dry-pool borrows are back
+    # in the pool (empty ticks still run on_step, which returns them)
+    while i < len(trace) or eng.in_flight \
+            or (faults is not None and faults.borrowed_pages):
+        while i < len(trace) and trace[i][0] <= eng.stats["steps"]:
+            handles[trace[i][1].uid] = eng.submit(trace[i][1])
+            i += 1
+        eng.step()
+    return eng, handles
+
+
+def _chaos_row(leg, eng, handles):
+    st = eng.stats
+    return {"leg": leg, "requests": len(handles),
+            "steps": st["steps"],
+            "done": sum(h.status == "done" for h in handles.values()),
+            "cancelled": st["cancelled"], "expired": st["expired"],
+            "failed": st["failed"], "device_faults": st["device_faults"],
+            "preemptions": st["preemptions"],
+            "faults_fired": (len(eng.faults.fired)
+                             if eng.faults is not None else 0),
+            "leaked_pages": 0}   # asserted below before emit
+
+
+def _assert_quiesced_clean(eng, leg):
+    """Zero leaked pages at quiescence: every page still referenced is
+    a cached prefix page, and dropping the index frees the pool."""
+    eng.check_invariants()
+    assert eng.kv.used_pages == eng.kv.cached_page_count, \
+        f"{leg}: {eng.kv.used_pages - eng.kv.cached_page_count} " \
+        f"non-cached pages leaked at quiesce"
+    if eng.prefix is not None:
+        eng.prefix.clear()
+        assert eng.kv.used_pages == 0, \
+            f"{leg}: {eng.kv.used_pages} pages leaked after prefix.clear()"
+
+
+def run_chaos(smoke: bool = False, seed: int = 7):
+    """Deterministic fault-injection race (acceptance: structured
+    terminal statuses, surviving outputs token-identical to the
+    undisturbed engine, page accounting audited after every tick, zero
+    leaks at quiesce, bit-for-bit seed reproducibility, and a
+    drain -> snapshot -> restore leg that completes token-identically).
+    """
+    # f32: the repo-wide identity-gate dtype; the chaos engine runs the
+    # full serving stack (paged pool + prefix cache + pinned-k
+    # speculative decode) with debug tick audits on
+    cfg = dataclasses.replace(common.TINY, dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    chaos_seed = seed + 44
+    rng = np.random.default_rng(chaos_seed)
+    n_req = 12 if smoke else 24
+    trace = build_trace(rng, n_req, cfg.vocab_size, max_new=16)
+    # overcommitted pool (half the slots' rectangle) so dry_pool and
+    # the preemption storm land on a pool that is already tight
+    pool = MAX_BATCH * (MAX_LEN // PAGE_SIZE) // 2
+    scfg = ServeConfig(greedy=True, page_size=PAGE_SIZE,
+                       kv_pool_pages=pool, spec_rank_frac=1.0,
+                       spec_k=4, spec_k_min=4, debug=True)
+
+    # -- undisturbed baseline ----------------------------------------------
+    eng, handles = drive_chaos(params, cfg, trace, scfg)
+    assert all(h.status == "done" for h in handles.values())
+    base_out = {u: eng.done[u].output for u in handles}
+    rows = [_chaos_row("baseline", eng, handles)]
+    _assert_quiesced_clean(eng, "baseline")
+
+    # -- chaos run (twice: the second proves seed reproducibility) ---------
+    plan_src = build_chaos_plan(trace)
+    runs = []
+    for rep in range(2):
+        plan = FaultPlan(plan_src, seed=chaos_seed)
+        eng, handles = drive_chaos(params, cfg, trace, scfg, faults=plan)
+        runs.append((eng, handles, plan))
+        rows.append(_chaos_row("chaos" if rep == 0 else "chaos-repeat",
+                               eng, handles))
+        _assert_quiesced_clean(eng, f"chaos rep {rep}")
+    eng, handles, plan = runs[0]
+
+    statuses = {u: h.status for u, h in handles.items()}
+    assert all(h.finished for h in handles.values()), \
+        "every handle must reach a terminal status"
+    for h in handles.values():          # structured, not just a string
+        if h.status != "done":
+            assert h.error is not None and h.error.uid == h.uid \
+                and h.error.status == h.status and h.error.reason, \
+                f"request {h.uid} lacks a structured RequestError"
+    fired_kinds = {k for _, k, _ in plan.fired}
+    assert fired_kinds == set(f.kind for f in plan_src), \
+        f"plan only fired {sorted(fired_kinds)}"
+    st = eng.stats
+    assert st["expired"] == 3, f"deadline storm: expired={st['expired']}"
+    assert st["cancelled"] >= 2, f"cancelled={st['cancelled']}"
+    assert st["failed"] == 2 and st["device_faults"] == 1, \
+        f"failed={st['failed']} device_faults={st['device_faults']}"
+    survivors = [u for u, s in statuses.items() if s == "done"]
+    assert survivors, "chaos run must leave survivors"
+    identical = all(np.array_equal(base_out[u], eng.done[u].output)
+                    for u in survivors)
+    print(f"chaos: {len(survivors)}/{n_req} survivors token-identical "
+          f"to the undisturbed engine: {identical}; terminals "
+          f"cancelled={st['cancelled']} expired={st['expired']} "
+          f"failed={st['failed']}; fired={plan.fired}")
+    assert identical, "a chaos survivor diverged from the baseline"
+
+    eng2, handles2, plan2 = runs[1]
+    assert plan2.fired == plan.fired, \
+        f"fired logs diverged:\n{plan.fired}\nvs\n{plan2.fired}"
+    assert {u: h.status for u, h in handles2.items()} == statuses
+    assert all(np.array_equal(np.asarray(handles[u].tokens),
+                              np.asarray(handles2[u].tokens))
+               for u in handles), "replay outputs diverged"
+    print(f"chaos: identically-seeded replay bit-for-bit identical "
+          f"({len(plan.fired)} faults fired)")
+
+    # -- drain -> snapshot -> restore -> complete --------------------------
+    import os
+    import tempfile
+    eng = InferenceEngine(params, cfg, scfg, max_batch=MAX_BATCH,
+                          max_len=MAX_LEN, admission="continuous")
+    for _, r in trace:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    done_before = dict(eng.drain(timeout=0))
+    path = os.path.join(tempfile.gettempdir(),
+                        f"chaos-snap-{os.getpid()}.json")
+    recovery.save_snapshot(eng, path)
+    eng2 = InferenceEngine(params, cfg, scfg, max_batch=MAX_BATCH,
+                           max_len=MAX_LEN, admission="continuous")
+    restored = recovery.restore(eng2, recovery.load_snapshot(path))
+    os.unlink(path)
+    done_after = eng2.run()
+    outs = {u: (done_before.get(u) or done_after[u]).output
+            for u in handles}
+    drain_identical = all(np.array_equal(base_out[u], outs[u])
+                          for u in handles)
+    row = _chaos_row("drain-restore", eng2,
+                     {u: eng2.handles[u] for u in restored})
+    row["requests"] = len(handles)
+    rows.append(row)
+    _assert_quiesced_clean(eng2, "drain-restore")
+    print(f"drain -> snapshot ({len(restored)} in-flight) -> restore "
+          f"-> complete token-identical: {drain_identical}")
+    assert drain_identical, "snapshot/restore diverged from the baseline"
+
+    common.emit(
+        "BENCH_serve_chaos_smoke" if smoke else "BENCH_serve_chaos",
+        rows, meta={"seed": chaos_seed, "base_seed": seed, "smoke": smoke,
+                    "pool_pages": pool,
+                    "plan": [dataclasses.asdict(f) for f in plan_src],
+                    "fired": [list(f) for f in plan.fired]})
+
+
 def run(smoke: bool = False, tp: int = 1, seed: int = 7):
     cfg = common.TINY
     params = T.init_params(jax.random.PRNGKey(0), cfg)
@@ -641,6 +856,9 @@ def main() -> int:
     ap.add_argument("--prefix", action="store_true",
                     help="run only the prefix-cache race "
                          "(BENCH_serve_prefix[_smoke].json)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run only the seeded fault-injection race "
+                         "(BENCH_serve_chaos[_smoke].json)")
     ap.add_argument("--seed", type=int, default=7,
                     help="base trace seed; each section derives its own "
                          "offset from it and records it in the emitted "
@@ -650,6 +868,8 @@ def main() -> int:
         run_spec(smoke=args.smoke, tp=args.tp, seed=args.seed)
     elif args.prefix:
         run_prefix(smoke=args.smoke, tp=args.tp, seed=args.seed)
+    elif args.chaos:
+        run_chaos(smoke=args.smoke, seed=args.seed)
     else:
         run(smoke=args.smoke, tp=args.tp, seed=args.seed)
     return 0

@@ -41,6 +41,16 @@ if [[ "${1:-}" != "--fast" ]]; then
   # BENCH_serve_prefix_smoke.json, never the full-run baseline
   XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
     python -m benchmarks.serve_bench --prefix --smoke --tp 2
+  echo "== CPU smoke: chaos (seeded fault injection) race =="
+  # seeded FaultPlan over the full serving stack (cancel at a tick /
+  # mid-prefill / mid-spec-rollback, deadline storm, dry pool, prefix
+  # eviction in the gate, preemption storm, injected decode device
+  # error, poison request) with per-tick page-accounting audits:
+  # survivors token-identical, structured terminal statuses, replay
+  # bit-for-bit, zero page leaks, drain -> snapshot -> restore
+  # identity; the seed is recorded in BENCH_serve_chaos_smoke.json's
+  # meta block (never overwrites the full-run baseline)
+  python -m benchmarks.serve_bench --chaos --smoke
   echo "== CPU smoke: kernel wall-clock (two-call vs fused) =="
   python -m benchmarks.kernel_bench --smoke
 fi

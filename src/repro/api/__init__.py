@@ -51,8 +51,12 @@ from repro.quant.surgery import (  # noqa: F401
 from repro.sharding.rules import ShardingPolicy  # noqa: F401
 from repro.serve.batcher import BatchServer  # noqa: F401  (deprecated shim)
 from repro.serve.engine import (  # noqa: F401
-    InferenceEngine, RequestHandle, ServeConfig)
-from repro.serve.paging import PagedKVState  # noqa: F401
+    InferenceEngine, RequestError, RequestHandle, ServeConfig,
+    TERMINAL_STATUSES)
+from repro.serve.faults import Fault, FaultPlan  # noqa: F401
+from repro.serve.paging import (  # noqa: F401
+    PageAccountingError, PagedKVState)
+from repro.serve import recovery  # noqa: F401
 from repro.serve.scheduler import Request  # noqa: F401
 
 __all__ = [
@@ -78,4 +82,7 @@ __all__ = [
     # serving / persistence
     "InferenceEngine", "RequestHandle", "Request", "ServeConfig",
     "PagedKVState", "BatchServer", "CheckpointManager",
+    # failure handling (docs/serving.md §Failure handling)
+    "RequestError", "TERMINAL_STATUSES", "PageAccountingError",
+    "Fault", "FaultPlan", "recovery",
 ]

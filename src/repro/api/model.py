@@ -118,8 +118,12 @@ class NanoQuantModel:
                 if manifest.get("quantized") else None)
         template = jax.tree.map(lambda s: np.zeros(s.shape, s.dtype),
                                 _param_template(cfg, qcfg))
-        restored = CheckpointManager(directory).restore_latest(
-            template=template)
+        try:
+            restored = CheckpointManager(directory).restore_latest(
+                template=template)
+        except (ValueError, FileNotFoundError, KeyError, OSError) as e:
+            raise ValueError(
+                f"corrupt/truncated artifact {directory!r}: {e}") from e
         if restored is None:
             raise FileNotFoundError(f"no checkpoint steps in {directory!r}")
         _, params = restored
@@ -135,7 +139,8 @@ class NanoQuantModel:
                sharding_policy=None,
                spec_rank_frac: Optional[float] = None,
                spec_k: Optional[int] = None,
-               prefix_cache: Optional[bool] = None) -> InferenceEngine:
+               prefix_cache: Optional[bool] = None,
+               faults=None, clock=None) -> InferenceEngine:
         """The serving entry point: a slot-scheduled, continuously
         batched :class:`InferenceEngine` over this model
         (`submit(req) -> handle`, per-token streaming, `step()` /
@@ -158,7 +163,11 @@ class NanoQuantModel:
 
         `prefix_cache` overrides ``ServeConfig.prefix_cache`` (shared
         prompt-prefix KV pages with copy-on-write; on by default for
-        paged linear-table families — see docs/serving.md)."""
+        paged linear-table families — see docs/serving.md).
+
+        `faults` (a ``serve.faults.FaultPlan``) injects a deterministic
+        fault schedule; `clock` replaces the deadline clock (both for
+        chaos testing — docs/serving.md §Failure handling)."""
         scfg = scfg or ServeConfig()
         if spec_rank_frac is not None:
             scfg = dataclasses.replace(scfg, spec_rank_frac=spec_rank_frac)
@@ -170,7 +179,8 @@ class NanoQuantModel:
                                scfg, max_batch=max_batch,
                                max_len=max_len, seed=seed,
                                admission=admission, mesh=mesh,
-                               sharding_policy=sharding_policy)
+                               sharding_policy=sharding_policy,
+                               faults=faults, clock=clock)
 
     def server(self, scfg: Optional[ServeConfig] = None, max_batch: int = 8,
                max_len: int = 512, seed: int = 0) -> BatchServer:

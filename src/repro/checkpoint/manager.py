@@ -17,6 +17,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import zlib
 from typing import Any, Optional, Tuple
 
 import jax
@@ -81,11 +82,18 @@ class CheckpointManager:
             shutil.rmtree(tmp)
         os.makedirs(tmp)
 
-        shards, cur, cur_bytes, sizes, dtypes = [], {}, 0, [], []
+        shards, cur, cur_bytes = [], {}, 0
+        sizes, dtypes, checksums = [], [], []
         for i, leaf in enumerate(leaves):
             arr, dtname = _encode(np.asarray(jax.device_get(leaf)))
             sizes.append(list(arr.shape))
             dtypes.append(dtname)
+            # per-leaf crc32 of the stored bits: restore verifies it, so
+            # a corrupt/truncated artifact fails with the bad leaf named
+            # instead of a downstream unpack shape crash (one leaf at a
+            # time — no full-state duplication)
+            checksums.append(
+                zlib.crc32(np.ascontiguousarray(arr).tobytes()))
             cur[f"leaf_{i:06d}"] = arr
             cur_bytes += arr.nbytes
             if cur_bytes >= self.shard_bytes:
@@ -97,7 +105,7 @@ class CheckpointManager:
             np.savez(os.path.join(tmp, f"arrays-{k}.npz"), **shard)
         meta = {"step": step, "n_leaves": len(leaves),
                 "n_shards": len(shards), "shapes": sizes,
-                "dtypes": dtypes}
+                "dtypes": dtypes, "checksums": checksums}
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
         final = self._step_dir(step)
@@ -133,9 +141,37 @@ class CheckpointManager:
                 f"{len(flat)} — structure mismatch")
         arrays: dict = {}
         for k in range(meta["n_shards"]):
-            with np.load(os.path.join(d, f"arrays-{k}.npz")) as z:
+            shard_path = os.path.join(d, f"arrays-{k}.npz")
+            if not os.path.exists(shard_path):
+                raise ValueError(
+                    f"corrupt/truncated checkpoint {d!r}: shard "
+                    f"arrays-{k}.npz missing")
+            with np.load(shard_path) as z:
                 arrays.update({n: z[n] for n in z.files})
-        leaves = [_decode(arrays[f"leaf_{i:06d}"], meta["dtypes"][i])
+        stored: list = []
+        checksums = meta.get("checksums")  # absent in pre-crc artifacts
+        for i in range(len(flat)):
+            key = f"leaf_{i:06d}"
+            if key not in arrays:
+                raise ValueError(
+                    f"corrupt/truncated checkpoint {d!r}: leaf {i} "
+                    f"({key}) missing from its shard")
+            raw = arrays[key]
+            if meta.get("shapes") is not None \
+                    and tuple(raw.shape) != tuple(meta["shapes"][i]):
+                raise ValueError(
+                    f"corrupt/truncated checkpoint {d!r}: leaf {i} has "
+                    f"stored shape {tuple(raw.shape)}, manifest says "
+                    f"{tuple(meta['shapes'][i])}")
+            if checksums is not None:
+                got = zlib.crc32(np.ascontiguousarray(raw).tobytes())
+                if got != checksums[i]:
+                    raise ValueError(
+                        f"corrupt/truncated checkpoint {d!r}: leaf {i} "
+                        f"checksum mismatch (stored crc32 "
+                        f"{checksums[i]:#010x}, loaded {got:#010x})")
+            stored.append(raw)
+        leaves = [_decode(stored[i], meta["dtypes"][i])
                   for i in range(len(flat))]
         for i, (ld, tp) in enumerate(zip(leaves, flat)):
             want = tuple(getattr(tp, "shape", np.shape(tp)))

@@ -10,10 +10,21 @@ path. ``--engine continuous`` (default) serves through the
 slot-scheduled ``InferenceEngine``; ``--engine wave`` reproduces the
 legacy drain-then-refill schedule for comparison. ``--tp N`` serves
 tensor-parallel over a ``(data=1, model=N)`` mesh (see docs/serving.md).
+
+Crash-restart serving (docs/serving.md §Failure handling):
+``--supervise`` re-execs this driver under ``launch/supervisor.py``
+with hang detection keyed to the per-tick ``[serve] heartbeat`` lines
+(emitted from the serving loop itself, so a wedged device call stops
+them and gets the process killed + restarted), and ``--snapshot PATH``
+persists the host-side resume state every ``--snapshot-every`` ticks —
+a restarted process resumes the interrupted requests token-identically
+under greedy. ``--crash-at-step N`` force-crashes for testing the loop.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import jax
@@ -22,6 +33,7 @@ import numpy as np
 from repro import api
 from repro.data import calib_batches
 from repro.models import transformer as T
+from repro.serve import recovery
 
 
 def main():
@@ -71,7 +83,46 @@ def main():
                     help="prepend this many shared system-prompt "
                          "tokens to every request (demo of prefix-"
                          "cache page sharing)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request deadline in seconds (0 = none); "
+                         "requests past it finish 'expired'")
+    ap.add_argument("--snapshot", default="",
+                    help="resume-state file: loaded on start if it "
+                         "exists (crash recovery), refreshed every "
+                         "--snapshot-every ticks, removed on a clean "
+                         "finish")
+    ap.add_argument("--snapshot-every", type=int, default=32,
+                    help="ticks between snapshot refreshes")
+    ap.add_argument("--heartbeat-every", type=int, default=16,
+                    help="ticks between '[serve] heartbeat' lines "
+                         "(what --supervise hang detection watches; "
+                         "0 disables)")
+    ap.add_argument("--crash-at-step", type=int, default=0,
+                    help="testing: snapshot then exit(7) at this tick "
+                         "(fresh runs only — a snapshot-resumed "
+                         "incarnation runs to completion)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under launch/supervisor.py: restart on "
+                         "crash, kill+restart on missing heartbeats, "
+                         "resume from --snapshot")
+    ap.add_argument("--hang-timeout", type=float, default=60.0,
+                    help="--supervise: seconds without a heartbeat "
+                         "before the child is declared hung")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="--supervise: restart budget")
     args = ap.parse_args()
+
+    if args.supervise:
+        from repro.launch import supervisor
+        if not args.snapshot:
+            ap.error("--supervise needs --snapshot to resume across "
+                     "restarts")
+        cmd = [sys.executable, "-m", "repro.launch.serve"] \
+            + [a for a in sys.argv[1:] if a != "--supervise"]
+        raise SystemExit(supervisor.supervise(
+            cmd, max_restarts=args.max_restarts,
+            hang_timeout=args.hang_timeout,
+            heartbeat_pattern=r"\[serve\] heartbeat"))
 
     if args.quantized_ckpt and not args.fp:
         model = api.NanoQuantModel.load(args.quantized_ckpt)
@@ -125,24 +176,58 @@ def main():
         sys_prompt = rng.integers(0, cfg.vocab_size,
                                   size=args.shared_prefix).astype(np.int32)
     t0 = time.time()
-    handles = []
-    for uid in range(args.requests):
-        prompt = rng.integers(
-            0, cfg.vocab_size, size=shape).astype(np.int32)
-        if sys_prompt is not None:
-            prompt = np.concatenate([sys_prompt, prompt])
-        handles.append(eng.submit(api.Request(
-            uid, prompt, max_new_tokens=args.max_new)))
-    done = eng.run()
+    resumed = args.snapshot and os.path.exists(args.snapshot)
+    if resumed:
+        snap = recovery.load_snapshot(args.snapshot)
+        handles = list(recovery.restore(eng, snap).values())
+        print(f"[serve] resumed {len(handles)} in-flight requests from "
+              f"{args.snapshot}")
+    else:
+        handles = []
+        for uid in range(args.requests):
+            prompt = rng.integers(
+                0, cfg.vocab_size, size=shape).astype(np.int32)
+            if sys_prompt is not None:
+                prompt = np.concatenate([sys_prompt, prompt])
+            handles.append(eng.submit(api.Request(
+                uid, prompt, max_new_tokens=args.max_new,
+                deadline_s=args.deadline or None)))
+    # manual step loop (not eng.run()): the heartbeat must come from
+    # inside the serving loop — a thread would keep beating while a
+    # device call is wedged, which is exactly the hang the supervisor
+    # exists to catch
+    while eng.in_flight:
+        eng.step()
+        tick = eng.stats["steps"]
+        if args.heartbeat_every and tick % args.heartbeat_every == 0:
+            print(f"[serve] heartbeat step={tick} "
+                  f"active={int(eng.active.sum())} "
+                  f"queued={len(eng.scheduler.pending)}", flush=True)
+        if args.snapshot and args.snapshot_every \
+                and tick % args.snapshot_every == 0 and eng.in_flight:
+            recovery.save_snapshot(eng, args.snapshot)
+        if args.crash_at_step and not resumed \
+                and tick >= args.crash_at_step:
+            if args.snapshot:
+                recovery.save_snapshot(eng, args.snapshot)
+            print(f"[serve] injected crash at step {tick}", flush=True)
+            sys.exit(7)
+    done = dict(eng.done)
+    if args.snapshot and os.path.exists(args.snapshot):
+        os.unlink(args.snapshot)           # clean finish: nothing to resume
     dt = time.time() - t0
     n_tok = sum(len(r.output) for r in done.values())
-    lats = np.asarray(sorted(h.latency for h in handles))
+    n_term = {s: eng.stats[s] for s in ("cancelled", "expired", "failed")
+              if eng.stats[s]}
     print(f"[serve] engine={args.engine}: {len(done)} requests, "
           f"{n_tok} tokens in {dt:.2f}s ({n_tok/dt:.1f} tok/s incl. "
-          f"compile)")
-    print(f"[serve] request latency: mean {lats.mean():.2f}s  "
-          f"p50 {np.percentile(lats, 50):.2f}s  "
-          f"p95 {np.percentile(lats, 95):.2f}s")
+          f"compile)" + (f", non-done terminals {n_term}" if n_term
+                         else ""))
+    lats = np.asarray(sorted(h.latency for h in handles if h.done))
+    if lats.size:
+        print(f"[serve] request latency: mean {lats.mean():.2f}s  "
+              f"p50 {np.percentile(lats, 50):.2f}s  "
+              f"p95 {np.percentile(lats, 95):.2f}s")
     print(f"[serve] decode steps {eng.stats['decode_steps']}, wasted "
           f"slot-steps {eng.stats['wasted_slot_steps']}, prefill "
           f"compilations {eng.stats['prefill_traces']}")
@@ -155,7 +240,10 @@ def main():
               f"draft tokens), {st['spec_rollback_tokens']} rolled "
               f"back ({st['spec_rollback_pages']} pages trimmed), "
               f"final k={eng.spec.k}")
-    print(f"[serve] sample output for request 0: {done[0].output[:16]}")
+    if done:
+        first = min(done)
+        print(f"[serve] sample output for request {first}: "
+              f"{done[first].output[:16]}")
 
 
 def _print_pool_stats(eng) -> None:

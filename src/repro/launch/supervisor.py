@@ -18,12 +18,22 @@ lives on shared storage):
 - no stdout progress within --hang-timeout seconds -> the child is
   declared a straggler/hang, SIGKILLed, and restarted (same budget).
 
+By default *any* stdout line counts as progress. For children whose
+output can be chatty while the actual work loop is wedged (a serving
+process logging admissions while a device call never returns), pass
+``--heartbeat-regex``: only matching lines reset the hang timer.
+``launch/serve.py --supervise`` wires this to its per-tick
+``[serve] heartbeat`` lines, so a wedged decode step is killed and
+restarted (and resumes from its ``--snapshot`` file) instead of
+hanging forever.
+
 ``run_with_restarts`` is the in-process variant used by tests.
 """
 from __future__ import annotations
 
 import argparse
 import os
+import re
 import signal
 import subprocess
 import sys
@@ -52,29 +62,36 @@ def run_with_restarts(fn: Callable[[int], None], max_restarts: int = 3,
 
 
 class _Pump(threading.Thread):
-    """Forward child output and timestamp progress for hang detection."""
+    """Forward child output and timestamp progress for hang detection.
+    With `heartbeat_pattern`, only matching lines count as progress —
+    chatty logging from a wedged child cannot mask the hang."""
 
-    def __init__(self, pipe, sink):
+    def __init__(self, pipe, sink, heartbeat_pattern: Optional[str] = None):
         super().__init__(daemon=True)
         self.pipe, self.sink = pipe, sink
+        self.pattern = (re.compile(heartbeat_pattern)
+                        if heartbeat_pattern else None)
         self.last_progress = time.time()
 
     def run(self):
         for line in iter(self.pipe.readline, b""):
-            self.last_progress = time.time()
-            self.sink.write(line.decode(errors="replace"))
+            text = line.decode(errors="replace")
+            if self.pattern is None or self.pattern.search(text):
+                self.last_progress = time.time()
+            self.sink.write(text)
             self.sink.flush()
 
 
 def supervise(cmd, max_restarts: int = 3, hang_timeout: float = 0.0,
-              backoff_s: float = 2.0, log=print) -> int:
+              backoff_s: float = 2.0, log=print,
+              heartbeat_pattern: Optional[str] = None) -> int:
     restarts = 0
     while True:
         log(f"[supervisor] launching (attempt {restarts + 1}): "
             f"{' '.join(cmd)}")
         child = subprocess.Popen(cmd, stdout=subprocess.PIPE,
                                  stderr=subprocess.STDOUT)
-        pump = _Pump(child.stdout, sys.stdout)
+        pump = _Pump(child.stdout, sys.stdout, heartbeat_pattern)
         pump.start()
         hung = False
         while True:
@@ -108,6 +125,10 @@ def main():
     ap.add_argument("--max-restarts", type=int, default=3)
     ap.add_argument("--hang-timeout", type=float, default=0.0)
     ap.add_argument("--backoff", type=float, default=2.0)
+    ap.add_argument("--heartbeat-regex", default=None,
+                    help="only stdout lines matching this regex count "
+                         "as progress for --hang-timeout (default: any "
+                         "line)")
     ap.add_argument("cmd", nargs=argparse.REMAINDER,
                     help="-- <command to supervise>")
     args = ap.parse_args()
@@ -115,7 +136,8 @@ def main():
     if not cmd:
         ap.error("no command given after --")
     raise SystemExit(supervise(cmd, args.max_restarts, args.hang_timeout,
-                               args.backoff))
+                               args.backoff,
+                               heartbeat_pattern=args.heartbeat_regex))
 
 
 if __name__ == "__main__":

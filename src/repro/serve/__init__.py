@@ -10,14 +10,27 @@ refcounted copy-on-write sharing + LRU eviction), optional
 tensor-parallel execution over a mesh. :class:`SlotScheduler` holds the
 host-side bookkeeping; :class:`BatchServer` is the deprecated
 wave-admission shim. Enter through ``api.NanoQuantModel.engine()``.
+
+Request lifecycle robustness (docs/serving.md §Failure handling):
+per-request deadlines + ``RequestHandle.cancel()`` with explicit
+terminal statuses (:class:`RequestError`), graceful
+``engine.drain()`` + snapshot/restore (``repro.serve.recovery``),
+page-pool invariant auditing (:class:`PageAccountingError`) and the
+deterministic fault-injection harness (:class:`FaultPlan`,
+``repro.serve.faults``).
 """
 from repro.serve.scheduler import (  # noqa: F401
     Request, SlotScheduler, bucket_length, pick_preemption_victim)
-from repro.serve.paging import PagedKVState  # noqa: F401
+from repro.serve.paging import (  # noqa: F401
+    PageAccountingError, PagedKVState)
 from repro.serve.prefix import PrefixCache  # noqa: F401
+from repro.serve.faults import (  # noqa: F401
+    Fault, FaultPlan, InjectedDeviceError)
 from repro.serve.engine import (  # noqa: F401
-    InferenceEngine, RequestHandle, ServeConfig, make_prefill_step,
-    make_serve_step, make_slot_prefill_step, sample_token)
+    InferenceEngine, RequestError, RequestHandle, ServeConfig,
+    TERMINAL_STATUSES, make_prefill_step, make_serve_step,
+    make_slot_prefill_step, sample_token)
+from repro.serve import recovery  # noqa: F401
 from repro.serve.batcher import BatchServer  # noqa: F401
 from repro.serve.speculative import SpecDecodeController  # noqa: F401
 
@@ -27,4 +40,7 @@ __all__ = [
     "SpecDecodeController", "bucket_length", "pick_preemption_victim",
     "sample_token", "make_prefill_step", "make_serve_step",
     "make_slot_prefill_step",
+    # failure handling
+    "RequestError", "TERMINAL_STATUSES", "PageAccountingError",
+    "Fault", "FaultPlan", "InjectedDeviceError", "recovery",
 ]

@@ -34,6 +34,7 @@ from repro.kernels import ops as kops
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serve import paging
+from repro.serve.faults import InjectedDeviceError as _InjectedDeviceError
 from repro.serve.scheduler import (Request, SlotScheduler, bucket_length,
                                    cache_insert_slot, cache_select_active,
                                    pick_preemption_victim)
@@ -81,6 +82,13 @@ class ServeConfig:
     spec_rank_frac: Optional[float] = None  # draft rank fraction (0, 1]
     spec_k: int = 4                         # max draft tokens per cycle
     spec_k_min: int = 1                     # dynamic-k controller floor
+    # --- robustness (docs/serving.md §Failure handling) ---
+    # debug=True audits the page-pool invariants
+    # (paging.check_invariants) and the slot/task alignment at the end
+    # of every tick instead of only on faults. Pure host work; meant
+    # for tests, chaos runs and bring-up, not the steady-state hot
+    # path.
+    debug: bool = False
 
 
 def sample_token(logits: jnp.ndarray, key, scfg: ServeConfig) -> jnp.ndarray:
@@ -172,12 +180,40 @@ def generate(params, cfg: ModelConfig, tokens, scfg: ServeConfig,
 # ===========================================================================
 
 
+#: Terminal request statuses. "done" is the only successful one;
+#: the other three carry a :class:`RequestError` on the handle.
+TERMINAL_STATUSES = ("done", "cancelled", "expired", "failed")
+
+
+class RequestError(RuntimeError):
+    """Structured terminal error for one request: the request reached a
+    non-successful terminal status (``cancelled`` / ``expired`` /
+    ``failed``) while the rest of the engine kept serving. Raised by
+    ``RequestHandle.result()`` and at the end of handle iteration;
+    also stored on ``handle.error``."""
+
+    def __init__(self, uid: int, status: str, reason: str):
+        super().__init__(f"request {uid} {status}: {reason}")
+        self.uid = uid
+        self.status = status
+        self.reason = reason
+
+
 class RequestHandle:
     """Streaming view of one submitted request.
 
     `tokens` grows as the engine emits; iterate the handle to stream
     (iteration pumps `engine.step()` when it runs out of buffered
-    tokens), or call `result()` to block until completion."""
+    tokens), or call `result()` to block until completion.
+
+    Lifecycle (docs/serving.md §Failure handling): ``status`` moves
+    ``"pending"`` → ``"running"`` (first admission; preemption does not
+    move it back) → one of :data:`TERMINAL_STATUSES`. Non-``done``
+    terminals carry a :class:`RequestError` on ``error``; ``result()``
+    raises it instead of returning a partial array, and iteration
+    yields whatever was emitted before the terminal, then raises.
+    ``cancel()`` requests cancellation; the engine honours it at the
+    next tick boundary (tokens may still arrive in between)."""
 
     def __init__(self, engine: "InferenceEngine", request: Request,
                  on_token: Optional[Callable] = None):
@@ -186,10 +222,40 @@ class RequestHandle:
         self.uid = request.uid
         self.on_token = on_token
         self.tokens: List[Any] = []
-        self.done = False
+        self.status = "pending"
+        self.error: Optional[RequestError] = None
+        self.cancel_requested = False
+        self.cancel_reason = "cancelled by client"
+        self.deadline_at: Optional[float] = None   # engine-clock absolute
         self.submit_t = time.monotonic()
         self.first_token_t: Optional[float] = None
         self.finish_t: Optional[float] = None
+
+    @property
+    def finished(self) -> bool:
+        """True once the request reached any terminal status."""
+        return self.status in TERMINAL_STATUSES
+
+    @property
+    def done(self) -> bool:
+        """True only for the *successful* terminal status."""
+        return self.status == "done"
+
+    def cancel(self, reason: str = "cancelled by client") -> None:
+        """Request cancellation. Takes effect at the engine's next tick
+        boundary: a queued request is dropped before admission, an
+        active slot is torn down with its pages freed exactly (the
+        preemption teardown path). No-op once terminal."""
+        if not self.finished:
+            self.cancel_requested = True
+            self.cancel_reason = reason
+
+    def _finalize(self, status: str,
+                  error: Optional[RequestError] = None) -> None:
+        assert status in TERMINAL_STATUSES, status
+        self.status = status
+        self.error = error
+        self.finish_t = time.monotonic()
 
     def _append(self, token) -> None:
         if self.first_token_t is None:
@@ -197,20 +263,30 @@ class RequestHandle:
         self.tokens.append(token)
 
     def result(self) -> np.ndarray:
-        while not self.done:
+        """Block (pumping the engine) until terminal; return the full
+        output, or raise this request's :class:`RequestError` if it
+        ended cancelled / expired / failed."""
+        while not self.finished:
             if not self._engine.in_flight:
                 raise RuntimeError(
                     f"request {self.uid} unfinished but engine is idle")
             self._engine.step()
+        if self.error is not None:
+            raise self.error
         return self.request.output
 
     def __iter__(self):
+        # a fresh iterator per call, starting from token 0 — re-iterating
+        # a finished handle replays the buffered tokens instead of
+        # silently yielding nothing
         i = 0
         while True:
             if i < len(self.tokens):
                 yield self.tokens[i]
                 i += 1
-            elif self.done:
+            elif self.finished:
+                if self.error is not None:
+                    raise self.error
                 return
             else:
                 if not self._engine.in_flight:
@@ -233,6 +309,16 @@ class RequestHandle:
         if self.first_token_t is None:
             return None
         return self.first_token_t - self.submit_t
+
+
+class _AbortAdmission(Exception):
+    """Internal: a cancel/expire landed mid-prefill (noticed between
+    the prefill and slot activation); unwind to the given terminal."""
+
+    def __init__(self, status: str, reason: str):
+        super().__init__(f"{status}: {reason}")
+        self.status = status
+        self.reason = reason
 
 
 @dataclasses.dataclass
@@ -313,7 +399,7 @@ class InferenceEngine:
                  scfg: Optional[ServeConfig] = None, max_batch: int = 8,
                  max_len: int = 512, seed: int = 0,
                  admission: str = "continuous", mesh=None,
-                 sharding_policy=None):
+                 sharding_policy=None, faults=None, clock=None):
         if kops.current_kernel_policy().use_merged_projections():
             # serving-side operand grouping: QKV / gate-up projections
             # additionally carry stacked operands so attention and MLP
@@ -339,6 +425,15 @@ class InferenceEngine:
         self.max_batch, self.max_len = max_batch, max_len
         self.key = jax.random.PRNGKey(seed)
         self.scheduler = SlotScheduler(max_batch, admission)
+        # deadline clock: monotonic seconds. Injectable so tests and the
+        # fault harness can expire requests deterministically.
+        self.clock: Callable[[], float] = clock or time.monotonic
+        # fault-injection plan (serve.faults.FaultPlan) — None in
+        # production; when set, its hooks fire at the engine's seams.
+        self.faults = faults
+        # drain(): True stops admission of fresh requests (preempted
+        # _Resume items still re-admit, so in-flight work can finish).
+        self.draining = False
         # paged KV pool (serve.paging) unless disabled or the family has
         # no pageable cache (pure SSM state is O(1)/slot either way)
         self.kv: Optional[paging.PagedKVState] = None
@@ -482,6 +577,15 @@ class InferenceEngine:
                 f"request {req.uid}: prompt length {n} >= max_len "
                 f"{self.max_len} leaves no room to generate — raise "
                 f"max_len or truncate the prompt before submitting")
+        if prompt.size and (prompt.min() < 0
+                            or prompt.max() >= self.cfg.vocab_size):
+            raise ValueError(
+                f"request {req.uid}: prompt token ids outside "
+                f"[0, {self.cfg.vocab_size}) — refusing to embed "
+                f"out-of-vocabulary ids")
+        if req.deadline_s is not None and req.deadline_s < 0:
+            raise ValueError(f"request {req.uid}: deadline_s must be "
+                             f">= 0, got {req.deadline_s}")
         if self.paged:
             need = self.kv.pages_for_prompt(n)
             if need + self.kv.watermark > self.kv.n_pages - 1:
@@ -491,11 +595,13 @@ class InferenceEngine:
                     f"{self.kv.watermark}) — it could never be admitted")
         old = self.handles.get(req.uid)
         if old is not None:
-            if not old.done:
+            if not old.finished:
                 raise ValueError(f"duplicate request uid {req.uid} "
                                  f"still pending or decoding")
             self._forget(req.uid)          # uid reuse after completion
         handle = RequestHandle(self, req, on_token)
+        if req.deadline_s is not None:
+            handle.deadline_at = self.clock() + req.deadline_s
         self.handles[req.uid] = handle
         self.scheduler.submit(handle)
         return handle
@@ -516,6 +622,9 @@ class InferenceEngine:
         the engine inconsistent (the exception still propagates)."""
         finished = []
         self._callbacks = []
+        if self.faults is not None:
+            self.faults.on_step(self)
+        self._reap()
         gate = None
         if self.paged:
             promised = [0]     # pages owed to earlier admissions in this
@@ -554,6 +663,16 @@ class InferenceEngine:
                 else:
                     self.stats["page_waits"] += 1
                 return ok
+        page_gate = gate
+        if self.draining or self.faults is not None:
+            def gate(item):               # noqa: F811 — wraps page_gate
+                if self.draining and not isinstance(item, _Resume):
+                    return False          # drain: no fresh admissions
+                if self.faults is not None:
+                    # e.g. evict a matched prefix chain between the
+                    # match and kv.admit — protection must hold it
+                    self.faults.on_gate(self)
+                return page_gate(item) if page_gate is not None else True
         for slot, handle in self.scheduler.admit_batch(gate):
             fin = self._admit(slot, handle)
             if fin is not None:
@@ -564,12 +683,17 @@ class InferenceEngine:
                                         int(self.active.sum()))
         if self.active.any():
             t0 = time.monotonic()
-            if self.spec is not None:
-                self.spec.tick(finished)
-            else:
-                self._decode_tick(finished)
+            try:
+                if self.spec is not None:
+                    self.spec.tick(finished)
+                else:
+                    self._decode_tick(finished)
+            except _InjectedDeviceError as e:
+                self._on_device_fault(e)
             self.stats["decode_time_s"] += time.monotonic() - t0
         self.stats["steps"] += 1
+        if self.scfg.debug:
+            self.check_invariants()
         callbacks, self._callbacks = self._callbacks, []
         err = None
         for cb, uid, token in callbacks:
@@ -587,6 +711,149 @@ class InferenceEngine:
             self.step()
         return dict(self.done)
 
+    # ---- request lifecycle: cancellation, deadlines, drain ----------------
+
+    def _verdict(self, handle: RequestHandle) -> Optional[Tuple[str, str]]:
+        """(terminal_status, reason) if `handle` should be reaped now
+        (client cancellation or past deadline), else None."""
+        if handle.cancel_requested:
+            return "cancelled", handle.cancel_reason
+        if handle.deadline_at is not None \
+                and self.clock() >= handle.deadline_at:
+            return "expired", (f"deadline "
+                               f"{handle.request.deadline_s}s exceeded")
+        return None
+
+    @staticmethod
+    def _item_handle(item) -> RequestHandle:
+        return item.handle if isinstance(item, _Resume) else item
+
+    def _reap(self) -> None:
+        """Tick-boundary reaping: drop cancelled/expired requests from
+        the queue and tear down cancelled/expired active slots, freeing
+        pages and prefix refcounts exactly (the preemption teardown
+        path minus the requeue)."""
+        if not (self.scheduler.pending or self.active.any()):
+            return
+        for item in self.scheduler.reap(
+                lambda it: self._verdict(self._item_handle(it)) is not None):
+            handle = self._item_handle(item)
+            status, reason = self._verdict(handle)
+            toks = item.emitted if isinstance(item, _Resume) else []
+            self._finalize_aborted(handle, status, reason, toks)
+        for slot in np.nonzero(self.active)[0]:
+            task = self._tasks[int(slot)]
+            v = self._verdict(task.handle)
+            if v is not None:
+                self._abort_slot(int(slot), *v)
+
+    def _abort_slot(self, slot: int, status: str, reason: str) -> None:
+        """Tear down an active slot to a non-successful terminal: the
+        preemption teardown (pages + prefix refcounts freed exactly)
+        without the requeue, then finalize the handle."""
+        task = self._tasks[slot]
+        self.active[slot] = False
+        self._tasks[slot] = None
+        self.slot_of.pop(task.handle.uid, None)
+        if self.paged:
+            self.kv.release(slot)
+        self.scheduler.release(slot)
+        self._finalize_aborted(task.handle, status, reason, task.toks)
+        if status == "failed":             # every fault audits the pool
+            self.check_invariants()
+
+    def _finalize_aborted(self, handle: RequestHandle, status: str,
+                          reason: str, toks: List[Any]) -> None:
+        """Move `handle` to a non-successful terminal status. Partial
+        output (tokens emitted before the terminal) stays readable on
+        ``request.output`` / ``handle.tokens``; ``result()`` raises."""
+        req = handle.request
+        req.output = (np.asarray(toks, np.int32) if toks
+                      else np.zeros((0,), np.int32))
+        handle._finalize(status, RequestError(req.uid, status, reason))
+        self.completion_step[req.uid] = self.stats["steps"]
+        self.stats[status] += 1
+
+    def _on_device_fault(self, err: "_InjectedDeviceError") -> None:
+        """Recover from a (simulated) device error in the decode step:
+        the error is raised *before* the donated device call, so the
+        pool buffer is intact — fail the attributed slot with a
+        structured RequestError, preempt every other active slot
+        (token-exact resume re-prefills them), and audit the pool.
+        Models the recoverable class of device faults; a real
+        XlaRuntimeError after donation has no cache to resume from."""
+        uid = err.uid if err.uid in self.slot_of else None
+        if uid is None and self.active.any():
+            slot = int(np.nonzero(self.active)[0][-1])
+            uid = self._tasks[slot].handle.uid
+        self.stats["device_faults"] += 1
+        if uid is not None:
+            self._abort_slot(self.slot_of[uid], "failed",
+                             f"device error in decode step: {err}")
+        if self.paged:
+            for slot in np.nonzero(self.active)[0]:
+                self._preempt(int(slot))
+        # else: the rectangular engine keeps its cache (nothing was
+        # donated before the raise) and the neighbours continue in place
+        self.check_invariants()
+
+    def drain(self, timeout: Optional[float] = None) -> Dict[int, Request]:
+        """Graceful drain: stop admitting fresh requests, keep stepping
+        until every active slot finishes (or `timeout` seconds of
+        engine-clock pass), then checkpoint whatever is still active as
+        requeued ``_Resume`` items — ``serve.recovery.snapshot`` can
+        persist the result and rebuild an engine that resumes
+        token-identically under greedy. Returns requests completed so
+        far. Admission stays closed until :meth:`resume_admission`."""
+        self.draining = True
+        t0 = self.clock()
+        while self.active.any():
+            if timeout is not None and self.clock() - t0 >= timeout:
+                break
+            self.step()
+        for slot in np.nonzero(self.active)[0]:
+            if self.paged:
+                self._preempt(int(slot))
+            else:
+                self._abort_slot(int(slot), "failed",
+                                 "drain timeout: rectangular engine "
+                                 "cannot checkpoint a live slot")
+        return dict(self.done)
+
+    def resume_admission(self) -> None:
+        """Reopen admission after :meth:`drain`."""
+        self.draining = False
+
+    def check_invariants(self) -> None:
+        """Audit page-pool accounting (paging.check_invariants), the
+        prefix index (prefix.check_invariants) and engine/slot
+        alignment. Raises paging.PageAccountingError on the first
+        violation. Run on every fault and, under
+        ``ServeConfig(debug=True)``, at the end of every tick."""
+        if self.paged:
+            self.kv.check_invariants()
+        if self.prefix is not None:
+            self.prefix.check_invariants()
+        for slot in range(self.max_batch):
+            task = self._tasks[slot]
+            if bool(self.active[slot]) != (task is not None):
+                raise paging.PageAccountingError(
+                    f"slot {slot}: active={bool(self.active[slot])} but "
+                    f"task={'set' if task is not None else 'none'}")
+            if task is not None:
+                uid = task.handle.uid
+                if self.scheduler.slots[slot] != uid:
+                    raise paging.PageAccountingError(
+                        f"slot {slot}: scheduler owner "
+                        f"{self.scheduler.slots[slot]} != task uid {uid}")
+                if self.paged and self.kv.has_linear \
+                        and self.kv._mapped[slot] * self.kv.page_size \
+                        < self.pos[slot]:
+                    raise paging.PageAccountingError(
+                        f"slot {slot}: pos {int(self.pos[slot])} beyond "
+                        f"mapped rows "
+                        f"{self.kv._mapped[slot] * self.kv.page_size}")
+
     def _decode_tick(self, finished: List[Request]) -> None:
         """One fused single-token decode across the pool: reserve the
         next cache row per active slot (possibly preempting), run the
@@ -596,6 +863,10 @@ class InferenceEngine:
             self._ensure_decode_pages()
         if not self.active.any():          # everything self-preempted
             return
+        if self.faults is not None:
+            # raises _InjectedDeviceError *before* the donated device
+            # call, so the pool buffer is still valid for recovery
+            self.faults.before_decode(self)
         tables = self.kv.device_tables() if self.paged else {}
         self.key, k = jax.random.split(self.key)
         tok, self.cache = self._decode(
@@ -628,7 +899,10 @@ class InferenceEngine:
                   # copy-on-write page duplications; evicted_pages
                   # counts LRU index evictions under pool pressure.
                   "prefix_hit_tokens", "prefix_lookup_tokens",
-                  "shared_pages", "cow_copies", "evicted_pages"):
+                  "shared_pages", "cow_copies", "evicted_pages",
+                  # failure handling (docs/serving.md §Failure handling):
+                  # terminal-status counters + recovered device errors
+                  "cancelled", "expired", "failed", "device_faults"):
             self.stats[k] = 0
         # host wall-clock spent in the decode/spec device step + commit
         # (benchmarks divide tokens_emitted by this for decode tok/s)
@@ -670,6 +944,41 @@ class InferenceEngine:
         return InferenceEngine._item_prompt(item).shape[0]
 
     def _admit(self, slot: int, item) -> Optional[Request]:
+        """Failure-isolated admission: a poison request (non-finite
+        prefill logits, a malformed prompt that slipped past submit,
+        any exception its own prefill raises) fails *that* handle with
+        a structured RequestError — its partial slot state is torn down
+        page-exactly and the other slots keep decoding. Page-accounting
+        violations stay engine-fatal: broken pool bookkeeping cannot be
+        attributed to one request."""
+        try:
+            return self._admit_impl(slot, item)
+        except paging.PageAccountingError:
+            raise
+        except _AbortAdmission as e:       # cancel/expire mid-prefill
+            self._teardown_admission(slot, item, e.status, e.reason)
+        except Exception as e:
+            self._teardown_admission(slot, item, "failed",
+                                     f"{type(e).__name__}: {e}")
+            self.check_invariants()        # every fault audits the pool
+        return None
+
+    def _teardown_admission(self, slot: int, item, status: str,
+                            reason: str) -> None:
+        """Unwind a partially-admitted slot (kv.admit / table writes may
+        or may not have happened — release is tolerant of both) and
+        finalize the handle."""
+        handle = self._item_handle(item)
+        self.active[slot] = False
+        self._tasks[slot] = None
+        self.slot_of.pop(handle.uid, None)
+        if self.paged:
+            self.kv.release(slot)
+        self.scheduler.release(slot)
+        toks = item.emitted if isinstance(item, _Resume) else []
+        self._finalize_aborted(handle, status, reason, toks)
+
+    def _admit_impl(self, slot: int, item) -> Optional[Request]:
         """Prefill `item`'s prompt into `slot` and emit its next token.
         `item` is a fresh RequestHandle or a preempted _Resume. Returns
         the request if it finished immediately."""
@@ -722,6 +1031,19 @@ class InferenceEngine:
             else:
                 self.cache = self._insert(self.cache, single,
                                           jnp.asarray(slot, jnp.int32))
+        if self.faults is not None \
+                and self.faults.poison_prefill(self, req.uid):
+            logits = jnp.full_like(logits, jnp.nan)
+        if not bool(jnp.isfinite(logits.astype(jnp.float32)).all()):
+            # checked BEFORE prefix.register: NaN logits mean the
+            # prefilled KV is suspect too, and a registered chunk would
+            # poison every future sharer of those pages
+            raise ValueError("non-finite prefill logits (poison request)")
+        if self.faults is not None:
+            self.faults.on_prefill(self, handle)
+        v = self._verdict(handle)
+        if v is not None:                  # cancel/expire mid-prefill
+            raise _AbortAdmission(*v)
         if self.prefix is not None:
             # adopt this slot's full-chunk pages; chunks already indexed
             # (including everything just mapped shared) are skipped
@@ -735,6 +1057,7 @@ class InferenceEngine:
         tok = np.asarray(tok)
         task = _SlotTask(handle, budget=min(budget_cap, self.max_len - n),
                          toks=list(prior))
+        handle.status = "running"          # sticky across preemption
         self._tasks[slot] = task
         self.pos[slot] = n
         self.slot_of[req.uid] = slot
@@ -885,8 +1208,7 @@ class InferenceEngine:
         req.output = np.asarray(task.toks, np.int32)
         self.done[req.uid] = req
         self.completion_step[req.uid] = self.stats["steps"]
-        task.handle.done = True
-        task.handle.finish_t = time.monotonic()
+        task.handle._finalize("done")
         self.active[slot] = False
         self._tasks[slot] = None
         if self.paged:

@@ -1,0 +1,220 @@
+"""Deterministic fault injection for the serving engine
+(docs/serving.md §Failure handling).
+
+A :class:`FaultPlan` is a *schedule* of faults — each a
+:class:`Fault` record naming a kind, the engine step it arms at, and
+(where relevant) a target uid — that the engine consults at its seams:
+tick boundaries (``on_step``), the admission gate (``on_gate``), the
+prefill path (``on_prefill`` / ``poison_prefill``), the speculative
+commit cycle (``on_spec_cycle``) and the decode step
+(``before_decode``). Everything is keyed off the engine's own step
+counter and uids — no wall clock, no ambient randomness — so a chaos
+run is bit-for-bit reproducible from the plan (and
+:meth:`FaultPlan.random` builds a plan from a seed).
+
+Fault kinds:
+
+- ``"cancel"`` — client cancellation at a tick boundary.
+- ``"cancel_prefill"`` — cancellation landing *between* the target's
+  prefill and its slot activation (the admission unwind path).
+- ``"cancel_spec"`` — cancellation landing inside the speculative
+  commit/rollback cycle (reaped at the next tick boundary).
+- ``"expire"`` — force the target's deadline into the past (a
+  deterministic deadline storm needs no real sleeping).
+- ``"dry_pool"`` — borrow ``pages`` pages out of the pool for ``hold``
+  steps (``PagedKVState.borrow_pages``), forcing preemptions and
+  admission queueing while accounting stays exact.
+- ``"preempt"`` — a forced preemption storm: evict ``pages`` (>=1)
+  cost-ranked victims this step.
+- ``"evict_prefix"`` — evict up to ``pages`` refcount-zero cached
+  prefix pages *between* the admission gate's match and ``kv.admit``
+  (the race the gate's protect/unprotect discipline must survive).
+- ``"device_error"`` — raise :class:`InjectedDeviceError` immediately
+  before the decode step's device call (the recoverable class: the
+  donated pool buffer is still intact).
+- ``"poison_prefill"`` — overwrite the target's prefill logits with
+  NaN (a poison request the engine must isolate to that handle).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+KINDS = ("cancel", "cancel_prefill", "cancel_spec", "expire", "dry_pool",
+         "preempt", "evict_prefix", "device_error", "poison_prefill")
+
+
+class InjectedDeviceError(RuntimeError):
+    """Simulated device failure in the decode step, raised before the
+    donated device call (see ``InferenceEngine._on_device_fault``)."""
+
+    def __init__(self, uid: Optional[int] = None):
+        super().__init__(f"injected device error"
+                         + (f" (attributed to request {uid})"
+                            if uid is not None else ""))
+        self.uid = uid
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled fault: arms at engine step ``step`` and fires at
+    the first matching seam after that (each fault fires once)."""
+    step: int
+    kind: str
+    uid: Optional[int] = None          # target request, where relevant
+    pages: int = 2                     # dry_pool/evict_prefix size,
+    #                                    preempt victim count
+    hold: int = 2                      # dry_pool: steps pages stay out
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+
+
+class FaultPlan:
+    """A deterministic schedule of :class:`Fault` records plus the
+    runtime state of a chaos run (what fired when, pages currently
+    borrowed). Pass to ``InferenceEngine(..., faults=plan)`` or
+    ``model.engine(..., faults=plan)``; ``plan.fired`` is the replay
+    log two identically-seeded runs must agree on."""
+
+    def __init__(self, faults: Sequence[Fault],
+                 seed: Optional[int] = None):
+        self.faults = sorted(faults,
+                             key=lambda f: (f.step, KINDS.index(f.kind),
+                                            -1 if f.uid is None else f.uid))
+        self.seed = seed
+        self.fired: List[Tuple[int, str, Optional[int]]] = []
+        self._spent = [False] * len(self.faults)
+        self._borrowed: List[Tuple[int, List[int]]] = []  # (due, pages)
+
+    @classmethod
+    def random(cls, seed: int, uids: Sequence[int], n_steps: int,
+               kinds: Sequence[str] = KINDS, n_faults: int = 8,
+               pages: int = 2) -> "FaultPlan":
+        """Seeded random plan: `n_faults` faults over `n_steps` steps
+        targeting `uids`. Same arguments => same plan, always."""
+        rng = np.random.default_rng(seed)
+        faults = []
+        for _ in range(n_faults):
+            kind = kinds[int(rng.integers(len(kinds)))]
+            uid = int(uids[int(rng.integers(len(uids)))]) if uids else None
+            faults.append(Fault(step=int(rng.integers(1, max(2, n_steps))),
+                                kind=kind, uid=uid,
+                                pages=int(rng.integers(1, pages + 1))))
+        return cls(faults, seed=seed)
+
+    # ---- internal ---------------------------------------------------------
+
+    def _due(self, eng, kind: str, uid: Optional[int] = None):
+        """Armed, unspent faults of `kind` (optionally for `uid`)."""
+        step = eng.stats["steps"]
+        for i, f in enumerate(self.faults):
+            if self._spent[i] or f.kind != kind or f.step > step:
+                continue
+            if uid is not None and f.uid != uid:
+                continue
+            yield i, f
+
+    def _fire(self, eng, i: int) -> None:
+        f = self.faults[i]
+        self._spent[i] = True
+        self.fired.append((int(eng.stats["steps"]), f.kind, f.uid))
+
+    def _handle(self, eng, uid):
+        h = eng.handles.get(uid)
+        return h if h is not None and not h.finished else None
+
+    # ---- engine seams -----------------------------------------------------
+
+    def on_step(self, eng) -> None:
+        """Tick boundary, before the engine reaps: cancellations,
+        forced deadline expiry, dry-pool borrow/return, preemption
+        storms."""
+        for due, pages in [b for b in self._borrowed
+                           if b[0] <= eng.stats["steps"]]:
+            eng.kv.return_pages(pages)
+            self._borrowed.remove((due, pages))
+        for i, f in list(self._due(eng, "cancel")):
+            h = self._handle(eng, f.uid)
+            if h is not None:
+                h.cancel("fault-injected cancel")
+                self._fire(eng, i)
+        for i, f in list(self._due(eng, "expire")):
+            h = self._handle(eng, f.uid)
+            if h is not None:
+                h.deadline_at = eng.clock() - 1.0   # already past
+                self._fire(eng, i)
+        for i, f in list(self._due(eng, "dry_pool")):
+            if eng.paged:
+                pages = eng.kv.borrow_pages(f.pages)
+                if pages:
+                    self._borrowed.append(
+                        (eng.stats["steps"] + f.hold, pages))
+                    self._fire(eng, i)
+        for i, f in list(self._due(eng, "preempt")):
+            if eng.paged and eng.active.any():
+                for _ in range(max(1, f.pages)):
+                    if not eng.active.any():
+                        break
+                    eng._preempt(eng._select_victim())
+                self._fire(eng, i)
+
+    def on_gate(self, eng) -> None:
+        """Inside the admission gate, after the prefix match/protect:
+        evict cached prefix pages — protected chains must survive."""
+        for i, f in list(self._due(eng, "evict_prefix")):
+            if eng.prefix is not None:
+                eng.prefix.reclaim(f.pages)
+                self._fire(eng, i)
+
+    def poison_prefill(self, eng, uid: int) -> bool:
+        """True => overwrite this admission's prefill logits with NaN."""
+        for i, _ in list(self._due(eng, "poison_prefill", uid)):
+            self._fire(eng, i)
+            return True
+        return False
+
+    def on_prefill(self, eng, handle) -> None:
+        """Between a request's prefill and its slot activation."""
+        for i, _ in list(self._due(eng, "cancel_prefill", handle.uid)):
+            handle.cancel("fault-injected cancel mid-prefill")
+            self._fire(eng, i)
+
+    def on_spec_cycle(self, eng) -> None:
+        """Inside the speculative commit/rollback cycle, between the
+        batched verify and the per-slot commit+trim."""
+        for i, f in list(self._due(eng, "cancel_spec")):
+            h = self._handle(eng, f.uid)
+            if h is not None:
+                h.cancel("fault-injected cancel mid-spec-rollback")
+                self._fire(eng, i)
+
+    def before_decode(self, eng) -> None:
+        """Immediately before the decode step's device call."""
+        for i, f in list(self._due(eng, "device_error")):
+            self._fire(eng, i)
+            raise InjectedDeviceError(f.uid)
+
+    # ---- reporting --------------------------------------------------------
+
+    @property
+    def pending_faults(self) -> int:
+        return self._spent.count(False)
+
+    @property
+    def borrowed_pages(self) -> int:
+        """Pages currently held out of the pool by dry_pool faults —
+        drivers should keep ticking until this is 0 before auditing
+        for leaks (the engine returns them at the next due tick)."""
+        return sum(len(pages) for _, pages in self._borrowed)
+
+    def summary(self) -> dict:
+        return {"seed": self.seed,
+                "scheduled": len(self.faults),
+                "fired": list(self.fired),
+                "unfired": [dataclasses.asdict(self.faults[i])
+                            for i, s in enumerate(self._spent) if not s]}

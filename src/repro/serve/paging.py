@@ -53,6 +53,13 @@ from repro.serve.scheduler import _batch_axis
 _SEQ_OFF = {"k": 3, "v": 3, "c_kv": 2, "k_rope": 3}
 
 
+class PageAccountingError(AssertionError):
+    """A page-pool invariant was violated (leaked page, refcount
+    mismatch, block table mapping a freed page, ...). Raised by
+    :meth:`PagedKVState.check_invariants`; engine-fatal — unlike a
+    poison request, broken accounting cannot be isolated to one slot."""
+
+
 def page_kind(path: str) -> Optional[str]:
     """'linear' | 'ring' | None for a cache-leaf path. The VLM image KV
     (`cross_kv`) has no sequence growth and stays rectangular."""
@@ -245,6 +252,10 @@ class PagedKVState:
         # and not cached. Page 0 (null) is never ref'd or cached.
         self.ref = np.zeros(self.n_pages, np.int32)
         self.cached = np.zeros(self.n_pages, bool)
+        # pages borrowed out of the pool by an external holder (fault
+        # injection today; the disaggregated page-transfer path later).
+        # Each holds one reference that check_invariants accounts for.
+        self.external: Set[int] = set()
         # wired by the engine when a prefix cache exists: reclaim_cb(k)
         # evicts up to k refcount-zero cached pages (LRU) back to the
         # free list; evictable_cb() counts how many such evictions are
@@ -431,6 +442,97 @@ class PagedKVState:
         for t in self.tables.values():
             t[slot] = 0
         self._device_tables = None
+
+    def borrow_pages(self, k: int) -> List[int]:
+        """Take up to `k` pages out of the pool for an external holder
+        (reclaiming cached pages if needed) and return their ids. The
+        borrowed pages hold one reference each, so accounting stays
+        exact while they are out — :meth:`check_invariants` keeps
+        passing. Seam for fault injection (``serve.faults`` dry-pool)
+        and, later, cross-engine page transfer; give them back with
+        :meth:`return_pages`."""
+        out: List[int] = []
+        while len(out) < k and self._ensure_free(1):
+            page = self._alloc(1)[0]
+            self.external.add(page)
+            out.append(page)
+        return out
+
+    def return_pages(self, pages: Sequence[int]) -> None:
+        """Give borrowed pages back to the pool."""
+        for p in pages:
+            assert p in self.external, f"page {p} was not borrowed"
+            self.external.discard(p)
+            self._unref(p)
+
+    def check_invariants(self) -> None:
+        """Audit the whole pool; raise :class:`PageAccountingError` on
+        the first violation. O(n_pages + slots * pages_per_slot) pure
+        host work — cheap enough to run on every fault and, in debug
+        mode (``ServeConfig.debug``), on every engine tick.
+
+        Checked: free ⟺ (ref == 0 and not index-held); refcounts equal
+        the slot-mapping count (+1 per borrowed page); block-table rows
+        point only at pages their slot owns (never a freed page, never
+        the null page as a mapped entry); linear rows are mapped as a
+        dense prefix of exactly ``_mapped`` pages; no page is leaked
+        (unreachable yet absent from the free list)."""
+        def fail(msg: str):
+            raise PageAccountingError(f"page accounting violated: {msg}")
+
+        free = set(self._free)
+        if len(free) != len(self._free):
+            fail("duplicate pages on the free list")
+        if 0 in free:
+            fail("null page on the free list")
+        if self.ref[0] != 0 or self.cached[0]:
+            fail("null page acquired a reference")
+        counts = np.zeros(self.n_pages, np.int64)
+        for slot, pages in enumerate(self._slot_pages):
+            if len(set(pages)) != len(pages):
+                fail(f"slot {slot} maps a page twice")
+            for p in pages:
+                if not 0 < p < self.n_pages:
+                    fail(f"slot {slot} owns out-of-range page {p}")
+                counts[p] += 1
+        for p in self.external:
+            counts[p] += 1
+        for p in range(1, self.n_pages):
+            if counts[p] != self.ref[p]:
+                fail(f"page {p}: ref={int(self.ref[p])} but "
+                     f"{int(counts[p])} live mappings")
+            if p in free and (self.ref[p] != 0 or self.cached[p]):
+                fail(f"page {p} free with live sharers "
+                     f"(ref={int(self.ref[p])}, "
+                     f"cached={bool(self.cached[p])})")
+            if p not in free and self.ref[p] == 0 and not self.cached[p]:
+                fail(f"page {p} leaked (unreferenced, uncached, not on "
+                     f"the free list)")
+        for kind, tab in self.tables.items():
+            for slot in range(tab.shape[0]):
+                own = set(self._slot_pages[slot])
+                mapped = [int(p) for p in tab[slot] if p != 0]
+                for p in mapped:
+                    if p not in own:
+                        fail(f"slot {slot} {kind} table maps page {p} "
+                             f"it does not own"
+                             + (" (freed)" if p in free else ""))
+                if len(set(mapped)) != len(mapped):
+                    fail(f"slot {slot} {kind} table maps a page twice")
+        if self.has_linear:
+            for slot in range(self.tables["linear"].shape[0]):
+                row = self.tables["linear"][slot]
+                m = self._mapped[slot]
+                if (row[:m] == 0).any() or (row[m:] != 0).any():
+                    fail(f"slot {slot} linear row not a dense prefix of "
+                         f"{m} mapped pages")
+                ring = (len(self._slot_pages[slot])
+                        - int((self.tables.get("ring",
+                               np.zeros((0, 0)))[slot] != 0).sum())
+                        if self.has_ring else len(self._slot_pages[slot]))
+                if ring != m:
+                    fail(f"slot {slot} owns {ring} linear pages but maps "
+                         f"{m}")
 
     # ---- prefix-cache sharing (serve.prefix) ------------------------------
 

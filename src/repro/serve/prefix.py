@@ -217,6 +217,39 @@ class PrefixCache:
                     self.stats.get("evicted_pages", 0) + 1
         return freed
 
+    def check_invariants(self) -> None:
+        """Audit index <-> pool consistency (docs/serving.md §Failure
+        handling): every indexed page is marked cached in the pool and
+        not free, no two entries claim one page, every non-root parent
+        exists, and children counts match the index. Raises
+        :class:`paging.PageAccountingError` — run by
+        ``engine.check_invariants()`` on faults / debug ticks."""
+        from repro.serve.paging import PageAccountingError
+
+        def fail(msg):
+            raise PageAccountingError(f"prefix index violated: {msg}")
+
+        owner: Dict[int, int] = {}
+        kids: Dict[int, int] = {}
+        free = set(self.kv._free)
+        for e in self.entries.values():
+            if not self.kv.cached[e.page]:
+                fail(f"entry {e.key} page {e.page} not marked cached")
+            if e.page in free:
+                fail(f"entry {e.key} page {e.page} is on the free list")
+            if e.page in owner:
+                fail(f"page {e.page} indexed by entries {owner[e.page]} "
+                     f"and {e.key}")
+            owner[e.page] = e.key
+            if e.parent is not None:
+                if e.parent not in self.entries:
+                    fail(f"entry {e.key} parent {e.parent} missing")
+                kids[e.parent] = kids.get(e.parent, 0) + 1
+        for e in self.entries.values():
+            if e.children != kids.get(e.key, 0):
+                fail(f"entry {e.key} children {e.children} != indexed "
+                     f"extensions {kids.get(e.key, 0)}")
+
     def clear(self) -> int:
         """Drop every entry (benchmark resets). All pages must be at
         refcount zero — i.e. the engine is drained."""

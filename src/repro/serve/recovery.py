@@ -1,0 +1,141 @@
+"""Engine snapshot / restore: drain → snapshot → rebuild → resume
+(docs/serving.md §Failure handling).
+
+A snapshot is the *host-side* resume state only — per request: the
+original prompt, the tokens emitted so far, the remaining budget and
+deadline. No KV pages are serialized: restore re-prefills
+prompt+emitted through the engine's ``_Resume`` path (the same form a
+preemption requeues), which is token-exact under greedy decoding. That
+keeps snapshots tiny (a few ints per token), makes them valid across
+engine configurations (a restored engine may use a different pool
+size, page size, batch, mesh — or a freshly restarted process), and
+reuses accounting that is already invariant-checked instead of
+inventing a second KV serialization format.
+
+    done = engine.drain(timeout=30.0)      # stop admission, checkpoint
+    recovery.save_snapshot(engine, path)
+    ...                                    # process may die here
+    fresh = model.engine(scfg, ...)        # new process / new engine
+    handles = recovery.restore(fresh, recovery.load_snapshot(path))
+    fresh.run()                            # resumes token-identically
+
+``launch/serve.py --snapshot PATH`` wires this under
+``launch/supervisor.py`` for crash-restart serving.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.engine import InferenceEngine, RequestHandle, _Resume
+from repro.serve.scheduler import Request
+
+SNAPSHOT_VERSION = 1
+
+
+def snapshot(engine: InferenceEngine) -> Dict[str, Any]:
+    """Capture every unfinished request as a JSON-serializable resume
+    record: active slots first (in slot order), then the scheduler
+    queue in FIFO order — so a restored engine re-admits in the order
+    the source engine was serving. Call after ``drain()`` for a
+    quiesced snapshot; snapshotting a live engine is also safe (the
+    records are pure host state), it just captures mid-flight
+    positions."""
+    items: List[Dict[str, Any]] = []
+
+    def add(handle: RequestHandle, emitted: List[Any], budget: int):
+        req = handle.request
+        deadline_left = None
+        if handle.deadline_at is not None:
+            deadline_left = max(0.0, handle.deadline_at - engine.clock())
+        items.append({
+            "uid": int(req.uid),
+            "prompt": np.asarray(req.prompt).tolist(),
+            "max_new_tokens": int(req.max_new_tokens),
+            "eos_id": None if req.eos_id is None else int(req.eos_id),
+            "emitted": [np.asarray(t).tolist() for t in emitted],
+            "budget": int(budget),
+            "deadline_left_s": deadline_left,
+        })
+
+    for slot in np.nonzero(engine.active)[0]:
+        task = engine._tasks[int(slot)]
+        add(task.handle, task.toks, task.budget)
+    for item in engine.scheduler.pending:
+        if isinstance(item, _Resume):
+            add(item.handle, item.emitted, item.budget)
+        else:
+            add(item, [], item.request.max_new_tokens)
+    return {"version": SNAPSHOT_VERSION, "max_len": int(engine.max_len),
+            "greedy": bool(engine.scfg.greedy), "items": items}
+
+
+def save_snapshot(engine: InferenceEngine, path: str) -> str:
+    """Snapshot to `path` atomically (tmp + ``os.replace`` — a crash
+    mid-write leaves the previous snapshot intact)."""
+    snap = snapshot(engine)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".snap.tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(snap, f)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def load_snapshot(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        snap = json.load(f)
+    version = snap.get("version")
+    if version != SNAPSHOT_VERSION:
+        raise ValueError(f"snapshot {path!r}: version {version} not "
+                         f"supported (expected {SNAPSHOT_VERSION})")
+    return snap
+
+
+def restore(engine: InferenceEngine, snap: Dict[str, Any],
+            on_token: Optional[Callable] = None
+            ) -> Dict[int, RequestHandle]:
+    """Resubmit every snapshot record into `engine`; returns
+    {uid: handle}. Records with emitted tokens enter through the
+    ``_Resume`` path — prompt+emitted re-prefill, remaining budget —
+    so under greedy decoding the total output (already-emitted tokens
+    pre-buffered on the handle + the tokens decoded here) is identical
+    to the run the snapshot interrupted. Remaining deadline budget
+    carries over (a record whose deadline already lapsed expires at
+    the first tick)."""
+    if snap["max_len"] > engine.max_len:
+        raise ValueError(
+            f"snapshot needs max_len >= {snap['max_len']}, engine has "
+            f"{engine.max_len} — resumed prompts could not fit")
+    handles: Dict[int, RequestHandle] = {}
+    for it in snap["items"]:
+        prompt = np.asarray(it["prompt"], np.int32)
+        req = Request(it["uid"], prompt,
+                      max_new_tokens=it["max_new_tokens"],
+                      eos_id=it["eos_id"],
+                      deadline_s=it["deadline_left_s"])
+        handle = engine.submit(req, on_token=on_token)
+        emitted = [np.asarray(t, np.int32) for t in it["emitted"]]
+        if emitted:
+            # swap the fresh queue entry for a _Resume carrying the
+            # already-emitted tokens (exactly what preemption requeues)
+            popped = engine.scheduler.pending.pop()
+            assert popped is handle, "submit() no longer queues at tail"
+            stack = np.asarray(emitted, np.int32).reshape(
+                (len(emitted),) + prompt.shape[1:])
+            engine.scheduler.submit(_Resume(
+                handle, np.concatenate([prompt, stack], axis=0),
+                it["budget"], emitted))
+            for t in emitted:              # replay into the stream view
+                handle._append(t)
+        handles[it["uid"]] = handle
+    return handles

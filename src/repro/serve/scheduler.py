@@ -43,6 +43,12 @@ class Request:
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
     output: Optional[np.ndarray] = None
+    # wall-clock budget in seconds, measured from submit(). None = no
+    # deadline. The engine expires the request (terminal status
+    # "expired") at the first tick boundary past the deadline, whether
+    # it is still queued or mid-decode — see docs/serving.md §Failure
+    # handling.
+    deadline_s: Optional[float] = None
 
 
 def bucket_length(n: int, max_len: int, floor: int = 8) -> int:
@@ -158,6 +164,18 @@ class SlotScheduler:
             self.slots[slot] = getattr(item, "uid", -1)
             out.append((slot, item))
         return out
+
+    def reap(self, should_drop) -> List[object]:
+        """Remove queued items for which ``should_drop(item)`` is true
+        (cancelled / past-deadline requests) and return them, preserving
+        the queue order of the survivors. The engine finalizes the
+        dropped handles; queued items own no pages, so there is nothing
+        else to free."""
+        dropped = [it for it in self.pending if should_drop(it)]
+        if dropped:
+            self.pending = deque(it for it in self.pending
+                                 if not should_drop(it))
+        return dropped
 
     def release(self, slot: int) -> None:
         self.slots[slot] = None

@@ -199,12 +199,22 @@ class SpecDecodeController:
         if not eng.active.any():
             return
         slots = np.nonzero(eng.active)[0]
+        if eng.faults is not None:
+            # raises before the donated cycle call (recoverable: the
+            # engine preempt-resumes the survivors, fails the target)
+            eng.faults.before_decode(eng)
         tables = eng.kv.device_tables()
         exact, acc, eng.cache = self._cycle(k)(
             eng.params, self.draft_params, jnp.asarray(eng.tokens),
             eng.cache, jnp.asarray(eng.pos), jnp.asarray(eng.active),
             tables)
         exact, acc = np.array(exact), np.array(acc)
+        if eng.faults is not None:
+            # cancel-mid-spec-rollback: lands between the batched
+            # verify and the commit+trim below; the commit still runs
+            # (cancellation is honoured at the next tick boundary), so
+            # rollback accounting must stay exact for a doomed slot
+            eng.faults.on_spec_cycle(eng)
         eng.stats["decode_steps"] += 1
         eng.stats["spec_cycles"] += 1
         eng.stats["wasted_slot_steps"] += int(eng.max_batch - len(slots))

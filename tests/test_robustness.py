@@ -1,0 +1,413 @@
+"""Serving-tier robustness: deadlines, cancellation, terminal
+statuses, failure isolation (poison requests, injected device errors),
+graceful drain + snapshot/restore, page-accounting audits, and the
+deterministic fault-injection harness (docs/serving.md §Failure
+handling)."""
+import dataclasses
+import functools
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serve import (Fault, FaultPlan, InferenceEngine,
+                         PageAccountingError, Request, RequestError,
+                         ServeConfig, TERMINAL_STATUSES, recovery)
+
+
+@functools.lru_cache(maxsize=1)
+def _model():
+    # f32 so greedy argmax is identical across batch compositions —
+    # the survivor-identity assertions compare against a fault-free run
+    cfg = ModelConfig(name="tiny", family="dense", d_model=64,
+                      n_layers=2, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=128, loss_chunk=0, remat=False,
+                      dtype="float32")
+    return cfg, T.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+            for n in lens]
+
+
+def _engine(cfg, params, faults=None, clock=None, max_batch=2,
+            max_len=32, **scfg_kw):
+    scfg = ServeConfig(greedy=True, page_size=4, debug=True, **scfg_kw)
+    return InferenceEngine(params, cfg, scfg, max_batch=max_batch,
+                           max_len=max_len, faults=faults, clock=clock)
+
+
+def _assert_no_leaks(eng):
+    eng.check_invariants()
+    assert eng.kv.used_pages == eng.kv.cached_page_count
+    if eng.prefix is not None:
+        eng.prefix.clear()
+        assert eng.kv.used_pages == 0
+
+
+# ---- satellite: handle lifecycle (statuses, cancel, iter, result) -------
+
+
+def test_cancel_while_queued():
+    cfg, params = _model()
+    eng = _engine(cfg, params, max_batch=1)
+    p1, p2 = _prompts(cfg, [6, 6])
+    h1 = eng.submit(Request(0, p1, max_new_tokens=4))
+    h2 = eng.submit(Request(1, p2, max_new_tokens=4))
+    h2.cancel()
+    eng.run()
+    assert h1.status == "done" and h1.done and h1.finished
+    assert h2.status == "cancelled" and not h2.done and h2.finished
+    assert h2.tokens == []                   # never admitted
+    with pytest.raises(RequestError, match="request 1 cancelled"):
+        h2.result()
+    assert h2.error.uid == 1 and h2.error.status == "cancelled"
+    assert eng.stats["cancelled"] == 1
+    _assert_no_leaks(eng)
+
+
+def test_cancel_active_keeps_partial_output():
+    cfg, params = _model()
+    eng = _engine(cfg, params, max_batch=1)
+    [p] = _prompts(cfg, [6])
+    h = eng.submit(Request(0, p, max_new_tokens=16))
+    for _ in range(4):
+        eng.step()
+    assert h.status == "running" and len(h.tokens) >= 2
+    h.cancel("user closed the stream")
+    eng.run()
+    assert h.status == "cancelled"
+    # partial output stays readable on the handle and the request
+    assert len(h.tokens) >= 2
+    assert np.array_equal(h.request.output, np.asarray(h.tokens))
+    with pytest.raises(RequestError, match="user closed the stream"):
+        h.result()
+    _assert_no_leaks(eng)
+
+
+def test_handle_reiteration_replays():
+    cfg, params = _model()
+    eng = _engine(cfg, params, max_batch=1)
+    [p] = _prompts(cfg, [5])
+    h = eng.submit(Request(0, p, max_new_tokens=5))
+    first = list(h)
+    again = list(h)                          # restarts from token 0
+    assert first == again == list(h.result())
+    assert len(first) == 5
+
+
+def test_iterating_failed_handle_raises_at_exhaustion():
+    cfg, params = _model()
+    eng = _engine(cfg, params, max_batch=1)
+    p1, p2 = _prompts(cfg, [6, 6])
+    h1 = eng.submit(Request(0, p1, max_new_tokens=3))
+    h2 = eng.submit(Request(1, p2, max_new_tokens=3))
+    h2.cancel()
+    eng.run()
+    assert list(h1) == list(h1.result())
+    it = iter(h2)
+    with pytest.raises(RequestError, match="cancelled"):
+        list(it)
+
+
+def test_deadline_expiry_with_injected_clock():
+    cfg, params = _model()
+    t = [0.0]
+    eng = _engine(cfg, params, clock=lambda: t[0], max_batch=1)
+    [p] = _prompts(cfg, [6])
+    h = eng.submit(Request(0, p, max_new_tokens=32, deadline_s=10.0))
+    for _ in range(3):
+        eng.step()
+    assert h.status == "running"
+    t[0] = 11.0                              # past the deadline
+    eng.step()                               # reaped at the tick boundary
+    assert h.status == "expired"
+    assert len(h.tokens) >= 2                # partial output survives
+    with pytest.raises(RequestError, match="deadline 10.0s exceeded"):
+        h.result()
+    assert eng.stats["expired"] == 1
+    assert not eng.in_flight
+    _assert_no_leaks(eng)
+
+
+def test_submit_validation():
+    cfg, params = _model()
+    eng = _engine(cfg, params)
+    [p] = _prompts(cfg, [4])
+    with pytest.raises(ValueError, match="deadline"):
+        eng.submit(Request(0, p, max_new_tokens=2, deadline_s=-1.0))
+    with pytest.raises(ValueError, match="vocab"):
+        eng.submit(Request(1, np.asarray([0, cfg.vocab_size], np.int32),
+                           max_new_tokens=2))
+    h = eng.submit(Request(2, p, max_new_tokens=2))
+    with pytest.raises(ValueError, match="duplicate request uid"):
+        eng.submit(Request(2, p, max_new_tokens=2))
+    h.cancel()
+    eng.run()
+    # uid reuse is fine once the old request reached a terminal status
+    h2 = eng.submit(Request(2, p, max_new_tokens=2))
+    eng.run()
+    assert h2.status == "done"
+
+
+# ---- tentpole: failure isolation ----------------------------------------
+
+
+def test_poison_request_is_isolated():
+    cfg, params = _model()
+    prompts = _prompts(cfg, [6, 7, 8])
+    base = _engine(cfg, params)
+    for uid, p in enumerate(prompts):
+        base.submit(Request(uid, p, max_new_tokens=6))
+    base_out = {u: r.output for u, r in base.run().items()}
+
+    plan = FaultPlan([Fault(step=0, kind="poison_prefill", uid=1)])
+    eng = _engine(cfg, params, faults=plan)
+    hs = [eng.submit(Request(uid, p, max_new_tokens=6))
+          for uid, p in enumerate(prompts)]
+    eng.run()
+    assert hs[1].status == "failed"
+    assert "non-finite" in hs[1].error.reason
+    assert hs[0].status == hs[2].status == "done"
+    for u in (0, 2):                         # neighbours undisturbed
+        assert np.array_equal(base_out[u], eng.done[u].output)
+    assert eng.stats["failed"] == 1
+    _assert_no_leaks(eng)
+
+
+def test_device_error_recovery():
+    cfg, params = _model()
+    prompts = _prompts(cfg, [6, 7, 8])
+    base = _engine(cfg, params)
+    for uid, p in enumerate(prompts):
+        base.submit(Request(uid, p, max_new_tokens=8))
+    base_out = {u: r.output for u, r in base.run().items()}
+
+    plan = FaultPlan([Fault(step=2, kind="device_error", uid=0)])
+    eng = _engine(cfg, params, faults=plan)
+    hs = [eng.submit(Request(uid, p, max_new_tokens=8))
+          for uid, p in enumerate(prompts)]
+    eng.run()
+    assert eng.stats["device_faults"] == 1
+    assert hs[0].status == "failed"
+    assert "device error" in hs[0].error.reason
+    # the other slots were preempted and resumed token-identically
+    for u in (1, 2):
+        assert hs[u].status == "done"
+        assert np.array_equal(base_out[u], eng.done[u].output)
+    _assert_no_leaks(eng)
+
+
+def test_page_accounting_error_is_engine_fatal():
+    cfg, params = _model()
+    eng = _engine(cfg, params)
+    [p] = _prompts(cfg, [6])
+    eng.submit(Request(0, p, max_new_tokens=4))
+    eng.step()
+    # corrupt the pool deliberately: a page owned by a live table also
+    # pushed onto the free list must trip the audit, not be isolated
+    owned = next(pages for pages in eng.kv._slot_pages if pages)
+    eng.kv._free.append(owned[0])
+    with pytest.raises(PageAccountingError):
+        eng.check_invariants()
+
+
+# ---- tentpole: graceful drain + snapshot/restore ------------------------
+
+
+def test_drain_completes_active_and_closes_admission():
+    cfg, params = _model()
+    eng = _engine(cfg, params, max_batch=2)
+    prompts = _prompts(cfg, [6, 7, 8])
+    hs = [eng.submit(Request(uid, p, max_new_tokens=4))
+          for uid, p in enumerate(prompts)]
+    eng.step()                               # admit the first two
+    done = eng.drain()                       # no timeout: finish active
+    assert hs[0].status == hs[1].status == "done"
+    assert hs[2].status == "pending"         # queued, never admitted
+    assert set(done) == {0, 1}
+    eng.resume_admission()
+    eng.run()
+    assert hs[2].status == "done"
+
+
+def test_drain_snapshot_restore_token_identity(tmp_path):
+    cfg, params = _model()
+    prompts = _prompts(cfg, [6, 7, 8, 9])
+    base = _engine(cfg, params)
+    for uid, p in enumerate(prompts):
+        base.submit(Request(uid, p, max_new_tokens=8))
+    base_out = {u: r.output for u, r in base.run().items()}
+
+    t = [0.0]
+    eng = _engine(cfg, params, clock=lambda: t[0])
+    hs = [eng.submit(Request(uid, p, max_new_tokens=8,
+                             deadline_s=100.0 if uid == 0 else None))
+          for uid, p in enumerate(prompts)]
+    for _ in range(3):
+        eng.step()
+    t[0] = 40.0
+    done_before = eng.drain(timeout=0)       # preempt whatever is live
+    snap = recovery.snapshot(eng)
+    # remaining deadline budget carries over, not the absolute deadline
+    rec0 = next(it for it in snap["items"] if it["uid"] == 0)
+    assert rec0["deadline_left_s"] == pytest.approx(60.0)
+    path = os.path.join(str(tmp_path), "snap.json")
+    recovery.save_snapshot(eng, path)
+    assert recovery.load_snapshot(path)["items"] == snap["items"]
+
+    eng2 = _engine(cfg, params, clock=lambda: t[0])
+    restored = recovery.restore(eng2, snap)
+    assert set(restored) == {u for u, h in enumerate(hs)
+                             if not h.finished}
+    done_after = eng2.run()
+    for u in range(len(prompts)):
+        out = (done_before.get(u) or done_after[u]).output
+        assert np.array_equal(base_out[u], out), f"request {u} diverged"
+    _assert_no_leaks(eng2)
+
+
+def test_restore_rejects_wrong_geometry(tmp_path):
+    cfg, params = _model()
+    eng = _engine(cfg, params, max_len=32)
+    eng.submit(Request(0, _prompts(cfg, [6])[0], max_new_tokens=8))
+    eng.drain(timeout=0)
+    snap = recovery.snapshot(eng)
+    small = _engine(cfg, params, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        recovery.restore(small, snap)
+
+
+# ---- tentpole: deterministic fault injection ----------------------------
+
+
+def test_fault_plan_validates_and_is_deterministic():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault(step=0, kind="meteor_strike")
+    a = FaultPlan.random(seed=5, uids=range(8), n_steps=20)
+    b = FaultPlan.random(seed=5, uids=range(8), n_steps=20)
+    assert a.faults == b.faults
+    assert a.faults != FaultPlan.random(seed=6, uids=range(8),
+                                        n_steps=20).faults
+
+
+def test_fault_replay_is_bit_for_bit():
+    cfg, params = _model()
+    prompts = _prompts(cfg, [5, 6, 7, 8], seed=3)
+
+    def chaos():
+        plan = FaultPlan([Fault(step=0, kind="cancel", uid=2),
+                          Fault(step=1, kind="dry_pool", pages=2, hold=2),
+                          Fault(step=2, kind="preempt", pages=1)], seed=5)
+        eng = _engine(cfg, params, faults=plan, kv_pool_pages=10)
+        hs = [eng.submit(Request(uid, p, max_new_tokens=6))
+              for uid, p in enumerate(prompts)]
+        while eng.in_flight or plan.borrowed_pages:
+            eng.step()
+        return plan.fired, [h.status for h in hs], \
+            [list(h.tokens) for h in hs]
+
+    assert chaos() == chaos()
+
+
+# ---- satellite: randomized lifecycle property trace ---------------------
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_randomized_lifecycle_trace(seed):
+    """Random {submit, cancel, deadline-expire, preempt, drain} trace:
+    page accounting and slot alignment hold after every event, every
+    handle reaches a terminal status, and zero pages leak at quiesce."""
+    cfg, params = _model()
+    t = [0.0]
+    eng = _engine(cfg, params, clock=lambda: t[0], max_batch=2,
+                  max_len=24, kv_pool_pages=10)
+    rng = np.random.default_rng(seed)
+    handles, next_uid = {}, 0
+    for _ in range(30):
+        act = int(rng.integers(0, 6))
+        if act <= 1 and next_uid < 8:        # submit (weighted)
+            n = int(rng.integers(1, 12))
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  size=(n,)).astype(np.int32)
+            deadline = (float(rng.integers(1, 40))
+                        if rng.integers(0, 2) else None)
+            handles[next_uid] = eng.submit(
+                Request(next_uid, prompt,
+                        max_new_tokens=int(rng.integers(1, 10)),
+                        deadline_s=deadline))
+            next_uid += 1
+        elif act == 2 and handles:           # cancel a random request
+            handles[int(rng.choice(list(handles)))].cancel()
+        elif act == 3:                       # advance the deadline clock
+            t[0] += float(rng.integers(0, 25))
+        elif act == 4 and eng.active.any():  # forced preemption
+            eng._preempt(eng._select_victim())
+        elif act == 5:                       # drain burst, then reopen
+            eng.drain(timeout=0)
+            eng.resume_admission()
+        eng.step()
+        eng.check_invariants()               # audited after every event
+    eng.run()
+    assert all(h.finished for h in handles.values())
+    assert all(h.status in TERMINAL_STATUSES for h in handles.values())
+    done = sum(h.status == "done" for h in handles.values())
+    assert (done + eng.stats["cancelled"] + eng.stats["expired"]
+            + eng.stats["failed"] == len(handles))
+    _assert_no_leaks(eng)
+
+
+# ---- chaos storms (the heavier seeded runs) -----------------------------
+
+
+@pytest.mark.chaos
+def test_random_fault_storm_quiesces_clean():
+    """A dense seeded FaultPlan.random storm over every fault kind:
+    the engine must keep accounting exact (debug tick audits), land
+    every handle on a terminal status and leak nothing."""
+    cfg, params = _model()
+    rng = np.random.default_rng(17)
+    prompts = _prompts(cfg, list(rng.integers(4, 12, size=10)), seed=17)
+    plan = FaultPlan.random(seed=17, uids=range(len(prompts)),
+                            n_steps=12, n_faults=16)
+    eng = _engine(cfg, params, faults=plan, max_batch=3, max_len=24)
+    hs = [eng.submit(Request(uid, p, max_new_tokens=8))
+          for uid, p in enumerate(prompts)]
+    while eng.in_flight or plan.borrowed_pages:
+        eng.step()
+    assert all(h.finished for h in hs)
+    for h in hs:
+        if h.status != "done":
+            assert isinstance(h.error, RequestError)
+    _assert_no_leaks(eng)
+
+
+@pytest.mark.chaos
+def test_preemption_storm_token_identity():
+    """A preemption fault every step must never change greedy outputs
+    — resume is re-prefill of prompt+emitted, token-exact."""
+    cfg, params = _model()
+    prompts = _prompts(cfg, [6, 7, 8, 9], seed=23)
+    base = _engine(cfg, params)
+    for uid, p in enumerate(prompts):
+        base.submit(Request(uid, p, max_new_tokens=8))
+    base_out = {u: r.output for u, r in base.run().items()}
+
+    plan = FaultPlan([Fault(step=s, kind="preempt", pages=1)
+                      for s in range(1, 30, 2)])
+    eng = _engine(cfg, params, faults=plan)
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, max_new_tokens=8))
+    done = eng.run()
+    assert eng.stats["preemptions"] >= 4
+    for u, r in done.items():
+        assert np.array_equal(base_out[u], r.output)
+    _assert_no_leaks(eng)

@@ -58,3 +58,34 @@ def test_supervise_kills_hung_child():
         max_restarts=0, hang_timeout=2.0, backoff_s=0.0,
         log=lambda *_: None)
     assert rc != 0
+
+
+def test_heartbeat_pattern_ignores_chatty_output():
+    """A child logging constantly but never emitting the heartbeat line
+    is a wedged server (device call never returns while admission logs
+    keep flowing) — with --heartbeat-regex it must be killed, because
+    chatty output no longer counts as progress."""
+    rc = supervise(
+        [sys.executable, "-u", "-c",
+         "import time\n"
+         "while True:\n"
+         "    print('admitting request ...', flush=True)\n"
+         "    time.sleep(0.2)\n"],
+        max_restarts=0, hang_timeout=2.0, backoff_s=0.0,
+        heartbeat_pattern=r"\[serve\] heartbeat", log=lambda *_: None)
+    assert rc != 0
+
+
+def test_heartbeat_pattern_keeps_live_child():
+    """Heartbeat lines (and only those) reset the hang timer: a child
+    heartbeating slower than the chatty noise but faster than the
+    timeout survives to a clean exit."""
+    rc = supervise(
+        [sys.executable, "-u", "-c",
+         "import time\n"
+         "for i in range(4):\n"
+         "    print('[serve] heartbeat step=%d' % i, flush=True)\n"
+         "    time.sleep(0.8)\n"],
+        max_restarts=0, hang_timeout=2.5, backoff_s=0.0,
+        heartbeat_pattern=r"\[serve\] heartbeat", log=lambda *_: None)
+    assert rc == 0
