@@ -73,3 +73,81 @@ def emit(table: str, rows: List[Dict], keys=None, meta: Dict = None):
     with open(os.path.join(OUT_DIR, f"{table}.json"), "w") as f:
         json.dump(rows if meta is None else {"meta": meta, "rows": rows},
                   f, indent=1, default=str)
+
+
+def load_baseline(table: str):
+    """Rows of a checked-in benchmark artifact. Handles both the
+    ``{"meta": ..., "rows": [...]}`` format and the legacy bare row
+    list; returns None when the file does not exist (fresh checkout,
+    custom BENCH_OUT) so callers can skip their gate with a notice
+    instead of crashing."""
+    path = os.path.join(OUT_DIR, f"{table}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        doc = json.load(f)
+    return doc["rows"] if isinstance(doc, dict) else doc
+
+
+def row_ratio(rows: List[Dict], num_engine: str, den_engine: str,
+              key: str) -> float:
+    """``rows[num][key] / rows[den][key]`` looked up by engine name —
+    the machine-independent summary a regression gate compares (raw
+    tok/s depends on the box; the paged/rect or spec/base *ratio* does
+    not)."""
+    by = {r["engine"]: r for r in rows}
+    return float(by[num_engine][key]) / float(by[den_engine][key])
+
+
+def baseline_metrics(rows, build, label: str):
+    """Build a gated-metric dict from checked-in baseline rows via
+    ``build(rows)``, or None when there is no baseline or it predates
+    the gated metric (legacy artifacts carry different row keys /
+    engine names — an old file must not crash the run that is about to
+    replace it)."""
+    if rows is None:
+        return None
+    try:
+        return build(rows)
+    except (KeyError, StopIteration, ValueError, ZeroDivisionError):
+        print(f"[{label}] checked-in baseline predates the gated metric "
+              f"— gate skipped (this run rewrites the artifact)")
+        return None
+
+
+def check_regression(baseline: Dict[str, float], current: Dict[str, float],
+                     rel_tol: float = 0.10, label: str = "bench"):
+    """Enforce higher-is-better metric floors against a checked-in
+    baseline: every metric must satisfy ``current >= baseline *
+    (1 - rel_tol)`` or the run fails loudly with a RuntimeError listing
+    each regressed metric.
+
+    ``baseline`` is None when the artifact is missing (fresh checkout)
+    — the gate prints a notice and passes, so first runs can create the
+    baselines the next run will be held to. The
+    ``NQ_BENCH_INJECT_SLOWDOWN`` env var (a fraction, e.g. ``0.2``)
+    scales every *current* metric down before the comparison — the
+    end-to-end negative test that proves the gate actually fires."""
+    if baseline is None:
+        print(f"[{label}] no checked-in baseline — regression gate "
+              f"skipped (run the full benchmark to create one)")
+        return
+    inject = float(os.environ.get("NQ_BENCH_INJECT_SLOWDOWN", "0") or 0.0)
+    failures = []
+    for k, base in baseline.items():
+        base = float(base)
+        if k not in current:
+            failures.append(f"{k}: metric missing from current run")
+            continue
+        cur = float(current[k]) * (1.0 - inject)
+        floor = base * (1.0 - rel_tol)
+        ok = cur >= floor
+        print(f"[{label}] {k}: {cur:.3f} vs baseline {base:.3f} "
+              f"(floor {floor:.3f}) {'OK' if ok else 'REGRESSED'}")
+        if not ok:
+            failures.append(f"{k}: {cur:.3f} < floor {floor:.3f} "
+                            f"(baseline {base:.3f}, rel_tol {rel_tol:.0%})")
+    if failures:
+        raise RuntimeError(
+            f"[{label}] benchmark regression vs checked-in baseline:\n  "
+            + "\n  ".join(failures))

@@ -60,8 +60,16 @@ paged=seed+4, spec=seed+16, prefix=seed+30, chaos=seed+44 — the
 defaults reproduce the historical 7/11/23 traces) and is recorded in
 each emitted BENCH json's ``meta`` block.
 
+Each section ends with a throughput regression gate
+(:func:`benchmarks.common.check_regression`): the machine-independent
+summary ratio (paged/rect decode tok/s, best pinned speculative
+speedup, noprefix/prefix TTFT) must stay within 10% of the checked-in
+baseline of the SAME mode (full vs ``_smoke``), read before the run
+overwrites its artifact. ``NQ_BENCH_INJECT_SLOWDOWN=0.2`` proves the
+gates fire.
+
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--tp N]
-        [--spec] [--prefix] [--chaos] [--seed S]
+        [--paged] [--spec] [--prefix] [--chaos] [--seed S]
 """
 from __future__ import annotations
 
@@ -136,15 +144,25 @@ def drive(mode, params, cfg, trace, mesh=None, scfg=None,
     # a budget-1 request finishes at admission off the prefill logits
     # and would leave the decode step untraced. The warm prompt length
     # is clamped below max_len (submit rejects n >= max_len) but still
-    # pads to the same bucket.
+    # pads to the same bucket. Warm prompts must be DISTINCT per bucket:
+    # with the prefix cache on, identical (e.g. all-zero) warm prompts
+    # prefix-hit each other and compile only the shared-prefix admission
+    # + suffix-prefill steps — the plain per-bucket prefill then
+    # compiles inside the timed region (the ~30% "gather tax" of the
+    # original paged baseline was exactly these mid-trace compiles).
     buckets = sorted({bucket_length(len(r.prompt), max_len)
                       for _, r in trace})
+    vocab = cfg.vocab_size
     for i, b in enumerate(buckets):
-        eng.submit(Request(-1 - i,
-                           np.zeros((min(b, max_len - 2),), np.int32),
-                           max_new_tokens=2))
+        n = min(b, max_len - 2)
+        warm = ((np.arange(n) * 7 + i * 31 + 1) % vocab).astype(np.int32)
+        eng.submit(Request(-1 - i, warm, max_new_tokens=2))
     eng.run()
     assert eng.stats["decode_traces"], "warm-up must trace the decode step"
+    if eng.prefix is not None:
+        # drop warm-up entries: the timed region must measure page
+        # sharing between trace requests, not hits on warm prompts
+        eng.prefix.clear()
     eng.reset_stats()
 
     handles = {}
@@ -226,11 +244,17 @@ def run_paged(smoke: bool = False, seed: int = 7):
         row["engine"] = name
         row["max_batch"] = mb
         rows.append(row)
+    # regression baseline must be read BEFORE emit: the run overwrites
+    # its artifact and would then gate against itself. The gated metric
+    # is the machine-independent paged/rect decode-throughput ratio
+    # (the "gather tax"), not raw tok/s, and only the full trace is
+    # long enough to measure it (see the smoke early-out below).
+    table = "BENCH_serve_paged_smoke" if smoke else "BENCH_serve_paged"
+    base_rows = common.load_baseline(table)
     # the checked-in BENCH_serve_paged.json is the full-run CPU baseline;
     # the CI smoke gate must not overwrite it with its smaller trace
-    common.emit("BENCH_serve_paged_smoke" if smoke else "BENCH_serve_paged",
-                rows, meta={"seed": seed + 4, "base_seed": seed,
-                            "smoke": smoke})
+    common.emit(table, rows, meta={"seed": seed + 4, "base_seed": seed,
+                                   "smoke": smoke})
 
     by = {r["engine"]: r for r in rows}
     identical = all(np.array_equal(outs["rect-full"][u], outs["paged-half"][u])
@@ -247,6 +271,32 @@ def run_paged(smoke: bool = False, seed: int = 7):
     assert ratio <= 0.5, f"paged pool bytes ratio {ratio:.2f} > 0.5"
     assert by["paged-half"]["peak_active"] > by["rect-budget"]["peak_active"], \
         "overcommit must admit strictly more concurrency per KV byte"
+
+    gap = common.row_ratio(rows, "paged-half", "rect-full", "decode_tok_s")
+    print(f"paged decode throughput at 50% KV bytes: {gap:.0%} of the "
+          f"rectangular oracle ({by['paged-half']['decode_tok_s']:.1f} vs "
+          f"{by['rect-full']['decode_tok_s']:.1f} tok/s)")
+    if smoke:
+        # the smoke trace finishes in ~16 decode steps — at that scale
+        # the paged/rect ratio is wall-clock noise (observed swinging
+        # 1.0x..1.3x run to run), so a 10% gate would flake; the ratio
+        # is only gated on the full trace below
+        print("[serve_paged] smoke trace too short for a stable decode "
+              "ratio — regression gate runs on the full trace only")
+        return
+    if gap < 0.85:
+        # full-run acceptance: the widened multi-page gather must hold
+        # the gather tax at <= 15% of the rectangle's decode tok/s
+        raise RuntimeError(f"paged decode gap {1 - gap:.0%} > 15% of the "
+                           f"rectangular oracle")
+    metric = "paged_vs_rect_decode_ratio"
+    common.check_regression(
+        common.baseline_metrics(
+            base_rows,
+            lambda rs: {metric: common.row_ratio(
+                rs, "paged-half", "rect-full", "decode_tok_s")},
+            "serve_paged"),
+        {metric: gap}, rel_tol=0.10, label="serve_paged")
 
 
 # the amortization race runs a SMALLER quantized model than TINY: the
@@ -362,8 +412,10 @@ def run_spec(smoke: bool = False, tp: int = 1, seed: int = 7):
         points=([(1.0, 4)] if smoke else [(1.0, 2), (1.0, 4), (1.0, 8)]),
         max_prompt=8, max_new=24 if smoke else 40, max_len=64, seed=seed)
     rows = lrows + arows
-    common.emit("BENCH_serve_spec_smoke" if smoke else "BENCH_serve_spec",
-                rows, keys=list(arows[1].keys()),
+    # mode-matched baseline, read before emit (see run_paged)
+    table = "BENCH_serve_spec_smoke" if smoke else "BENCH_serve_spec"
+    base_rows = common.load_baseline(table)
+    common.emit(table, rows, keys=list(arows[1].keys()),
                 meta={"seed": seed + 16, "base_seed": seed, "smoke": smoke,
                       "tp": tp})
     print(f"speculative decode best speedup (SMALL, pinned k): "
@@ -374,6 +426,21 @@ def run_spec(smoke: bool = False, tp: int = 1, seed: int = 7):
         msg = f"best speculative decode speedup {best:.2f}x < 1.5x"
         assert smoke, msg
         print(f"[serve_bench] WARNING: {msg}")
+    common.check_regression(
+        common.baseline_metrics(
+            base_rows, lambda rs: {"spec_best_speedup_x": _spec_speedup(rs)},
+            "serve_spec"),
+        {"spec_best_speedup_x": best}, rel_tol=0.10, label="serve_spec")
+
+
+def _spec_speedup(rows):
+    """Best pinned-k SMALL speedup recomputed from artifact rows — the
+    legacy baseline predates summary metrics, so the gate derives the
+    ratio the same way the live race does."""
+    small = [r for r in rows if str(r.get("model", "")).startswith("small")]
+    base = next(r for r in small if r["engine"].endswith("-base"))
+    return max(r["decode_tok_s"] / base["decode_tok_s"] for r in small
+               if "-spec-" in r["engine"] and "dynamic" not in r["engine"])
 
 
 def build_shared_prefix_trace(rng, n_req, vocab, sys_len, max_extra,
@@ -522,8 +589,11 @@ def run_prefix(smoke: bool = False, tp: int = 1, seed: int = 7):
     rows.append(row)
     gate_identity(row["engine"], out)
 
+    # mode-matched baseline, read before emit (see run_paged)
+    table = "BENCH_serve_prefix_smoke" if smoke else "BENCH_serve_prefix"
+    base_rows = common.load_baseline(table)
     common.emit(
-        "BENCH_serve_prefix_smoke" if smoke else "BENCH_serve_prefix",
+        table,
         rows, meta={"seed": seed + 30, "base_seed": seed, "smoke": smoke,
                     "tp": tp, "sys_len": sys_len, "pool_pages": pool})
 
@@ -542,6 +612,14 @@ def run_prefix(smoke: bool = False, tp: int = 1, seed: int = 7):
         msg = f"mean TTFT cut {speedup:.2f}x < 2x"
         assert smoke, msg
         print(f"[serve_bench] WARNING: {msg}")
+    common.check_regression(
+        common.baseline_metrics(
+            base_rows,
+            lambda rs: {"prefix_ttft_speedup_x": common.row_ratio(
+                rs, "noprefix", "prefix", "mean_ttft_s")},
+            "serve_prefix"),
+        {"prefix_ttft_speedup_x": speedup}, rel_tol=0.10,
+        label="serve_prefix")
 
 
 def build_chaos_plan(trace):
@@ -850,6 +928,9 @@ def main() -> int:
                          "identity (needs N devices; on CPU set "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N)")
+    ap.add_argument("--paged", action="store_true",
+                    help="run only the paged-vs-rectangular memory-"
+                         "pressure race (BENCH_serve_paged[_smoke].json)")
     ap.add_argument("--spec", action="store_true",
                     help="run only the speculative-decode race "
                          "(BENCH_serve_spec[_smoke].json)")
@@ -864,7 +945,9 @@ def main() -> int:
                          "offset from it and records it in the emitted "
                          "BENCH json metadata")
     args = ap.parse_args()
-    if args.spec:
+    if args.paged:
+        run_paged(smoke=args.smoke, seed=args.seed)
+    elif args.spec:
         run_spec(smoke=args.smoke, tp=args.tp, seed=args.seed)
     elif args.prefix:
         run_prefix(smoke=args.smoke, tp=args.tp, seed=args.seed)

@@ -17,6 +17,15 @@ echo "== tier-1 tests =="
 python -m pytest -x -q
 
 if [[ "${1:-}" != "--fast" ]]; then
+  echo "== kernel differential fuzz (full profile, >=200 generated cases) =="
+  # tier-1 above already ran tests/test_kernel_diff.py at its default
+  # (small) example counts; this pass rescales every property to the
+  # full fuzz budget. Failures print the replay seed.
+  NQ_FUZZ_EXAMPLES=30 python -m pytest tests/test_kernel_diff.py \
+    -x -q -m "not slow"
+fi
+
+if [[ "${1:-}" != "--fast" ]]; then
   echo "== CPU smoke: quantize -> save =="
   OUT="${TMPDIR:-/tmp}/nq-verify-$$"
   python -m repro.launch.quantize --arch qwen1.5-0.5b \
@@ -53,6 +62,16 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m benchmarks.serve_bench --chaos --smoke
   echo "== CPU smoke: kernel wall-clock (two-call vs fused) =="
   python -m benchmarks.kernel_bench --smoke
+  echo "== regression-gate negative: injected 20% slowdown must fail =="
+  # the benches above all passed their checked-in-baseline gates; prove
+  # the gates actually bite by rerunning the cheapest one with a
+  # simulated 20% slowdown and requiring a nonzero exit
+  if NQ_BENCH_INJECT_SLOWDOWN=0.2 python -m benchmarks.kernel_bench \
+      --smoke >/dev/null 2>&1; then
+    echo "regression gate FAILED to catch an injected 20% slowdown" >&2
+    exit 1
+  fi
+  echo "gate correctly rejected the injected slowdown"
 fi
 
 echo "verify: OK"

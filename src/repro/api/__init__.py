@@ -44,7 +44,8 @@ from repro.kernels.ops import (  # noqa: F401
     KernelPolicy, current_kernel_policy, kernel_policy,
     lowrank_binary_matmul, lowrank_binary_matmul_expert,
     lowrank_binary_matmul_merged, set_kernel_policy)
-from repro.kernels.tuning import load_block_table  # noqa: F401
+from repro.kernels.tuning import (  # noqa: F401
+    load_block_table, load_paged_table)
 from repro.quant.surgery import (  # noqa: F401
     abstract_quantized_params, merge_projection_groups, packed_model_bytes,
     place_cache_on_mesh, place_on_mesh, quantizable_paths)
@@ -74,7 +75,7 @@ __all__ = [
     "KernelPolicy", "kernel_policy", "current_kernel_policy",
     "set_kernel_policy", "lowrank_binary_matmul",
     "lowrank_binary_matmul_merged", "lowrank_binary_matmul_expert",
-    "load_block_table",
+    "load_block_table", "load_paged_table",
     # surgery / storage / sharding
     "abstract_quantized_params", "merge_projection_groups",
     "packed_model_bytes", "quantizable_paths",

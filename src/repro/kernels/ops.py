@@ -78,7 +78,14 @@ class KernelPolicy:
     interpret: Optional[bool] = None
     fused: bool = True
     merge_projections: bool = True
+    # decode-step megakernel (QKV → paged attention → wo in one pass);
+    # requires the fused merged-projection path and only engages for
+    # qualifying launches — see decode_step_megakernel.
+    megakernel: bool = True
     block_table: Optional[Tuple[Tuple[int, ...], ...]] = None
+    # paged-kernel knob table: (b_hi, hkv_hi, d_hi, pages_hi,
+    # pages_per_step, head_block) rows, from tuning.load_paged_table.
+    paged_block_table: Optional[Tuple[Tuple[int, ...], ...]] = None
     # tensor-parallel launch: a jax Mesh with a `tp_axis` axis turns
     # every entry point into a shard_map over that axis (col/row per
     # repro.sharding.rules); None = single-device launch (default).
@@ -95,6 +102,10 @@ class KernelPolicy:
         if self.block_table is not None:
             object.__setattr__(self, "block_table",
                                tuple(tuple(r) for r in self.block_table))
+        if self.paged_block_table is not None:
+            object.__setattr__(self, "paged_block_table",
+                               tuple(tuple(r)
+                                     for r in self.paged_block_table))
 
     def use_pallas(self) -> bool:
         if self.mode == "auto":
@@ -111,6 +122,12 @@ class KernelPolicy:
         kernel calls (requires the fused pallas path)."""
         return self.use_pallas() and self.fused and self.merge_projections
 
+    def use_megakernel(self) -> bool:
+        """Whether the model layer should try the fused decode-step
+        megakernel (per-launch shape gating still applies — see
+        :func:`decode_step_megakernel`)."""
+        return self.use_merged_projections() and self.megakernel
+
     def tp_size(self) -> int:
         """Devices along the tensor-parallel axis (1 = no TP)."""
         if self.mesh is None or self.tp_axis not in self.mesh.axis_names:
@@ -122,6 +139,13 @@ class KernelPolicy:
         """(bm, bn, bk) for one call, from the heuristic table fitted to
         the concrete shape (divisor tiles — no weight padding)."""
         return tuning.fit_block_sizes(M, K, N, r, dtype, self.block_table)
+
+    def paged_block_sizes(self, B: int, Hkv: int, D: int,
+                          pages: int) -> Tuple[int, int]:
+        """(pages_per_step, head_block) for one paged-attention launch,
+        from the paged knob table fitted to the concrete shape."""
+        return tuning.fit_paged_block_sizes(B, Hkv, D, pages,
+                                            self.paged_block_table)
 
 
 # Scoped overrides live in a ContextVar (thread/async-local); the
@@ -454,21 +478,77 @@ def _local_paged_attention(q, k_pool, v_pool, bt, q_pos, cache_pos,
     if p.use_pallas():
         from repro.kernels import paged_attention as pa
         S = q.shape[1]
+        ppb, hb = p.paged_block_sizes(q.shape[0], k_pool.shape[2],
+                                      k_pool.shape[3], bt.shape[1])
         if S == 1:
             return pa.paged_decode_attention(
                 q, k_pool, v_pool, bt, q_pos, cache_pos, window=window,
-                scale=scale, interpret=p.resolve_interpret())
+                scale=scale, pages_per_step=ppb, head_block=hb,
+                interpret=p.resolve_interpret())
         # multi-token verify: all S rows are in the pool before any
         # query reads, and the per-query position reconstruction masks
         # later-written rows (see ref.paged_attention_ref), so S
         # single-token kernel launches at shifted positions are exact.
         outs = [pa.paged_decode_attention(
             q[:, j:j + 1], k_pool, v_pool, bt, q_pos + j, cache_pos + j,
-            window=window, scale=scale, interpret=p.resolve_interpret())
+            window=window, scale=scale, pages_per_step=ppb, head_block=hb,
+            interpret=p.resolve_interpret())
             for j in range(S)]
         return jnp.concatenate(outs, axis=1)
     return ref.paged_attention_ref(q, k_pool, v_pool, bt, q_pos, cache_pos,
                                    window=window, scale=scale)
+
+
+def decode_step_megakernel(x, mqkv, wo, k_pool, v_pool, block_table,
+                           q_pos, cache_pos, *, head_dim: int,
+                           dims: Sequence[int], theta: float,
+                           scale: float, window: int = 0,
+                           policy: Optional[KernelPolicy] = None,
+                           eff_rank: Optional[int] = None,
+                           eff_rank_o: Optional[int] = None):
+    """Whole decode step in one pallas_call: merged-QKV packed matmul →
+    RoPE → paged attention (fresh-KV entry folded in-kernel) → packed
+    output projection (:mod:`repro.kernels.megakernel`).
+
+    Returns ``(y, k_new, v_new)`` — k_new/v_new are the current token's
+    post-RoPE KV rows (pool dtype) for the caller's paged cache write —
+    or **None** when the launch does not qualify, in which case the
+    caller runs the unfused chain (projections → cache write →
+    paged_attention → wo); the two paths are online-softmax-equal (see
+    tests/test_kernel_diff.py). Non-qualifying launches: ref-mode /
+    unfused / unmerged policies, megakernel=False, tensor-parallel
+    meshes (the merged padded-Nmax layout is not head-aligned, so a TP
+    shard cannot slice its q/k/v heads locally — the unfused chain's
+    per-role shard_map launches handle TP), ranks past MAX_FUSED_RANK,
+    and non-32-multiple eff_rank truncations.
+
+    x: (B, K) one decode token per slot; mqkv / wo: packed merged-QKV /
+    output-projection param dicts; dims: (Hq*D, Hkv*D).
+    """
+    p = policy if policy is not None else current_kernel_policy()
+    if not p.use_megakernel() or p.tp_size() > 1:
+        return None
+    if mqkv["qv"].ndim != 3 or wo["qv"].ndim != 2:
+        return None
+    if mqkv["qv"].shape[-1] > binary_matmul.MAX_FUSED_RANK \
+            or wo["qv"].shape[-1] > binary_matmul.MAX_FUSED_RANK:
+        return None
+    for r_eff, qv in ((eff_rank, mqkv["qv"]), (eff_rank_o, wo["qv"])):
+        if r_eff is not None and not (
+                0 < r_eff <= qv.shape[-1] and r_eff % 32 == 0):
+            return None
+    from repro.kernels import megakernel as mk
+    x = _match_packed_k(x, mqkv["qv"])
+    ppb, _ = p.paged_block_sizes(x.shape[0], k_pool.shape[2],
+                                 k_pool.shape[3], block_table.shape[1])
+    _, _, bk = p.block_sizes(x.shape[0], x.shape[-1],
+                             mqkv["qu_t"].shape[-1],
+                             eff_rank or mqkv["qv"].shape[-1], x.dtype)
+    return mk.decode_step_megakernel_raw(
+        x, mqkv, wo, k_pool, v_pool, block_table, q_pos, cache_pos,
+        dims=tuple(dims), head_dim=head_dim, theta=theta, scale=scale,
+        window=window, eff_rank=eff_rank, eff_rank_o=eff_rank_o,
+        pages_per_step=ppb, bk=bk, interpret=p.resolve_interpret())
 
 
 # ---------------------------------------------------------------------------

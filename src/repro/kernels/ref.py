@@ -118,6 +118,77 @@ def paged_attention_ref(q, k_pool, v_pool, block_table, q_pos, cache_pos,
     return o.reshape(B, S, Hq, D)
 
 
+def _rope_ref(x, pos, theta):
+    """Rotate-half RoPE on (B, H, D) at per-slot positions (B,) — the
+    pure-jnp twin of models.layers.apply_rope (f32 trig, cast back)."""
+    d = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = pos.astype(jnp.float32)[:, None, None] * inv[None, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def decode_step_ref(x, mqkv, wo, k_pool, v_pool, block_table, q_pos,
+                    cache_pos, *, head_dim, dims, theta, scale,
+                    window=0, eff_rank=None, eff_rank_o=None):
+    """Oracle for the decode-step megakernel
+    (:mod:`repro.kernels.megakernel`): merged-QKV packed matmul → RoPE
+    → fresh-KV paged attention → packed output projection, composed
+    from the per-kernel oracles with the same intermediate roundings as
+    the unfused chain (projection outputs round to x.dtype, fresh k/v
+    round to the pool dtype before scoring — exactly what writing them
+    to the pool and reading them back does).
+
+    x: (B, K) single decode token per slot; mqkv: merged param dict
+    (``quant.surgery.merge_projection_groups`` layout — qv (3, K//32,
+    R), qu_t (3, R//32, Nmax), s1/s2/rmask); wo: packed output
+    projection dict; dims: (Hq*D, Hkv*D) true projection widths.
+    Slots must not share WRITABLE pages (the batched fresh-row write
+    lands in every slot whose table maps the page) — the pager
+    guarantees this for live tables; prefix-cache shared pages are
+    read-only and copy-on-write before any decode write.
+    Returns (y (B, d_model), k_new (B, Hkv, D), v_new (B, Hkv, D)) —
+    k_new/v_new are post-RoPE, in the pool dtype, for the caller's
+    paged cache write.
+    """
+    B = x.shape[0]
+    nq, nkv = dims
+    hq, hkv = nq // head_dim, nkv // head_dim
+    rmask = mqkv.get("rmask")
+    outs = []
+    for g, n in enumerate((nq, nkv, nkv)):
+        y = lowrank_binary_matmul_fused_ref(
+            x, mqkv["qv"][g], mqkv["qu_t"][g], mqkv["s1"][g],
+            mqkv["s2"][g], None if rmask is None else rmask[g],
+            eff_rank=eff_rank)
+        outs.append(y[:, :n])
+    q = _rope_ref(outs[0].reshape(B, hq, head_dim), q_pos, theta)
+    k_new = _rope_ref(outs[1].reshape(B, hkv, head_dim), q_pos, theta)
+    k_new = k_new.astype(k_pool.dtype)
+    v_new = outs[2].reshape(B, hkv, head_dim).astype(v_pool.dtype)
+
+    # write the fresh row, then attend — the unfused-chain order.
+    ps = k_pool.shape[1]
+    rows = block_table.shape[1] * ps
+    rowv = cache_pos % rows
+    page = jnp.take_along_axis(block_table, (rowv // ps)[:, None],
+                               axis=1)[:, 0]
+    kp = k_pool.at[page, rowv % ps].set(k_new)
+    vp = v_pool.at[page, rowv % ps].set(v_new)
+    o = paged_attention_ref(q[:, None], kp, vp, block_table, q_pos,
+                            cache_pos, window=window, scale=scale)
+    xo = o.reshape(B, nq).astype(x.dtype)
+    ko = wo["qv"].shape[0] * 32          # stored K may be pack-aligned
+    if ko != nq:                         # past Hq*D; padded s2 cols are 0
+        xo = jnp.pad(xo, ((0, 0), (0, ko - nq)))
+    y = lowrank_binary_matmul_fused_ref(
+        xo, wo["qv"], wo["qu_t"], wo["s1"], wo["s2"],
+        eff_rank=eff_rank_o)
+    return y, k_new, v_new
+
+
 def lowrank_binary_matmul_fused_ref(x, qv, qu_t, s1, s2, rmask=None,
                                     eff_rank=None):
     """Oracle for the *fused* kernel: the whole chain runs with an f32

@@ -514,6 +514,31 @@ def attention(p, cfg, x, positions, cache=None, cache_pos=None,
     flash_threshold = cfg.flash_threshold
     B, S, _ = x.shape
     hd = cfg.head_dim
+    if (cache is not None and block_table is not None and S == 1
+            and _TAP[0] is None and not cfg.qk_norm
+            and _use_merged(p, "wqkv") and "b" not in p["wqkv"]
+            and "qu_t" in p.get("wo", {}) and "b" not in p["wo"]):
+        # fused decode step: QKV → paged attention → wo in ONE kernel
+        # (kernels.megakernel). Returns None for non-qualifying launches
+        # (TP mesh, oversized rank, ...) — fall through to the unfused
+        # chain below, which is online-softmax-equal.
+        er = p["wqkv"].get("eff_rank")
+        ero = p["wo"].get("eff_rank")
+        mega = kops.decode_step_megakernel(
+            x[:, 0], p["wqkv"], p["wo"], cache["k"], cache["v"],
+            block_table, positions[:, 0], cache_pos, head_dim=hd,
+            dims=(cfg.n_heads * hd, cfg.n_kv_heads * hd),
+            theta=cfg.rope_theta, scale=1.0 / math.sqrt(hd),
+            window=cfg.sliding_window,
+            eff_rank=int(er) if er else None,
+            eff_rank_o=int(ero) if ero else None)
+        if mega is not None:
+            y, k_new, v_new = mega
+            ck = paged_cache_write(cache["k"], k_new[:, None],
+                                   block_table, cache_pos)
+            cv = paged_cache_write(cache["v"], v_new[:, None],
+                                   block_table, cache_pos)
+            return y[:, None], {"k": ck, "v": cv}
     if _use_merged(p, "wqkv"):
         q, k, v = dense_merged(
             p["wqkv"], x, ("attn.wq", "attn.wk", "attn.wv"),

@@ -89,6 +89,13 @@ class ServeConfig:
     # for tests, chaos runs and bring-up, not the steady-state hot
     # path.
     debug: bool = False
+    # --- decode megakernel (docs/kernels.md §Decode megakernel) ---
+    # tri-state: None defers to the ambient KernelPolicy (megakernel on
+    # by default on the fused merged pallas path); True/False force the
+    # policy bit for this engine's traces. Per-launch qualification
+    # still applies — non-qualifying shapes (TP mesh, oversized rank)
+    # fall back to the unfused chain with identical greedy outputs.
+    megakernel: Optional[bool] = None
 
 
 def sample_token(logits: jnp.ndarray, key, scfg: ServeConfig) -> jnp.ndarray:
@@ -540,21 +547,29 @@ class InferenceEngine:
 
     @contextlib.contextmanager
     def _trace_scope(self):
-        """Tracing context for the jitted steps. With a mesh, scopes in
-        this engine's mesh-carrying kernel policy (shard_map TP kernel
-        launches) and activation-sharding constraints — both
-        contextvar-based, so concurrent traces from other engines or
-        training cells are untouched, and dispatch is baked into the
-        traced computation (execution needs no ambient globals)."""
+        """Tracing context for the jitted steps. Scopes in this engine's
+        kernel policy (the ambient policy, plus the ServeConfig's
+        megakernel override and — with a mesh — the mesh for shard_map
+        TP kernel launches) and, with a mesh, activation-sharding
+        constraints. Both are contextvar-based, so concurrent traces
+        from other engines or training cells are untouched, and dispatch
+        is baked into the traced computation (execution needs no ambient
+        globals)."""
+        pol = self._kpolicy if self._kpolicy is not None \
+            else kops.current_kernel_policy()
+        if self.scfg.megakernel is not None:
+            pol = dataclasses.replace(pol,
+                                      megakernel=self.scfg.megakernel)
         if self.mesh is None:
-            yield
+            with kops.kernel_policy(pol):
+                yield
             return
         from repro.models import layers as L
         from repro.sharding import rules
         with L.activation_sharding(
                 self.mesh, rules.data_axes(self.mesh),
                 "model" if "model" in self.mesh.axis_names else None):
-            with kops.kernel_policy(self._kpolicy):
+            with kops.kernel_policy(pol):
                 yield
 
     # ---- submission -------------------------------------------------------

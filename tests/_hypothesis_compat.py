@@ -47,7 +47,15 @@ except ImportError:
     st = _St()
 
     def settings(*args, **kwargs):
+        """Honors ``max_examples`` (other knobs — deadline, shrinking
+        phases — have no fallback equivalent and are ignored). Works in
+        either decorator order: the attribute is read at call time off
+        whichever function object the test runner actually invokes."""
+        max_examples = kwargs.get("max_examples")
+
         def deco(fn):
+            if max_examples is not None:
+                fn._compat_max_examples = int(max_examples)
             return fn
         return deco
 
@@ -60,7 +68,10 @@ except ImportError:
                     fn.__name__.encode().ljust(8, b"x")[:8],
                     dtype=_np.uint32).sum()
                 rng = _np.random.default_rng(int(seed))
-                for _ in range(_FALLBACK_EXAMPLES):
+                n = getattr(wrapper, "_compat_max_examples",
+                            getattr(fn, "_compat_max_examples",
+                                    _FALLBACK_EXAMPLES))
+                for _ in range(n):
                     kwargs = {k: s.sample(rng)
                               for k, s in strategies.items()}
                     fn(**kwargs)

@@ -394,6 +394,74 @@ def test_paged_ref_matches_rectangular_sdpa():
 
 
 # ---------------------------------------------------------------------------
+# S > 1 verify reads (the speculative k+1 forward) on the paged kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S,window,ring", [
+    (2, 0, False),                           # shortest multi-token span
+    (3, 6, True),                            # windowed, span wraps the ring
+    (4, 10, True),
+    (5, 0, False),                           # k=4 verify (k+1 queries)
+])
+def test_paged_kernel_multitoken_matches_ref(S, window, ring):
+    """S>1 spans through the shipped S>1 dispatch (ops.paged_attention:
+    S shifted single-token launches) against the oracle's joint
+    reconstruction, including sliding-window ring wrap under S>1."""
+    from repro.kernels import ops as kops
+    rng = np.random.default_rng(20 + S)
+    B, Hq, Hkv, D, PS, pages = 2, 4, 2, 16, 4, 3
+    NP = B * pages + 1
+    rows = pages * PS
+    kp = jnp.asarray(rng.standard_normal((NP, PS, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((NP, PS, Hkv, D)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), jnp.float32)
+    # writable pages exclusive per slot (kernels.ref.decode_step_ref)
+    bt = jnp.asarray(np.arange(1, NP).reshape(B, pages), jnp.int32)
+    if ring:
+        q_pos = jnp.asarray(rng.integers(rows, 2 * rows - S, B), jnp.int32)
+        cache_pos = q_pos % rows
+    else:
+        q_pos = jnp.asarray(rng.integers(0, rows - S, B), jnp.int32)
+        cache_pos = q_pos
+    pol = kops.KernelPolicy(mode="pallas", interpret=True)
+    got = kops.paged_attention(q, kp, vp, bt, q_pos, cache_pos,
+                               window=window, scale=0.125, policy=pol)
+    want = ref.paged_attention_ref(q, kp, vp, bt, q_pos, cache_pos,
+                                   window=window, scale=0.125)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_kernel_multitoken_exact_page_boundary():
+    """Exact page-boundary spans for pos+k verify reads: slot 0's
+    4-token span is exactly one full page (rows 4..7 of page 1), slot
+    1's starts on the last row of page 0 and crosses into page 1."""
+    from repro.kernels import ops as kops
+    rng = np.random.default_rng(7)
+    B, S, Hq, Hkv, D, PS, pages = 2, 4, 4, 2, 16, 4, 3
+    NP = B * pages + 1
+    kp = jnp.asarray(rng.standard_normal((NP, PS, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((NP, PS, Hkv, D)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), jnp.float32)
+    bt = jnp.asarray(np.arange(1, NP).reshape(B, pages), jnp.int32)
+    q_pos = jnp.asarray([PS, PS - 1], jnp.int32)
+    pol = kops.KernelPolicy(mode="pallas", interpret=True)
+    got = kops.paged_attention(q, kp, vp, bt, q_pos, q_pos,
+                               scale=0.25, policy=pol)
+    want = ref.paged_attention_ref(q, kp, vp, bt, q_pos, q_pos, scale=0.25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # ... and per-token sequential equivalence at the same positions
+    for j in range(S):
+        want_j = ref.paged_attention_ref(q[:, j:j + 1], kp, vp, bt,
+                                         q_pos + j, q_pos + j, scale=0.25)
+        np.testing.assert_allclose(np.asarray(got[:, j:j + 1]),
+                                   np.asarray(want_j),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # tensor-parallel paged engine (forced host devices, subprocess)
 # ---------------------------------------------------------------------------
 

@@ -214,6 +214,69 @@ def test_reserve_rows_and_trim(tiny_dense_cfg):
     assert (kv.tables["linear"] == 0).all()
 
 
+def test_rollback_then_redraft_same_page(tiny_dense_cfg):
+    """Mid-page reject: trimming draft rows that live on the committed
+    page must free nothing and keep the mapping intact, and the next
+    draft cycle reserves straight back into the SAME page (no
+    alloc/free churn inside a page)."""
+    kv = PagedKVState(tiny_dense_cfg, max_batch=1, max_len=32,
+                      page_size=8, n_pages=5)
+    kv.admit(0, 3)                             # 3 committed rows, page A
+    assert kv.used_pages == 1
+    assert kv.reserve_rows(0, 3 + 4)           # draft k=4: rows 3..6
+    assert kv.used_pages == 1                  # still inside page A
+    before = np.asarray(kv.tables["linear"][0]).copy()
+    assert kv.trim(0, 4) == 0                  # accept 1, reject 3
+    assert (np.asarray(kv.tables["linear"][0]) == before).all()
+    assert kv.reserve_rows(0, 4 + 4)           # redraft: rows 4..7
+    assert kv.used_pages == 1                  # same page reused
+    assert (np.asarray(kv.tables["linear"][0]) == before).all()
+    # a draft that crossed into a fresh page: reject past the boundary
+    # frees the overflow page, redraft re-allocates one
+    assert kv.reserve_rows(0, 8 + 4)           # rows 8..11: page B
+    assert kv.used_pages == 2
+    assert kv.trim(0, 8) == 1                  # reject all of page B
+    assert kv.used_pages == 1
+    assert kv.reserve_rows(0, 8 + 4) and kv.used_pages == 2
+    kv.release(0)
+    assert kv.used_pages == 0
+
+
+@pytest.mark.parametrize("policy", _POLICIES, ids=_IDS)
+@pytest.mark.parametrize("S", [1, 3])
+def test_rollback_stale_rows_never_read(policy, S):
+    """After a rollback the pool still holds the rejected drafts' KV
+    past the live position — the kernel's position reconstruction must
+    exclude them. Kernel on the dirty pool == oracle on a pool with
+    every stale row zeroed (random stale values would shift the
+    softmax if they leaked in)."""
+    rng = np.random.default_rng(40 + S)
+    B, Hq, Hkv, D, PS, pages = 2, 4, 2, 16, 4, 3
+    NP = B * pages + 1
+    rows = pages * PS
+    kp = rng.standard_normal((NP, PS, Hkv, D)).astype(np.float32)
+    vp = rng.standard_normal((NP, PS, Hkv, D)).astype(np.float32)
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), jnp.float32)
+    bt = np.arange(1, NP).reshape(B, pages).astype(np.int32)
+    # live span p .. p+S-1 (linear, no wrap); rows past it are stale
+    p = np.asarray([3, PS - 1], np.int32)
+    kc, vc = kp.copy(), vp.copy()
+    for b in range(B):
+        for r in range(int(p[b]) + S, rows):
+            pg, off = bt[b, r // PS], r % PS
+            kc[pg, off] = 0.0
+            vc[pg, off] = 0.0
+    q_pos = jnp.asarray(p, jnp.int32)
+    got = ops.paged_attention(q, jnp.asarray(kp), jnp.asarray(vp),
+                              jnp.asarray(bt), q_pos, q_pos,
+                              scale=0.25, policy=policy)
+    want = ref.paged_attention_ref(q, jnp.asarray(kc), jnp.asarray(vc),
+                                   jnp.asarray(bt), q_pos, q_pos,
+                                   scale=0.25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # multi-token paged attention == sequential single-token decode
 # ---------------------------------------------------------------------------
