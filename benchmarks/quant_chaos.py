@@ -1,0 +1,196 @@
+"""Quantization chaos gate: kill -> resume -> bit-identical artifact,
+and divergence -> init-method fallback ladder (docs/quantization.md).
+
+Five deterministic races on a tiny dense teacher, each driven by a
+``quant.faults.QuantFaultPlan`` (the quant-side sibling of the serving
+chaos bench):
+
+- ``baseline``    — uninterrupted journaled run; records the artifact's
+                    leaf crc32s + report every other race compares to.
+- ``kill_resume`` — injected crash when block 1 starts; ``resume=True``
+                    must skip block 0 and produce a bit-identical
+                    artifact (leaf crc32s + report, wall_s excluded).
+- ``orphan_ckpt`` — crash *between* a block's checkpoint save and its
+                    journal append (the torn window); resume must redo
+                    the orphan block, still bit-identical.
+- ``fallback``    — NaN injected into block 0 / linear 0's init
+                    latents; the run must fall back down the init
+                    ladder, record the switch in the report AND the
+                    journal, and the final artifact must save / load /
+                    generate with finite evaluation.
+- ``journal_guard`` — a journal entry is corrupted in place (valid
+                    JSON, wrong crc32) then the run is killed; resume
+                    must *refuse* with a :class:`JournalError` naming
+                    the bad block instead of loading poison.
+
+All five are hard asserts; the emitted ``BENCH_quant_chaos[_smoke]``
+artifact carries ``races_passed`` for the regression envelope.
+
+    PYTHONPATH=src python -m benchmarks.quant_chaos [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+from benchmarks.common import (check_regression, emit, load_baseline,
+                               baseline_metrics)
+from repro import api
+from repro.checkpoint.journal import JournalError, _crc_leaves
+from repro.data import SyntheticCorpus, calib_batches
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+CHAOS_CFG = ModelConfig(name="chaos-tiny", family="dense", n_layers=2,
+                        d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                        vocab_size=256, loss_chunk=0, remat=False)
+
+
+def _setup(smoke: bool):
+    params = T.init_params(jax.random.PRNGKey(0), CHAOS_CFG)
+    seq = 32 if smoke else 48
+    calib = calib_batches(CHAOS_CFG, 8, seq, batch=4,
+                          corpus=SyntheticCorpus(CHAOS_CFG.vocab_size))
+    qcfg = api.QuantConfig(
+        target_bpw=1.0, rank_align=32, min_dim=32,
+        admm_iters=6 if smoke else 10, t_pre=2 if smoke else 4,
+        t_post=4 if smoke else 6, t_glob=2 if smoke else 4)
+    return params, calib, qcfg
+
+
+def _quantize(params, calib, qcfg, journal_dir=None, resume=False,
+              faults=None):
+    return api.nanoquant_quantize(params, CHAOS_CFG, calib, qcfg,
+                                  verbose=False, journal_dir=journal_dir,
+                                  resume=resume, faults=faults)
+
+
+def _identity(report):
+    """The comparable run identity: everything except wall time."""
+    return json.dumps({k: v for k, v in report.items() if k != "wall_s"},
+                      sort_keys=True, default=str)
+
+
+def run(smoke: bool = False) -> int:
+    params, calib, qcfg = _setup(smoke)
+    rows = []
+
+    def race(name, ok, detail=""):
+        rows.append({"race": name, "ok": bool(ok), "detail": detail})
+        print(f"[quant_chaos] {name}: {'OK' if ok else 'FAIL'} {detail}",
+              flush=True)
+        assert ok, f"quant_chaos race {name!r} failed: {detail}"
+
+    work = tempfile.mkdtemp(prefix="quant_chaos_")
+    try:
+        # ---- baseline: uninterrupted journaled run -------------------------
+        qp0, rep0 = _quantize(params, calib, qcfg,
+                              journal_dir=f"{work}/j0")
+        crc0, id0 = _crc_leaves(qp0), _identity(rep0)
+        race("baseline", True, f"leaf_crc={crc0:#010x}")
+
+        # ---- kill at block 1, resume, compare bit-for-bit ------------------
+        plan = api.QuantFaultPlan(
+            [api.QuantFault(block=1, kind="crash_block")])
+        try:
+            _quantize(params, calib, qcfg, journal_dir=f"{work}/j1",
+                      faults=plan)
+            race("kill_resume", False, "injected crash never fired")
+        except api.InjectedPipelineCrash:
+            qp1, rep1 = _quantize(params, calib, qcfg,
+                                  journal_dir=f"{work}/j1", resume=True)
+            race("kill_resume",
+                 _crc_leaves(qp1) == crc0 and _identity(rep1) == id0,
+                 "resumed artifact bit-identical to uninterrupted run")
+
+        # ---- crash in the orphan-checkpoint window -------------------------
+        plan = api.QuantFaultPlan(
+            [api.QuantFault(block=1, kind="crash_after_save")])
+        try:
+            _quantize(params, calib, qcfg, journal_dir=f"{work}/j2",
+                      faults=plan)
+            race("orphan_ckpt", False, "injected crash never fired")
+        except api.InjectedPipelineCrash:
+            qp2, rep2 = _quantize(params, calib, qcfg,
+                                  journal_dir=f"{work}/j2", resume=True)
+            race("orphan_ckpt",
+                 _crc_leaves(qp2) == crc0 and _identity(rep2) == id0,
+                 "orphan block redone, artifact bit-identical")
+
+        # ---- NaN init -> fallback ladder ----------------------------------
+        plan = api.QuantFaultPlan(
+            [api.QuantFault(block=0, kind="nan_init", linear=0,
+                            iteration=3)])
+        qp3, rep3 = _quantize(params, calib, qcfg,
+                              journal_dir=f"{work}/j3", faults=plan)
+        row0 = rep3["blocks"][0]
+        with open(f"{work}/j3/journal.jsonl") as f:
+            jrows = [json.loads(l)["payload"] for l in f if l.strip()]
+        jrow0 = next(p["row"] for p in jrows if p.get("kind") == "block"
+                     and p["bi"] == 0)
+        ladder_ok = (row0["init_method"] != qcfg.init_method
+                     and row0["fallbacks"]
+                     and row0["fallbacks"][0]["method"] == qcfg.init_method
+                     and jrow0["init_method"] == row0["init_method"]
+                     and jrow0["fallbacks"] == row0["fallbacks"])
+        model = api.NanoQuantModel(qp3, CHAOS_CFG, qcfg, rep3)
+        model.save(f"{work}/artifact")
+        loaded = api.NanoQuantModel.load(f"{work}/artifact")
+        outs = loaded.generate(
+            [np.arange(8, dtype=np.int32)], max_new_tokens=4)
+        ppl = loaded.perplexity(calib)
+        race("fallback",
+             ladder_ok and len(outs[0]) > 0 and np.isfinite(ppl),
+             f"ladder {qcfg.init_method}->{row0['init_method']}, "
+             f"loaded ppl={ppl:.2f}")
+
+        # ---- corrupted journal entry must refuse resume --------------------
+        plan = api.QuantFaultPlan(
+            [api.QuantFault(block=0, kind="corrupt_journal"),
+             api.QuantFault(block=1, kind="crash_block")])
+        try:
+            _quantize(params, calib, qcfg, journal_dir=f"{work}/j4",
+                      faults=plan)
+            race("journal_guard", False, "injected crash never fired")
+        except api.InjectedPipelineCrash:
+            try:
+                _quantize(params, calib, qcfg, journal_dir=f"{work}/j4",
+                          resume=True)
+                race("journal_guard", False,
+                     "resume accepted a corrupt journal")
+            except JournalError as e:
+                race("journal_guard",
+                     e.block == "layers[0]" or "layers[0]" in str(e),
+                     f"refused, naming block: {e}")
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+    table = "BENCH_quant_chaos" + ("_smoke" if smoke else "")
+    metrics = {"races_passed": float(sum(r["ok"] for r in rows))}
+    base = baseline_metrics(
+        load_baseline(table),
+        lambda rs: {"races_passed": float(sum(r["ok"] for r in rs))},
+        "quant_chaos")
+    emit(table, rows, meta={"smoke": smoke, "cfg": CHAOS_CFG.name,
+                            "metrics": metrics})
+    check_regression(base, metrics, rel_tol=0.0, label="quant_chaos")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller pipeline budgets; writes the _smoke "
+                         "artifact, never the full baseline")
+    args = ap.parse_args()
+    return run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,9 +12,9 @@ import time
 import traceback
 
 from benchmarks import (fig9_admm, kernel_bench, kernel_wallclock,
-                        serve_bench, table2_perplexity, table4_efficiency,
-                        table5_init, table6_components, table9_databudget,
-                        table13_storage)
+                        quant_chaos, serve_bench, table2_perplexity,
+                        table4_efficiency, table5_init, table6_components,
+                        table9_databudget, table13_storage)
 
 TABLES = {
     "table2": table2_perplexity,
@@ -27,6 +27,7 @@ TABLES = {
     "kernels": kernel_bench,
     "kernel_wallclock": kernel_wallclock,
     "serve": serve_bench,
+    "quant_chaos": quant_chaos,
 }
 
 

@@ -1,10 +1,14 @@
-"""Fault-tolerant distributed-style training: checkpoint/restart with a
-simulated crash, deterministic data skip, and binary low-rank gradient
-compression with error feedback (the paper's factorization reused as a
-DP-collective compressor).
+"""Fault tolerance end to end: (1) checkpoint/restart training with a
+simulated crash and deterministic data skip, then (2) the *real*
+quantization resume path — the run is killed mid-pipeline (twice),
+restarted with ``resume=True`` against its per-block journal, and the
+final artifact is proven bit-identical (manifest hash + leaf crc32s) to
+an uninterrupted run. See docs/quantization.md.
 
     PYTHONPATH=src python examples/fault_tolerant_train.py
 """
+import hashlib
+import json
 import os
 import sys
 import tempfile
@@ -12,13 +16,14 @@ import tempfile
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro import api
-from repro.data import train_iterator
+from repro.checkpoint.journal import _crc_leaves
+from repro.data import calib_batches, train_iterator
 from repro.launch.supervisor import run_with_restarts
 from repro.train import TrainConfig, Trainer
 
 
-def main():
-    cfg = api.get_smoke("mamba2-370m")
+def train_with_crashes(cfg):
+    """Part 1: training survives two simulated node failures."""
     tcfg = TrainConfig(lr=2e-3, warmup=10, total_steps=120,
                        compress_grads=True, compress_rank=2)
     ckpt_dir = tempfile.mkdtemp(prefix="nq_ft_")
@@ -40,10 +45,82 @@ def main():
         if n in crash_at and tr.step < target_steps:
             raise RuntimeError(f"simulated node failure at step {tr.step}")
         print(f"[attempt {n}] reached step {tr.step}")
+        return tr.state[0]
 
     restarts = run_with_restarts(attempt, max_restarts=4)
-    print(f"\ntraining survived {restarts} simulated failures; "
+    print(f"training survived {restarts} simulated failures; "
           f"resume was deterministic (same data stream, same schedule).")
+    mgr = api.CheckpointManager(ckpt_dir, keep=2)
+    it = train_iterator(cfg, batch=8, seq=48,
+                        start_step=mgr.latest_step() or 0)
+    tr = Trainer(cfg, tcfg, it, mgr)
+    tr.restore_or_init()
+    return tr.state[0]
+
+
+def manifest_hash(artifact_dir):
+    """sha256 of the saved manifest, wall time excluded (the one field
+    that legitimately differs between an interrupted and a clean run)."""
+    with open(os.path.join(artifact_dir, api.MANIFEST_NAME)) as f:
+        m = json.load(f)
+    m.get("report", {}).pop("wall_s", None)
+    return hashlib.sha256(
+        json.dumps(m, sort_keys=True).encode()).hexdigest()
+
+
+def quantize_with_crashes(cfg, params):
+    """Part 2: the pipeline is killed twice mid-run and resumed from
+    its journal; the artifact must match an uninterrupted run exactly."""
+    calib = calib_batches(cfg, 8, 48, batch=4)
+    qcfg = api.QuantConfig(target_bpw=1.0, admm_iters=8, t_pre=4,
+                           t_post=6, t_glob=4, min_dim=32)
+    journal_dir = tempfile.mkdtemp(prefix="nq_journal_")
+    print(f"\nquantization journal -> {journal_dir}")
+
+    # crash when block 1, then block 2, starts computing; a resumed
+    # (journaled) block never re-crashes, so each attempt progresses
+    plans = [api.QuantFaultPlan([api.QuantFault(block=1,
+                                                kind="crash_block")]),
+             api.QuantFaultPlan([api.QuantFault(block=2,
+                                                kind="crash_block")])]
+
+    result = {}
+
+    def attempt(n):
+        faults = plans[n] if n < len(plans) else None
+        model = api.NanoQuantModel.quantize(
+            params, cfg, calib, qcfg, verbose=False,
+            journal_dir=journal_dir, resume=True, faults=faults,
+            heartbeat=lambda m: print(f"[quant] heartbeat {m}"))
+        result["model"] = model
+
+    restarts = run_with_restarts(attempt, max_restarts=4)
+    print(f"quantization survived {restarts} injected crashes")
+
+    resumed_dir = tempfile.mkdtemp(prefix="nq_art_resumed_")
+    result["model"].save(resumed_dir)
+
+    # the ground truth: one uninterrupted run, no journal
+    clean = api.NanoQuantModel.quantize(params, cfg, calib, qcfg,
+                                        verbose=False)
+    clean_dir = tempfile.mkdtemp(prefix="nq_art_clean_")
+    clean.save(clean_dir)
+
+    h_resumed, h_clean = manifest_hash(resumed_dir), manifest_hash(clean_dir)
+    c_resumed = _crc_leaves(result["model"].params)
+    c_clean = _crc_leaves(clean.params)
+    print(f"manifest sha256 (resumed) : {h_resumed[:16]}...")
+    print(f"manifest sha256 (clean)   : {h_clean[:16]}...")
+    print(f"leaf crc32 (resumed/clean): {c_resumed:#010x} / {c_clean:#010x}")
+    assert h_resumed == h_clean, "manifest mismatch after resume"
+    assert c_resumed == c_clean, "packed leaves mismatch after resume"
+    print("kill -> resume artifact is bit-identical to the clean run.")
+
+
+def main():
+    cfg = api.get_smoke("mamba2-370m")
+    params = train_with_crashes(cfg)
+    quantize_with_crashes(cfg, params)
 
 
 if __name__ == "__main__":

@@ -60,6 +60,14 @@ if [[ "${1:-}" != "--fast" ]]; then
   # identity; the seed is recorded in BENCH_serve_chaos_smoke.json's
   # meta block (never overwrites the full-run baseline)
   python -m benchmarks.serve_bench --chaos --smoke
+  echo "== CPU smoke: quantization chaos (kill -> resume -> bit-identical) =="
+  # five deterministic QuantFaultPlan races: journaled baseline,
+  # crash-at-block-start + resume (bit-identical artifact), crash in
+  # the orphan-checkpoint window, NaN init -> fallback ladder (switch
+  # recorded in report + journal, artifact loads/generates finite),
+  # corrupted journal entry -> resume refuses naming the block; writes
+  # BENCH_quant_chaos_smoke.json, never the full-run baseline
+  python -m benchmarks.quant_chaos --smoke
   echo "== CPU smoke: kernel wall-clock (two-call vs fused) =="
   python -m benchmarks.kernel_bench --smoke
   echo "== regression-gate negative: injected 20% slowdown must fail =="

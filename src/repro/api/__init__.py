@@ -37,7 +37,9 @@ from repro.api.init_methods import (  # noqa: F401
 from repro.api.model import (  # noqa: F401
     MANIFEST_NAME, MANIFEST_VERSION, NanoQuantModel)
 from repro.api.registry import Registry, UnknownNameError  # noqa: F401
+from repro.checkpoint.journal import JournalError, QuantJournal  # noqa: F401
 from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.core.admm import QuantizationError  # noqa: F401
 from repro.core.pipeline import (  # noqa: F401
     QuantConfig, nanoquant_quantize, tune_scales_kd)
 from repro.kernels.ops import (  # noqa: F401
@@ -46,6 +48,9 @@ from repro.kernels.ops import (  # noqa: F401
     lowrank_binary_matmul_merged, set_kernel_policy)
 from repro.kernels.tuning import (  # noqa: F401
     load_block_table, load_paged_table)
+from repro.quant.faults import (  # noqa: F401
+    InjectedPipelineCrash, QuantFault, QuantFaultPlan)
+from repro.quant.preflight import PreflightError, preflight  # noqa: F401
 from repro.quant.surgery import (  # noqa: F401
     abstract_quantized_params, merge_projection_groups, packed_model_bytes,
     place_cache_on_mesh, place_on_mesh, quantizable_paths)
@@ -86,4 +91,8 @@ __all__ = [
     # failure handling (docs/serving.md §Failure handling)
     "RequestError", "TERMINAL_STATUSES", "PageAccountingError",
     "Fault", "FaultPlan", "recovery",
+    # fault-tolerant quantization (docs/quantization.md)
+    "QuantizationError", "QuantJournal", "JournalError",
+    "QuantFault", "QuantFaultPlan", "InjectedPipelineCrash",
+    "preflight", "PreflightError",
 ]

@@ -52,11 +52,22 @@ class NanoQuantModel:
     @classmethod
     def quantize(cls, params, cfg: ModelConfig, calib,
                  qcfg: Optional[QuantConfig] = None,
-                 verbose: bool = True) -> "NanoQuantModel":
-        """Run the full pipeline (paper Alg. 1) on an FP teacher."""
+                 verbose: bool = True, journal_dir: Optional[str] = None,
+                 resume: bool = False, faults=None,
+                 heartbeat=None) -> "NanoQuantModel":
+        """Run the full pipeline (paper Alg. 1) on an FP teacher.
+
+        `journal_dir` / `resume` make the run crash-safe and resumable
+        through ``checkpoint.journal.QuantJournal`` (bit-identical to an
+        uninterrupted run); `faults` injects a deterministic
+        ``quant.faults.QuantFaultPlan``; `heartbeat` receives short
+        progress strings at block boundaries — see docs/quantization.md."""
         qcfg = qcfg or QuantConfig()
         qparams, report = nanoquant_quantize(params, cfg, calib, qcfg,
-                                             verbose=verbose)
+                                             verbose=verbose,
+                                             journal_dir=journal_dir,
+                                             resume=resume, faults=faults,
+                                             heartbeat=heartbeat)
         return cls(qparams, cfg, qcfg, report)
 
     @classmethod

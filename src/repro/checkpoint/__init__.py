@@ -1,1 +1,4 @@
-from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.journal import (  # noqa: F401
+    JournalError, QuantJournal, run_fingerprint)
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager, atomic_write_bytes)

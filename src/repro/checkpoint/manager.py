@@ -30,6 +30,31 @@ import numpy as np
 _UINT_OF = {1: np.uint8, 2: np.uint16, 4: np.uint32}
 
 
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by path (directory fsync commits the
+    entries themselves — rename alone is not durable across power loss)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def atomic_write_bytes(path: str, data: bytes) -> None:
+    """Durable atomic file write: temp file in the same directory +
+    flush + fsync + rename + parent-dir fsync. A crash at any point
+    leaves either the old content or the new content, never a torn
+    file (the tmp leftover is ignored by readers)."""
+    d = os.path.dirname(os.path.abspath(path))
+    tmp = os.path.join(d, f".tmp-{os.path.basename(path)}-{os.getpid()}")
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_path(d)
+
+
 _NATIVE = {"float16", "float32", "float64", "int8", "int16", "int32",
            "int64", "uint8", "uint16", "uint32", "uint64", "bool"}
 
@@ -44,6 +69,15 @@ def _encode(arr: np.ndarray) -> Tuple[np.ndarray, str]:
 def _decode(arr: np.ndarray, name: str) -> np.ndarray:
     want = np.dtype(name)
     return arr if arr.dtype == want else arr.view(want)
+
+
+def _keystr(k) -> str:
+    """One path component of a jax key path as a plain string."""
+    if hasattr(k, "key"):                              # DictKey
+        return str(k.key)
+    if hasattr(k, "idx"):                              # SequenceKey
+        return str(k.idx)
+    return str(k)
 
 
 class CheckpointManager:
@@ -75,8 +109,18 @@ class CheckpointManager:
 
     # ---- save --------------------------------------------------------------
 
-    def save(self, step: int, state: Any) -> str:
-        leaves = jax.tree.leaves(state)
+    def save(self, step: int, state: Any, keyed: bool = False) -> str:
+        """Durable atomic save. With ``keyed=True`` (dict-only trees)
+        the meta also records each leaf's key path, so the checkpoint
+        can be restored without a template via :meth:`restore_keyed`."""
+        keypaths: Optional[list] = None
+        if keyed:
+            flat, _ = jax.tree_util.tree_flatten_with_path(state)
+            keypaths = ["/".join(_keystr(k) for k in path)
+                        for path, _ in flat]
+            leaves = [leaf for _, leaf in flat]
+        else:
+            leaves = jax.tree.leaves(state)
         tmp = os.path.join(self.dir, f".tmp-{step}-{os.getpid()}")
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
@@ -101,17 +145,30 @@ class CheckpointManager:
                 cur, cur_bytes = {}, 0
         if cur:
             shards.append(cur)
+        # every file is flushed + fsynced before the directory rename,
+        # and the rename itself is committed with directory fsyncs — a
+        # crash (or power loss) mid-save can never surface a step dir
+        # whose contents are torn
         for k, shard in enumerate(shards):
-            np.savez(os.path.join(tmp, f"arrays-{k}.npz"), **shard)
+            with open(os.path.join(tmp, f"arrays-{k}.npz"), "wb") as f:
+                np.savez(f, **shard)
+                f.flush()
+                os.fsync(f.fileno())
         meta = {"step": step, "n_leaves": len(leaves),
                 "n_shards": len(shards), "shapes": sizes,
                 "dtypes": dtypes, "checksums": checksums}
+        if keypaths is not None:
+            meta["keypaths"] = keypaths
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_path(tmp)
         final = self._step_dir(step)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)                         # atomic commit
+        _fsync_path(self.dir)
         self._retain()
         return final
 
@@ -186,6 +243,61 @@ class CheckpointManager:
         else:
             leaves = [jax.numpy.asarray(l) for l in leaves]
         return jax.tree.unflatten(tdef, leaves)
+
+    def meta(self, step: int) -> dict:
+        """The saved meta.json of `step` (shapes, dtypes, per-leaf
+        crc32s) — cheap integrity cross-checks without loading arrays."""
+        with open(os.path.join(self._step_dir(step), "meta.json")) as f:
+            return json.load(f)
+
+    def restore_keyed(self, step: int) -> Any:
+        """Template-free restore of a checkpoint written with
+        ``save(..., keyed=True)``: rebuilds the nested dict tree from
+        the recorded key paths, with the same per-leaf crc32 / shape
+        verification as :meth:`restore`."""
+        d = self._step_dir(step)
+        meta = self.meta(step)
+        keypaths = meta.get("keypaths")
+        if keypaths is None:
+            raise ValueError(
+                f"checkpoint {d!r} was not saved keyed "
+                f"(no keypaths in meta) — use restore(template=...)")
+        arrays: dict = {}
+        for k in range(meta["n_shards"]):
+            shard_path = os.path.join(d, f"arrays-{k}.npz")
+            if not os.path.exists(shard_path):
+                raise ValueError(
+                    f"corrupt/truncated checkpoint {d!r}: shard "
+                    f"arrays-{k}.npz missing")
+            with np.load(shard_path) as z:
+                arrays.update({n: z[n] for n in z.files})
+        out: dict = {}
+        checksums = meta.get("checksums")
+        for i, kp in enumerate(keypaths):
+            key = f"leaf_{i:06d}"
+            if key not in arrays:
+                raise ValueError(
+                    f"corrupt/truncated checkpoint {d!r}: leaf {i} "
+                    f"({kp}) missing from its shard")
+            raw = arrays[key]
+            if tuple(raw.shape) != tuple(meta["shapes"][i]):
+                raise ValueError(
+                    f"corrupt/truncated checkpoint {d!r}: leaf {i} "
+                    f"({kp}) has stored shape {tuple(raw.shape)}, "
+                    f"manifest says {tuple(meta['shapes'][i])}")
+            if checksums is not None:
+                got = zlib.crc32(np.ascontiguousarray(raw).tobytes())
+                if got != checksums[i]:
+                    raise ValueError(
+                        f"corrupt/truncated checkpoint {d!r}: leaf {i} "
+                        f"({kp}) checksum mismatch")
+            node = out
+            parts = kp.split("/")
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = jax.numpy.asarray(
+                _decode(raw, meta["dtypes"][i]))
+        return out
 
     def restore_latest(self, template: Any = None,
                        shardings: Any = None

@@ -9,12 +9,36 @@ schedule ramps ρ over the solve (paper App. C / Fig. 9b).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.svid import svid
+
+
+class QuantizationError(RuntimeError):
+    """Structured per-block quantization failure.
+
+    Raised by the pipeline's health guards instead of letting NaN/inf
+    latents propagate into ``quant.surgery`` packing (where they would
+    silently poison the artifact). Carries enough context for the
+    fallback ladder / journal to record the decision and for a human to
+    find the bad block in a multi-hour run.
+    """
+
+    def __init__(self, layer: Optional[str], block: Optional[str],
+                 iteration: Optional[int], reason: str):
+        self.layer = layer
+        self.block = block
+        self.iteration = iteration
+        self.reason = reason
+        where = f"block={block!r}"
+        if layer is not None:
+            where += f" layer={layer!r}"
+        if iteration is not None:
+            where += f" iteration={iteration}"
+        super().__init__(f"quantization failed at {where}: {reason}")
 
 
 class ADMMConfig(NamedTuple):
@@ -24,6 +48,19 @@ class ADMMConfig(NamedTuple):
     rho_final: float = 1.0
     lam: float = 1e-4
     svid_iters: int = 8
+    # health guards (divergence detection + bounded rho adaptation):
+    # a step whose updated factors go non-finite, or whose *relative*
+    # residual exceeds divergence_factor (i.e. the factorization is
+    # divergence_factor x worse than predicting zero — the residual is
+    # non-monotone over the rho ramp, so best-seen is not a valid
+    # reference) for divergence_patience consecutive iterations, is
+    # rejected — factors keep their last good value, the scaled duals
+    # restart at zero, and the penalty gets a bounded bump (x
+    # rho_growth, total scale capped at rho_scale_max).
+    rho_growth: float = 2.0
+    rho_scale_max: float = 16.0
+    divergence_factor: float = 10.0
+    divergence_patience: int = 5
 
 
 def _rand_range_init(key, w, r):
@@ -78,35 +115,78 @@ def lb_admm(w_target: jnp.ndarray, cfg: ADMMConfig, key=None):
     rhos = jnp.linspace(cfg.rho_init, cfg.rho_final, cfg.iters)
 
     def step(carry, rho):
-        u, v, zu, zv, lu, lv = carry
+        u, v, zu, zv, lu, lv, rho_scale, best, bad, resets = carry
+        # bounded rho adaptation: rejected steps (below) bump rho_scale
+        rho_t = jnp.minimum(rho * rho_scale,
+                            cfg.rho_final * cfg.rho_scale_max)
         # U update: (VᵀV + (ρ+λ)I) Uᵀ = Vᵀ W̃ᵀ + ρ (Z_U − Λ_U)ᵀ   (Eq. 5)
         # ρ is *scale-free*: the effective penalty is ρ x mean eigenvalue
         # of the data Gram, so the proxy pull is a fixed fraction of the
         # data term regardless of ‖W̃‖ (otherwise consensus never engages
         # for large-magnitude layers and the duals diverge).
         gram_v = v.T @ v
-        rho_u = rho * jnp.trace(gram_v) / gram_v.shape[0]
+        rho_u = rho_t * jnp.trace(gram_v) / gram_v.shape[0]
         rhs_u = v.T @ w.T + rho_u * (zu - lu).T
-        u = _chol_solve_ridge(gram_v, rhs_u, rho_u + cfg.lam).T
+        u2 = _chol_solve_ridge(gram_v, rhs_u, rho_u + cfg.lam).T
         # V update (symmetric)
-        gram_u = u.T @ u
-        rho_v = rho * jnp.trace(gram_u) / gram_u.shape[0]
-        rhs_v = u.T @ w + rho_v * (zv - lv).T
-        v = _chol_solve_ridge(gram_u, rhs_v, rho_v + cfg.lam).T
+        gram_u = u2.T @ u2
+        rho_v = rho_t * jnp.trace(gram_u) / gram_u.shape[0]
+        rhs_v = u2.T @ w + rho_v * (zv - lv).T
+        v2 = _chol_solve_ridge(gram_u, rhs_v, rho_v + cfg.lam).T
         # proxy updates (Eq. 6)
-        zu = svid(u + lu, cfg.svid_iters)
-        zv = svid(v + lv, cfg.svid_iters)
+        zu2 = svid(u2 + lu, cfg.svid_iters)
+        zv2 = svid(v2 + lv, cfg.svid_iters)
         # scaled dual updates
-        lu = lu + u - zu
-        lv = lv + v - zv
-        res = jnp.linalg.norm(w - u @ v.T) / jnp.maximum(jnp.linalg.norm(w), 1e-12)
-        return (u, v, zu, zv, lu, lv), res
+        lu2 = lu + u2 - zu2
+        lv2 = lv + v2 - zv2
+        res = (jnp.linalg.norm(w - u2 @ v2.T)
+               / jnp.maximum(jnp.linalg.norm(w), 1e-12))
+        # ---- health guards ------------------------------------------------
+        finite = (jnp.isfinite(u2).all() & jnp.isfinite(v2).all()
+                  & jnp.isfinite(zu2).all() & jnp.isfinite(zv2).all()
+                  & jnp.isfinite(res))
+        bad = jnp.where(finite & (res > cfg.divergence_factor),
+                        bad + 1, 0)
+        reject = (~finite) | (bad >= cfg.divergence_patience)
+        # rejected step: keep last good factors, restart the scaled
+        # duals at zero, bump the penalty (bounded)
+        u, v = jnp.where(reject, u, u2), jnp.where(reject, v, v2)
+        zu, zv = jnp.where(reject, zu, zu2), jnp.where(reject, zv, zv2)
+        lu = jnp.where(reject, jnp.zeros_like(lu), lu2)
+        lv = jnp.where(reject, jnp.zeros_like(lv), lv2)
+        rho_scale = jnp.where(
+            reject, jnp.minimum(rho_scale * cfg.rho_growth,
+                                cfg.rho_scale_max), rho_scale)
+        resets = resets + reject.astype(jnp.int32)
+        bad = jnp.where(reject, 0, bad)
+        best = jnp.where(finite & ~reject, jnp.minimum(best, res), best)
+        res = jnp.where(finite, res, jnp.float32(jnp.inf))
+        carry = (u, v, zu, zv, lu, lv, rho_scale, best, bad, resets)
+        return carry, res
 
-    (u, v, zu, zv, lu, lv), trace = jax.lax.scan(
-        step, (u, v, zu, zv, lu, lv), rhos)
+    init = (u, v, zu, zv, lu, lv, jnp.float32(1.0), jnp.float32(jnp.inf),
+            jnp.int32(0), jnp.int32(0))
+    (u, v, zu, zv, lu, lv, rho_scale, best, _, resets), trace = \
+        jax.lax.scan(step, init, rhos)
+    nonfinite = ~(jnp.isfinite(u).all() & jnp.isfinite(v).all()
+                  & jnp.isfinite(zu).all() & jnp.isfinite(zv).all())
+    final_res = trace[-1]
     return {
         "p_u": u + lu,          # consensus proxies (paper: P_U^{(K)})
         "p_v": v + lv,
         "u": u, "v": v, "z_u": zu, "z_v": zv,
         "residual_trace": trace,
+        # solve health for the pipeline's divergence guards: resets
+        # counts rejected steps (non-finite factors / residual trend),
+        # rho_scale is the final bounded penalty bump, diverged flags a
+        # solve whose final residual never came back near its best
+        "health": {
+            "resets": resets,
+            "rho_scale": rho_scale,
+            "min_residual": best,
+            "final_residual": final_res,
+            "nonfinite": nonfinite,
+            "diverged": (nonfinite | ~jnp.isfinite(final_res)
+                         | (final_res > cfg.divergence_factor)),
+        },
     }

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import packing, precond, quantize, util
-from repro.core.admm import ADMMConfig
+from repro.core.admm import ADMMConfig, QuantizationError
 from repro.core.layout import EXCLUDE_LINEARS, quantizable_linear
 from repro.models import layers as L
 from repro.models import transformer as T
@@ -60,6 +60,12 @@ class QuantConfig:
     skip_tune_fp: bool = False
     skip_ste: bool = False
     skip_kd: bool = False
+    # init-method fallback ladder: on a diverged block (non-finite
+    # latents / losses / reconstruction error) the block is retried
+    # with these ``@register_init_method`` names, in order, after
+    # ``init_method`` (comma-separated so the config stays hashable
+    # and JSON-manifest round-trippable). "" disables fallbacks.
+    fallback_inits: str = "dbf_admm,dual_svid"
 
     def admm(self) -> ADMMConfig:
         return ADMMConfig(rank=0, iters=self.admm_iters,
@@ -296,19 +302,182 @@ def _pack_latent(lat: dict, k_align: int = 32) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# health guards + per-block quantization with the init-method
+# fallback ladder (docs/quantization.md)
+# ---------------------------------------------------------------------------
+
+
+def _ladder(qcfg: QuantConfig) -> List[str]:
+    out = [qcfg.init_method]
+    for m in qcfg.fallback_inits.split(","):
+        m = m.strip()
+        if m and m not in out:
+            out.append(m)
+    return out
+
+
+def _check_finite(tree, block: str, layer, reason: str, iteration=None):
+    """Raise a structured :class:`QuantizationError` if any float leaf
+    of `tree` is non-finite — the guard that keeps NaNs out of
+    ``quant.surgery`` packing and the saved artifact."""
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        arr = jnp.asarray(leaf)
+        if not jnp.issubdtype(arr.dtype, jnp.floating):
+            continue
+        if not bool(jnp.isfinite(arr.astype(jnp.float32)).all()):
+            where = "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            raise QuantizationError(
+                layer=layer if layer is not None else where, block=block,
+                iteration=iteration,
+                reason=f"{reason}: non-finite values in {where}")
+
+
+def _attempt_key(kb, ai: int, li: int):
+    """Per-(attempt, linear) RNG key. Attempt 0 reproduces the
+    historical keying exactly, so journal/resume bit-identity holds
+    across code that never falls back."""
+    if ai == 0:
+        return jax.random.fold_in(kb, li)
+    return jax.random.fold_in(jax.random.fold_in(kb, 7919 + ai), li)
+
+
+def _quantize_block(apply_fn, bp_fp, Xq_b, Y, ctx_b, stats, bref,
+                    label: str, qcfg: QuantConfig, kb, faults, bi: int,
+                    log):
+    """Steps 1-3 + packing for one block, with divergence detection and
+    the init-method fallback ladder. Returns (packed bp, out_q, report
+    row, {rank-key: rank})."""
+    # Step 1: error-propagation mitigation (method-independent — run
+    # once, shared across ladder attempts)
+    if not qcfg.skip_tune_fp:
+        bp_base, pre_losses = _tune(apply_fn, bp_fp, lambda p: True, Xq_b,
+                                    Y, ctx_b, qcfg.t_pre, qcfg.lr_pre,
+                                    qcfg.microbatch, qcfg.weighted_mse, kb)
+    else:
+        bp_base, pre_losses = bp_fp, []
+    if pre_losses and not np.isfinite(pre_losses[-1]):
+        raise QuantizationError(
+            None, label, None, "TuneFP (error-propagation mitigation) "
+            "diverged: non-finite loss — no init method can fix a "
+            "poisoned block input; check calibration data")
+    _check_finite(bp_base, label, None, "TuneFP output")
+
+    lpaths = linear_paths(bp_base, qcfg.min_dim)
+    ladder = _ladder(qcfg)
+    fallbacks: List[dict] = []
+    for ai, method in enumerate(ladder):
+        try:
+            # Step 2: low-rank binary initialization
+            bp, ranks_b = bp_base, {}
+            for li, path in enumerate(lpaths):
+                pdict = _get_path(bp, path)
+                name = ".".join(path)
+                w = pdict["w"]
+                expert = w.shape[0] if w.ndim == 3 else None
+                d_in, d_out = precond.preconditioners_for(
+                    stats, bref.stack, name, bref.tap_idx,
+                    w.shape[-2], w.shape[-1], qcfg.gamma,
+                    expert_shape=expert)
+                lat, r = _init_latent(
+                    pdict, d_in, d_out,
+                    dataclasses.replace(qcfg, init_method=method),
+                    _attempt_key(kb, ai, li))
+                fault = (faults.poison_init(bi, li)
+                         if faults is not None else None)
+                if fault is not None:
+                    lat = dict(lat, lu=jnp.full_like(lat["lu"], jnp.nan))
+                _check_finite(
+                    {k: lat[k] for k in _LATENT_KEYS}, label, name,
+                    f"init method {method!r} produced non-finite latents",
+                    iteration=fault.iteration if fault is not None else None)
+                ranks_b[f"{bref.stack}[{bref.idx}].{name}"] = r
+                bp = _set_path(bp, path, lat)
+
+            # Step 3: factorized component refinement (STE)
+            if not qcfg.skip_ste:
+                bp, ste_losses = _tune(apply_fn, bp, _is_latent_path,
+                                       Xq_b, Y, ctx_b, qcfg.t_post,
+                                       qcfg.lr_post, qcfg.microbatch,
+                                       qcfg.weighted_mse, kb)
+                if ste_losses and not np.isfinite(ste_losses[-1]):
+                    raise QuantizationError(
+                        None, label, None,
+                        f"STE refinement diverged under init "
+                        f"{method!r}: non-finite loss")
+            else:
+                ste_losses = []
+
+            # pack + final guard
+            for path in lpaths:
+                bp = _set_path(bp, path,
+                               _pack_latent(_get_path(bp, path),
+                                            qcfg.pack_k_align))
+            _check_finite(bp, label, None,
+                          f"packed block under init {method!r}")
+            out_q = apply_fn(bp, Xq_b, ctx_b)
+            blk_err = float(_mse(out_q, Y))
+            if not np.isfinite(blk_err):
+                raise QuantizationError(
+                    None, label, None, f"block reconstruction error is "
+                    f"non-finite under init {method!r}")
+            row = {"block": label,
+                   "pre_loss": pre_losses[-1] if pre_losses else None,
+                   "ste_loss": ste_losses[-1] if ste_losses else None,
+                   "block_err": blk_err,
+                   "init_method": method,
+                   "fallbacks": list(fallbacks)}
+            return bp, out_q, row, ranks_b
+        except QuantizationError as e:
+            fallbacks.append({"method": method, "layer": e.layer,
+                              "iteration": e.iteration, "reason": e.reason})
+            if ai == len(ladder) - 1:
+                raise QuantizationError(
+                    e.layer, label, e.iteration,
+                    f"init-method fallback ladder exhausted "
+                    f"({' -> '.join(ladder)}); last failure: {e.reason}")
+            log(f"[nanoquant] {label}: init {method!r} diverged "
+                f"({e.reason}) -> falling back to {ladder[ai + 1]!r}")
+
+
+# ---------------------------------------------------------------------------
 # the pipeline
 # ---------------------------------------------------------------------------
 
 
 def nanoquant_quantize(params, cfg, calib_batches, qcfg: QuantConfig,
-                       verbose: bool = True):
+                       verbose: bool = True, journal_dir: str = None,
+                       resume: bool = False, faults=None,
+                       heartbeat=None):
     """Quantize `params` (FP teacher) to packed low-rank binary form.
 
     calib_batches: list of {'tokens','labels'[,'image_embeds']} dicts.
-    Returns (quantized_params, report)."""
+    Returns (quantized_params, report).
+
+    Crash safety (docs/quantization.md): with `journal_dir`, every
+    finished block's packed leaves plus a crc32'd journal entry are
+    written through ``checkpoint.journal.QuantJournal`` as the run
+    progresses; `resume=True` validates the journal against this run's
+    fingerprint (model/quant config, params, calibration) and skips
+    finished blocks — the final artifact is bit-identical to an
+    uninterrupted run (per-block RNG keying, deterministic streams).
+    Diverging blocks retry through the ``QuantConfig.fallback_inits``
+    init-method ladder; every decision lands in the journal and the
+    report. `faults` (a ``quant.faults.QuantFaultPlan``) injects a
+    deterministic fault schedule for chaos testing; `heartbeat` is
+    called with a short progress string at block/phase boundaries (what
+    ``launch/quantize.py --supervise`` hang detection watches)."""
     t0 = time.time()
     key = jax.random.PRNGKey(qcfg.seed)
     report: Dict[str, Any] = {"blocks": [], "ranks": {}}
+
+    def beat(msg: str) -> None:
+        if heartbeat is not None:
+            heartbeat(msg)
+
+    def log(msg: str) -> None:
+        if verbose:
+            print(msg, flush=True)
 
     # ---- Phase 1: global calibration -------------------------------------
     stats = precond.collect_stats(T.loss_fn, params, cfg, calib_batches)
@@ -328,6 +497,26 @@ def nanoquant_quantize(params, cfg, calib_batches, qcfg: QuantConfig,
     hybrid_boundary = (lambda i: cfg.family == "hybrid"
                        and (i + 1) % cfg.attn_every == 0)
 
+    # ---- journal / resume --------------------------------------------------
+    journal, done = None, {}
+    if journal_dir:
+        from repro.checkpoint.journal import QuantJournal, run_fingerprint
+        journal = QuantJournal(journal_dir)
+        fingerprint = run_fingerprint(params, cfg, qcfg, calib_batches,
+                                      len(blocks))
+        if resume:
+            done = journal.entries_for_resume(fingerprint)
+            if done is None:                # no journal yet: fresh start
+                done = {}
+                journal.start(fingerprint)
+            elif done:
+                log(f"[nanoquant] resuming: {len(done)}/{len(blocks)} "
+                    f"blocks journaled in {journal_dir}")
+        else:
+            journal.start(fingerprint)
+    elif resume:
+        raise ValueError("resume=True requires journal_dir")
+
     # For the hybrid shared block: gather its application inputs from the
     # teacher stream up-front (it is quantized first, see DESIGN.md §5).
     shared_inputs = None
@@ -343,6 +532,7 @@ def nanoquant_quantize(params, cfg, calib_batches, qcfg: QuantConfig,
 
     # ---- Phase 2: block reconstruction ------------------------------------
     for bi, bref in enumerate(blocks):
+        label = f"{bref.stack}[{bref.idx}]"
         kb = jax.random.fold_in(key, bi)
         bp_fp = bref.get(params)
         apply_fn = applies[bref.kind]
@@ -355,69 +545,55 @@ def nanoquant_quantize(params, cfg, calib_batches, qcfg: QuantConfig,
             Xq_b, Xfp_b, ctx_b = Xq, Xfp, ctx
         Y = apply_fn(bp_fp, Xfp_b, ctx_b)
 
-        # Step 1: error-propagation mitigation
-        bp = bp_fp
-        if not qcfg.skip_tune_fp:
-            bp, pre_losses = _tune(apply_fn, bp, lambda p: True, Xq_b, Y,
-                                   ctx_b, qcfg.t_pre, qcfg.lr_pre,
-                                   qcfg.microbatch, qcfg.weighted_mse, kb)
+        if bi in done:
+            # resumed: reload the packed block, replay its report row
+            # (the recomputation it replaces is deterministic, so the
+            # artifact stays bit-identical to an uninterrupted run)
+            entry = done[bi]
+            bp = journal.load_block(bi)
+            report["ranks"].update(entry["ranks"])
+            row = dict(entry["row"])
+            out_q = apply_fn(bp, Xq_b, ctx_b)
+            beat(f"block={bi}/{len(blocks)} {label} resumed")
         else:
-            pre_losses = []
-
-        # Step 2: low-rank binary initialization
-        lpaths = linear_paths(bp, qcfg.min_dim)
-        for li, path in enumerate(lpaths):
-            pdict = _get_path(bp, path)
-            name = ".".join(path)
-            w = pdict["w"]
-            expert = w.shape[0] if w.ndim == 3 else None
-            d_in, d_out = precond.preconditioners_for(
-                stats, bref.stack, name, bref.tap_idx,
-                w.shape[-2], w.shape[-1], qcfg.gamma, expert_shape=expert)
-            lat, r = _init_latent(pdict, d_in, d_out, qcfg,
-                                  jax.random.fold_in(kb, li))
-            report["ranks"][f"{bref.stack}[{bref.idx}].{name}"] = r
-            bp = _set_path(bp, path, lat)
-
-        # Step 3: factorized component refinement (STE)
-        if not qcfg.skip_ste:
-            bp, ste_losses = _tune(apply_fn, bp, _is_latent_path, Xq_b, Y,
-                                   ctx_b, qcfg.t_post, qcfg.lr_post,
-                                   qcfg.microbatch, qcfg.weighted_mse, kb)
-        else:
-            ste_losses = []
-
-        # pack + freeze
-        for path in lpaths:
-            bp = _set_path(bp, path, _pack_latent(_get_path(bp, path),
-                                                  qcfg.pack_k_align))
+            if faults is not None:
+                faults.on_block_start(bi)
+            beat(f"block={bi}/{len(blocks)} {label} start")
+            bp, out_q, row, ranks_b = _quantize_block(
+                apply_fn, bp_fp, Xq_b, Y, ctx_b, stats, bref, label,
+                qcfg, kb, faults, bi, log)
+            report["ranks"].update(ranks_b)
+            if journal is not None:
+                extra = journal.save_block(bi, label, bp)
+                if faults is not None:
+                    faults.after_block_save(bi)
+                journal.append_block({"bi": bi, "block": label,
+                                      "ranks": ranks_b, "row": row,
+                                      **extra})
+                if faults is not None:
+                    faults.on_journal_append(bi, journal)
+            beat(f"block={bi}/{len(blocks)} {label} done "
+                 f"err={row['block_err']:.5f}")
         quantized[(bref.stack, bref.idx)] = bp
 
         # advance streams
-        out_q = apply_fn(bp, Xq_b, ctx_b)
-        blk_err = float(_mse(out_q, Y))
         if bref.stack != "shared_attn":
             Xq = out_q
             Xfp = Y
             if hybrid_boundary(bref.idx):
                 Xq = applies["attn"](quantized[("shared_attn", None)], Xq, ctx)
                 Xfp = applies["attn"](params["shared_attn"], Xfp, ctx)
-        report["blocks"].append({
-            "block": f"{bref.stack}[{bref.idx}]",
-            "pre_loss": pre_losses[-1] if pre_losses else None,
-            "ste_loss": ste_losses[-1] if ste_losses else None,
-            "block_err": blk_err,
-        })
-        if verbose:
-            print(f"[nanoquant] {bref.stack}[{bref.idx}] "
-                  f"err={blk_err:.5f}", flush=True)
+        report["blocks"].append(row)
+        log(f"[nanoquant] {label} err={row['block_err']:.5f}"
+            + (f" init={row['init_method']}" if row["fallbacks"] else ""))
 
     qparams = _assemble(params, cfg, quantized)
 
     # ---- Phase 3: scale-only model reconstruction (KD) --------------------
     if not qcfg.skip_kd and qcfg.t_glob > 0:
         qparams, kd_losses = _tune_scales_kd(params, qparams, cfg,
-                                             calib_batches, qcfg)
+                                             calib_batches, qcfg,
+                                             heartbeat=heartbeat)
         report["kd_losses"] = kd_losses
 
     report["wall_s"] = time.time() - t0
@@ -467,7 +643,8 @@ def _kd_loss_chunked(hS, hT, params_s, params_t, cfg, temp):
     return tot / (hS.shape[0] * S)
 
 
-def _tune_scales_kd(teacher, qparams, cfg, calib_batches, qcfg: QuantConfig):
+def _tune_scales_kd(teacher, qparams, cfg, calib_batches, qcfg: QuantConfig,
+                    heartbeat=None):
     """Phase 3 (Eq. 11): packed binaries frozen, optimize only {s1,s2}."""
     trainable, frozen = util.partition(qparams, _is_scale_path)
     opt = AdamW(cosine_schedule(qcfg.lr_glob, qcfg.t_glob), clip_norm=1.0)
@@ -487,6 +664,8 @@ def _tune_scales_kd(teacher, qparams, cfg, calib_batches, qcfg: QuantConfig):
         lval, grads = vg(trainable, b)
         trainable, state, _ = opt.update(grads, state, trainable)
         losses.append(float(lval))
+        if heartbeat is not None and (s % 10 == 0 or s == qcfg.t_glob - 1):
+            heartbeat(f"kd step={s + 1}/{qcfg.t_glob} loss={losses[-1]:.5f}")
     return util.combine(trainable, frozen), losses
 
 

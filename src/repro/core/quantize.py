@@ -24,7 +24,8 @@ def quantize_weight(w, d_in, d_out, rank: int, admm: ADMMConfig, key):
     lat_u, lat_v, s1, s2 = magnitude_balance(res["p_u"], res["p_v"],
                                              d_out, d_in)
     return ({"lu": lat_u, "lv": lat_v, "s1": s1, "s2": s2},
-            {"residual_trace": res["residual_trace"]})
+            {"residual_trace": res["residual_trace"],
+             "health": res["health"]})
 
 
 def quantize_leaf(p: dict, d_in, d_out, target_bpw: float, admm: ADMMConfig,

@@ -5,6 +5,15 @@ report sizes + perplexities.
     PYTHONPATH=src python -m repro.launch.quantize --arch llama3.2-1b \
         --bpw 1.0 --teacher-steps 150 --out /tmp/nq
 
+Fault tolerance (docs/quantization.md): ``--journal-dir`` makes the run
+crash-safe (per-block journaling through ``checkpoint.journal``);
+``--resume`` picks up a killed run from its journal and produces a
+bit-identical artifact. ``--supervise`` re-execs this driver under
+``launch/supervisor.py`` with restart-on-crash and hang detection keyed
+to the per-block ``[quant] heartbeat`` lines; restarted children get
+``--resume`` appended automatically. ``--crash-at-block N`` injects one
+deterministic crash (first attempt only) for drilling the loop.
+
 (Smoke-scale by default: this box is CPU-only. On real hardware the same
 driver quantizes the full config from a teacher checkpoint.)
 """
@@ -13,10 +22,13 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 
 from repro import api
 from repro.data import SyntheticCorpus, calib_batches, train_iterator
 from repro.train import TrainConfig, Trainer
+
+HEARTBEAT_RE = r"\[quant\] heartbeat"
 
 
 def main():
@@ -28,6 +40,9 @@ def main():
     ap.add_argument("--bpw", type=float, default=1.0)
     ap.add_argument("--init-method", default="lb_admm",
                     choices=api.list_init_methods())
+    ap.add_argument("--fallback-inits", default="dbf_admm,dual_svid",
+                    help="comma-separated init-method ladder tried when "
+                         "a block diverges ('' disables fallbacks)")
     ap.add_argument("--teacher-steps", type=int, default=150)
     ap.add_argument("--calib-samples", type=int, default=16)
     ap.add_argument("--calib-seq", type=int, default=128)
@@ -39,7 +54,46 @@ def main():
     ap.add_argument("--t-pre", type=int, default=40)
     ap.add_argument("--t-post", type=int, default=60)
     ap.add_argument("--t-glob", type=int, default=60)
+    # fault tolerance (docs/quantization.md)
+    ap.add_argument("--journal-dir", default="",
+                    help="per-block progress journal dir (enables "
+                         "--resume and supervised restarts)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a killed run from --journal-dir "
+                         "(bit-identical artifact)")
+    ap.add_argument("--no-preflight", action="store_true",
+                    help="skip input validation (calib/params/memory)")
+    ap.add_argument("--heartbeat", action="store_true",
+                    help="print '[quant] heartbeat ...' per block (what "
+                         "--supervise hang detection watches)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under launch/supervisor.py: restart on "
+                         "crash, kill+restart on missing heartbeats, "
+                         "children resume from --journal-dir")
+    ap.add_argument("--hang-timeout", type=float, default=600.0,
+                    help="--supervise: seconds without a heartbeat "
+                         "before the child is declared hung")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="--supervise: restart budget")
+    ap.add_argument("--crash-at-block", type=int, default=-1,
+                    help="inject one crash when this block starts, "
+                         "first attempt only (restart drill)")
     args = ap.parse_args()
+
+    if args.supervise:
+        from repro.launch import supervisor
+        if not args.journal_dir:
+            ap.error("--supervise needs --journal-dir so restarted "
+                     "children can resume instead of redoing everything")
+        child = [a for a in sys.argv[1:] if a != "--supervise"]
+        for extra in ("--resume", "--heartbeat"):
+            if extra not in child:
+                child.append(extra)
+        raise SystemExit(supervisor.supervise(
+            [sys.executable, "-m", "repro.launch.quantize"] + child,
+            max_restarts=args.max_restarts,
+            hang_timeout=args.hang_timeout,
+            heartbeat_pattern=HEARTBEAT_RE))
 
     cfg = api.get_config(args.arch) if args.full else api.get_smoke(args.arch)
     tcfg = TrainConfig(lr=1e-3, warmup=20, total_steps=args.teacher_steps)
@@ -63,14 +117,43 @@ def main():
     calib = calib_batches(cfg, args.calib_samples, args.calib_seq,
                           corpus=corpus)
     evalb = calib_batches(cfg, 8, args.calib_seq, seed=99, corpus=corpus)
+
+    # ---- preflight (fail fast, not at block 17) ----------------------------
+    if not args.no_preflight:
+        pf = api.preflight(params, cfg, calib)
+        print(f"[quantize] preflight ok: {pf['n_batches']} batches, "
+              f"{pf['n_calib_tokens']} calib tokens, "
+              f"~{pf['est_block_bytes'] / 2**20:.0f} MiB/block", flush=True)
+
     ppl_fp = api.NanoQuantModel.from_fp(params, cfg).perplexity(evalb)
+
+    # ---- fault injection drill --------------------------------------------
+    faults = None
+    if args.crash_at_block >= 0:
+        # fire only on the first attempt (journal still empty) so a
+        # supervised restart makes progress instead of re-crashing
+        already = (api.QuantJournal(args.journal_dir).n_completed_blocks()
+                   if args.journal_dir else 0)
+        if already == 0:
+            faults = api.QuantFaultPlan(
+                [api.QuantFault(block=args.crash_at_block,
+                                kind="crash_block")])
+
+    heartbeat = None
+    if args.heartbeat:
+        def heartbeat(msg):
+            print(f"[quant] heartbeat {msg}", flush=True)
 
     # ---- NanoQuant ---------------------------------------------------------
     qcfg = api.QuantConfig(target_bpw=args.bpw, rank_align=args.rank_align,
                            init_method=args.init_method,
+                           fallback_inits=args.fallback_inits,
                            admm_iters=args.admm_iters, t_pre=args.t_pre,
                            t_post=args.t_post, t_glob=args.t_glob)
-    model = api.NanoQuantModel.quantize(params, cfg, calib, qcfg)
+    model = api.NanoQuantModel.quantize(
+        params, cfg, calib, qcfg,
+        journal_dir=args.journal_dir or None, resume=args.resume,
+        faults=faults, heartbeat=heartbeat)
     ppl_q = model.perplexity(evalb)
 
     sizes = model.size_report()

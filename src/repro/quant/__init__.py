@@ -4,6 +4,9 @@ groups, and mesh placement of packed params / KV caches — see
 :mod:`repro.quant.surgery` and docs/architecture.md (the concrete
 weight transformation itself lives in ``core.pipeline``).
 """
+from repro.quant.faults import (  # noqa: F401
+    InjectedPipelineCrash, QuantFault, QuantFaultPlan)
+from repro.quant.preflight import PreflightError, preflight  # noqa: F401
 from repro.quant.surgery import (  # noqa: F401
     abstract_quantized_params, merge_projection_groups, packed_model_bytes,
     place_cache_on_mesh, place_on_mesh, quantizable_paths)
@@ -12,4 +15,6 @@ __all__ = [
     "abstract_quantized_params", "merge_projection_groups",
     "packed_model_bytes", "place_on_mesh", "place_cache_on_mesh",
     "quantizable_paths",
+    "preflight", "PreflightError",
+    "QuantFault", "QuantFaultPlan", "InjectedPipelineCrash",
 ]

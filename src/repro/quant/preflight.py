@@ -1,0 +1,149 @@
+"""Pre-quantization validation (docs/quantization.md §Preflight).
+
+A multi-hour quantization run should fail in the first second with a
+message naming the bad input, not at block 17 with a NaN loss or an OOM
+kill. ``preflight(params, cfg, calib_batches)`` checks, in order:
+
+1. calibration batches — present, 2-D integer ``tokens`` with one
+   consistent sequence length, every id inside ``[0, vocab_size)``,
+   ``labels`` (when present) shaped like tokens, ``image_embeds``
+   (vlm) finite;
+2. teacher params — every float leaf finite, failures name the leaf
+   path (a NaN teacher poisons every block downstream);
+3. a per-block working-set estimate (activation streams + the largest
+   block's params + ADMM factor state) against available host memory,
+   so an over-sized calibration set fails fast with the knob to turn
+   (``--calib-samples`` / ``--calib-seq``) instead of an OOM kill
+   mid-run.
+
+All failures raise :class:`PreflightError`.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PreflightError(ValueError):
+    """A quantization input failed validation before any work ran."""
+
+
+def _leaf_name(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _check_calib(cfg, calib_batches) -> int:
+    if not calib_batches:
+        raise PreflightError("no calibration batches given — the pipeline "
+                             "needs at least one {'tokens', ...} batch")
+    seqs = set()
+    n_tokens = 0
+    for i, b in enumerate(calib_batches):
+        if "tokens" not in b:
+            raise PreflightError(f"calibration batch {i} has no 'tokens'")
+        toks = np.asarray(b["tokens"])
+        if toks.ndim != 2:
+            raise PreflightError(
+                f"calibration batch {i}: tokens must be 2-D (batch, seq), "
+                f"got shape {toks.shape}")
+        if not np.issubdtype(toks.dtype, np.integer):
+            raise PreflightError(
+                f"calibration batch {i}: tokens dtype {toks.dtype} is not "
+                f"an integer type")
+        if toks.size and (toks.min() < 0 or toks.max() >= cfg.vocab_size):
+            raise PreflightError(
+                f"calibration batch {i}: token ids span "
+                f"[{toks.min()}, {toks.max()}] but vocab_size is "
+                f"{cfg.vocab_size}")
+        seqs.add(toks.shape[1])
+        n_tokens += toks.size
+        if "labels" in b:
+            lab = np.asarray(b["labels"])
+            if lab.shape != toks.shape:
+                raise PreflightError(
+                    f"calibration batch {i}: labels shape {lab.shape} != "
+                    f"tokens shape {toks.shape}")
+        if cfg.family == "vlm":
+            if "image_embeds" not in b:
+                raise PreflightError(
+                    f"calibration batch {i}: vlm family needs "
+                    f"'image_embeds' in every batch")
+            emb = np.asarray(b["image_embeds"])
+            if not np.isfinite(emb).all():
+                raise PreflightError(
+                    f"calibration batch {i}: image_embeds contain "
+                    f"non-finite values")
+    if len(seqs) != 1:
+        raise PreflightError(
+            f"calibration batches mix sequence lengths {sorted(seqs)} — "
+            f"the activation streams need one consistent length")
+    return n_tokens
+
+
+def _check_params(params) -> None:
+    bad: List[str] = []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        arr = jnp.asarray(leaf)
+        if not jnp.issubdtype(arr.dtype, jnp.floating):
+            continue
+        if not bool(jnp.isfinite(arr.astype(jnp.float32)).all()):
+            bad.append(_leaf_name(path))
+            if len(bad) >= 5:
+                break
+    if bad:
+        raise PreflightError(
+            "teacher params contain non-finite values in: "
+            + ", ".join(bad)
+            + " — a NaN teacher poisons every quantized block; re-export "
+              "or re-train the checkpoint before quantizing")
+
+
+def _available_bytes() -> int:
+    try:
+        with open("/proc/meminfo") as f:
+            for line in f:
+                if line.startswith("MemAvailable:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    try:
+        return (os.sysconf("SC_AVPHYS_PAGES")
+                * os.sysconf("SC_PAGE_SIZE"))
+    except (ValueError, OSError):
+        return 0
+
+
+def estimate_block_bytes(cfg, calib_batches) -> int:
+    """Rough per-block working set: the three activation streams
+    (X_q, X_fp, Y) in f32, the largest block's params twice (FP + the
+    tuned copy), and ADMM factor state (~3x the largest linear)."""
+    n_rows = sum(np.asarray(b["tokens"]).shape[0] for b in calib_batches)
+    seq = np.asarray(calib_batches[0]["tokens"]).shape[1]
+    acts = 3 * n_rows * seq * cfg.d_model * 4
+    # largest linear in any block: d_model x max(d_ff, d_model-ish)
+    widest = max(getattr(cfg, "d_ff", cfg.d_model), cfg.d_model)
+    block_params = 4 * cfg.d_model * widest * 4        # a few big linears
+    admm_state = 3 * cfg.d_model * widest * 4
+    return acts + 2 * block_params + admm_state
+
+
+def preflight(params, cfg, calib_batches) -> Dict[str, Any]:
+    """Validate quantization inputs; raises :class:`PreflightError` on
+    the first failure, returns a small summary dict on success."""
+    n_tokens = _check_calib(cfg, calib_batches)
+    _check_params(params)
+    need = estimate_block_bytes(cfg, calib_batches)
+    avail = _available_bytes()
+    if avail and need > avail:
+        raise PreflightError(
+            f"estimated per-block working set "
+            f"{need / 2**20:.0f} MiB exceeds available memory "
+            f"{avail / 2**20:.0f} MiB — shrink the calibration set "
+            f"(--calib-samples / --calib-seq) or free host memory")
+    return {"n_batches": len(calib_batches), "n_calib_tokens": n_tokens,
+            "est_block_bytes": need, "available_bytes": avail}

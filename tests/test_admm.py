@@ -97,3 +97,48 @@ def test_consensus_engages():
                       / jnp.linalg.norm(w))
     cont_err = float(tr[-1])
     assert proxy_err < cont_err + 0.25, (proxy_err, cont_err)
+
+
+# ---------------------------------------------------------------------------
+# health monitoring (docs/quantization.md §ADMM guards)
+# ---------------------------------------------------------------------------
+
+
+def test_health_clean_on_wellposed_problem():
+    """Healthy solve: no resets, rho untouched, not diverged — and the
+    guards must not perturb the numerics of the accepted path."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (48, 64))
+    res = lb_admm(w, ADMMConfig(rank=8, iters=30))
+    h = res["health"]
+    assert int(h["resets"]) == 0
+    assert float(h["rho_scale"]) == 1.0
+    assert not bool(h["diverged"])
+    assert not bool(h["nonfinite"])
+    assert np.isfinite(np.asarray(res["residual_trace"])).all()
+
+
+def test_health_flags_nonfinite_input():
+    """A poisoned W (NaN) must be detected — every step rejected, rho
+    escalation bounded, diverged flagged — instead of NaN factors
+    silently flowing into packing."""
+    w = jnp.full((32, 32), jnp.nan)
+    cfg = ADMMConfig(rank=4, iters=12, rho_scale_max=16.0)
+    res = lb_admm(w, cfg)
+    h = res["health"]
+    assert bool(h["diverged"])
+    assert bool(h["nonfinite"])
+    assert int(h["resets"]) >= 1
+    # bounded escalation: the adapted rho never exceeds the configured cap
+    assert float(h["rho_scale"]) <= cfg.rho_scale_max
+
+
+def test_quantization_error_is_structured():
+    from repro.core.admm import QuantizationError
+    e = QuantizationError(layer="attn.wq", block="layers[3]",
+                          iteration=17, reason="objective diverged")
+    assert e.layer == "attn.wq"
+    assert e.block == "layers[3]"
+    assert e.iteration == 17
+    assert e.reason == "objective diverged"
+    msg = str(e)
+    assert "layers[3]" in msg and "attn.wq" in msg and "17" in msg

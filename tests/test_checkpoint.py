@@ -187,3 +187,25 @@ def test_model_load_reports_corrupt_artifact(tmp_path):
     np.savez(shard, **arrays)
     with pytest.raises(ValueError, match="corrupt/truncated artifact"):
         NanoQuantModel.load(d)
+
+
+def test_keyed_save_restores_without_template(tmp_path):
+    """save(keyed=True) records leaf key paths so restore_keyed
+    rebuilds the nested dict exactly — no template needed (what the
+    quantization journal's block store relies on)."""
+    mgr = CheckpointManager(str(tmp_path))
+    s = _state()
+    mgr.save(5, s, keyed=True)
+    restored = mgr.restore_keyed(5)
+    assert jax.tree.structure(restored) == jax.tree.structure(s)
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert "keypaths" in mgr.meta(5)
+
+
+def test_restore_keyed_refuses_unkeyed_checkpoint(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _state())
+    with pytest.raises(ValueError, match="not saved keyed"):
+        mgr.restore_keyed(1)

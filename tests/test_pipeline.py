@@ -164,3 +164,192 @@ def test_abstract_surgery_matches_pipeline_structure(tiny_dense_cfg_mod):
             jax.tree_util.tree_leaves_with_path(qp)):
         assert tuple(a.shape) == tuple(b.shape), (kp, a.shape, b.shape)
         assert a.dtype == b.dtype, (kp, a.dtype, b.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: journaling, resume, fallback ladder (docs/quantization.md)
+# ---------------------------------------------------------------------------
+
+_RESUME_FAST = dict(admm_iters=4, t_pre=2, t_post=2, t_glob=2,
+                    rank_align=32, min_dim=32)
+
+
+@pytest.fixture(scope="module")
+def journaled_tiny(tiny_dense_cfg_mod, tmp_path_factory):
+    """One journaled baseline run every resume edge case compares to."""
+    from repro.checkpoint.journal import _crc_leaves
+    cfg, params, calib = tiny_dense_cfg_mod
+    qcfg = QuantConfig(target_bpw=1.0, **_RESUME_FAST)
+    d = str(tmp_path_factory.mktemp("journal_base"))
+    qp, report = nanoquant_quantize(params, cfg, calib, qcfg,
+                                    verbose=False, journal_dir=d)
+    return cfg, params, calib, qcfg, d, _crc_leaves(qp), report
+
+
+def _journal_copy(src, tmp_path):
+    import shutil
+    dst = str(tmp_path / "journal")
+    shutil.copytree(src, dst)
+    return dst
+
+
+@pytest.mark.chaos_quant
+def test_crash_between_save_and_journal_resumes_bit_identical(
+        journaled_tiny, tmp_path):
+    """A crash in the orphan-checkpoint window (block saved, journal
+    entry not yet appended) must resume to a bit-identical artifact."""
+    from repro.checkpoint.journal import _crc_leaves
+    from repro.quant.faults import (InjectedPipelineCrash, QuantFault,
+                                    QuantFaultPlan)
+    cfg, params, calib, qcfg, _, crc0, rep0 = journaled_tiny
+    d = str(tmp_path / "j")
+    plan = QuantFaultPlan([QuantFault(block=1, kind="crash_after_save")])
+    with pytest.raises(InjectedPipelineCrash):
+        nanoquant_quantize(params, cfg, calib, qcfg, verbose=False,
+                           journal_dir=d, faults=plan)
+    qp, rep = nanoquant_quantize(params, cfg, calib, qcfg, verbose=False,
+                                 journal_dir=d, resume=True)
+    assert _crc_leaves(qp) == crc0
+    strip = lambda r: {k: v for k, v in r.items() if k != "wall_s"}
+    assert strip(rep) == strip(rep0)
+
+
+def test_resume_refuses_different_run(journaled_tiny):
+    """A journal must never be resumed against a different model /
+    quant config / calibration set."""
+    from repro.checkpoint.journal import (JournalError, QuantJournal,
+                                          run_fingerprint)
+    cfg, params, calib, qcfg, d, _, _ = journaled_tiny
+    other = dataclasses.replace(qcfg, target_bpw=0.8)
+    fp = run_fingerprint(params, cfg, other, calib, 2)
+    with pytest.raises(JournalError, match="quant_config"):
+        QuantJournal(d).entries_for_resume(fp)
+    fp2 = run_fingerprint(params, cfg, qcfg, calib[:1], 2)
+    with pytest.raises(JournalError, match="calib_crc"):
+        QuantJournal(d).entries_for_resume(fp2)
+
+
+@pytest.mark.chaos_quant
+def test_corrupt_journal_entry_names_block(journaled_tiny, tmp_path):
+    from repro.checkpoint.journal import (JournalError, QuantJournal,
+                                          run_fingerprint)
+    from repro.quant.faults import _corrupt_last_line
+    cfg, params, calib, qcfg, d0, _, _ = journaled_tiny
+    d = _journal_copy(d0, tmp_path)
+    j = QuantJournal(d)
+    _corrupt_last_line(j.path)          # last line = block 1's entry
+    fp = run_fingerprint(params, cfg, qcfg, calib, 2)
+    with pytest.raises(JournalError, match=r"layers\[1\]") as ei:
+        j.entries_for_resume(fp)
+    assert ei.value.block == "layers[1]"
+
+
+def test_missing_block_checkpoint_names_block(journaled_tiny, tmp_path):
+    import shutil
+    from repro.checkpoint.journal import (JournalError, QuantJournal,
+                                          run_fingerprint)
+    cfg, params, calib, qcfg, d0, _, _ = journaled_tiny
+    d = _journal_copy(d0, tmp_path)
+    shutil.rmtree(f"{d}/blocks/step_00000000")
+    fp = run_fingerprint(params, cfg, qcfg, calib, 2)
+    with pytest.raises(JournalError, match=r"layers\[0\]") as ei:
+        QuantJournal(d).entries_for_resume(fp)
+    assert ei.value.block == "layers[0]"
+
+
+def test_torn_final_append_tolerated(journaled_tiny, tmp_path):
+    """A truncated trailing line (crash mid-append) is dropped and the
+    file truncated back to the valid prefix — not an error."""
+    from repro.checkpoint.journal import QuantJournal, run_fingerprint
+    cfg, params, calib, qcfg, d0, _, _ = journaled_tiny
+    d = _journal_copy(d0, tmp_path)
+    j = QuantJournal(d)
+    with open(j.path, "ab") as f:
+        f.write(b'{"payload": {"kind": "block", "bi"')   # torn append
+    fp = run_fingerprint(params, cfg, qcfg, calib, 2)
+    done = j.entries_for_resume(fp)
+    assert sorted(done) == [0, 1]
+    with open(j.path, "rb") as f:
+        assert f.read().endswith(b"}\n")                 # truncated back
+
+
+@pytest.mark.chaos_quant
+def test_nan_init_walks_fallback_ladder(tiny_dense_cfg_mod):
+    """Injected NaN latents at block 0 must fall back down the init
+    ladder and record the switch in the report row."""
+    from repro.quant.faults import QuantFault, QuantFaultPlan
+    cfg, params, calib = tiny_dense_cfg_mod
+    qcfg = QuantConfig(target_bpw=1.0, **_RESUME_FAST)
+    plan = QuantFaultPlan([QuantFault(block=0, kind="nan_init",
+                                      linear=1, iteration=5)])
+    qp, report = nanoquant_quantize(params, cfg, calib, qcfg,
+                                    verbose=False, faults=plan)
+    row = report["blocks"][0]
+    assert row["init_method"] == "dbf_admm"
+    assert row["fallbacks"][0]["method"] == "lb_admm"
+    assert row["fallbacks"][0]["iteration"] == 5
+    assert report["blocks"][1]["fallbacks"] == []
+    logits = T.forward(qp, cfg, calib[0]["tokens"])
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.chaos_quant
+def test_fallback_ladder_exhaustion_is_structured(tiny_dense_cfg_mod):
+    """With fallbacks disabled, a poisoned block raises a structured
+    QuantizationError naming block/layer/reason — never NaN packing."""
+    from repro.core.admm import QuantizationError
+    from repro.quant.faults import QuantFault, QuantFaultPlan
+    cfg, params, calib = tiny_dense_cfg_mod
+    qcfg = QuantConfig(target_bpw=1.0, fallback_inits="", **_RESUME_FAST)
+    plan = QuantFaultPlan([QuantFault(block=0, kind="nan_init",
+                                      linear=0, iteration=2)])
+    with pytest.raises(QuantizationError) as ei:
+        nanoquant_quantize(params, cfg, calib, qcfg, verbose=False,
+                           faults=plan)
+    e = ei.value
+    assert e.block == "layers[0]"
+    assert "exhausted" in e.reason
+    assert e.iteration == 2
+
+
+def test_resume_without_journal_dir_rejected(tiny_dense_cfg_mod):
+    cfg, params, calib = tiny_dense_cfg_mod
+    qcfg = QuantConfig(target_bpw=1.0, **_RESUME_FAST)
+    with pytest.raises(ValueError, match="journal_dir"):
+        nanoquant_quantize(params, cfg, calib, qcfg, verbose=False,
+                           resume=True)
+
+
+# ---------------------------------------------------------------------------
+# preflight validation (quant.preflight)
+# ---------------------------------------------------------------------------
+
+
+def test_preflight_accepts_good_inputs(tiny_dense_cfg_mod):
+    from repro.quant.preflight import preflight
+    cfg, params, calib = tiny_dense_cfg_mod
+    info = preflight(params, cfg, calib)
+    assert info["n_batches"] == len(calib)
+    assert info["est_block_bytes"] > 0
+
+
+def test_preflight_rejects_bad_inputs(tiny_dense_cfg_mod):
+    from repro.quant.preflight import PreflightError, preflight
+    cfg, params, calib = tiny_dense_cfg_mod
+    with pytest.raises(PreflightError, match="no calibration"):
+        preflight(params, cfg, [])
+    bad = [dict(calib[0],
+                tokens=np.asarray(calib[0]["tokens"]) + cfg.vocab_size)]
+    with pytest.raises(PreflightError, match="vocab_size"):
+        preflight(params, cfg, bad)
+    mixed = [calib[0],
+             {k: np.asarray(v)[:, :16] for k, v in calib[0].items()}]
+    with pytest.raises(PreflightError, match="sequence lengths"):
+        preflight(params, cfg, mixed)
+    nan_params = dict(params)
+    nan_params["embed"] = jax.tree.map(
+        lambda a: (jnp.full_like(a, jnp.nan)
+                   if jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating)
+                   else a), params["embed"])
+    with pytest.raises(PreflightError, match="non-finite"):
+        preflight(nan_params, cfg, calib)
